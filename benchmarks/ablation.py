@@ -1,0 +1,47 @@
+"""Paper Fig. 18: incremental ablation of Cascade's three optimizations on
+Mixtral — (none = static k_start) -> +dynamic disable -> +adaptive back-off
+-> +hill-climbing. The paper reports each increment is additive."""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.manager import CascadeConfig
+from repro.data.workloads import MIXES
+from repro.sim.simulator import run_point
+
+from .common import PAPER_TASKS, emit, save_json
+
+VARIANTS = [
+    ("static_k3", dict(enable_disable=False, enable_backoff=False,
+                       enable_hillclimb=False)),
+    ("+disable", dict(enable_disable=True, enable_backoff=False,
+                      enable_hillclimb=False)),
+    ("+backoff", dict(enable_disable=True, enable_backoff=True,
+                      enable_hillclimb=False)),
+    ("+hillclimb", dict(enable_disable=True, enable_backoff=True,
+                        enable_hillclimb=True)),
+]
+
+
+def main(fast: bool = False):
+    cfg = get_config("mixtral-8x7b")
+    tasks = PAPER_TASKS[:3] if fast else PAPER_TASKS
+    n_req, iters = (4, 120) if fast else (8, 300)
+    rows = []
+    for task in tasks:
+        mix = list(MIXES[task])
+        rec = {"task": task}
+        for name, flags in VARIANTS:
+            cc = CascadeConfig(**flags)
+            r = run_point(cfg, mix, None, n_requests=n_req, iters=iters,
+                          seed=17, cascade_cfg=cc)
+            rec[name] = r["speedup"]
+        rows.append(rec)
+        emit(f"ablation/mixtral/{task}", 0.0,
+             ";".join(f"{n}={rec[n]:.3f}" for n, _ in VARIANTS))
+    save_json("ablation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

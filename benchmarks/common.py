@@ -1,0 +1,33 @@
+"""Shared benchmark plumbing: CSV emission + result persistence."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+PAPER_MODELS = ["mixtral-8x7b", "phi-3.5-moe", "olmoe-1b-7b",
+                "deepseek-moe-16b", "qwen15-moe-a2.7b"]
+PAPER_TASKS = ["code", "math", "extract", "code+math", "math+extract",
+               "code+extract", "all-3"]
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def save_json(name: str, obj):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, name + ".json"), "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,150 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms from
+the dry-run's compiled artifacts, per (arch x shape) on the single-pod mesh.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / ICI_link_bw
+
+plus MODEL_FLOPS = 6·N·D (6·N_active·D for MoE), the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs, the dominant term, and a what-would-move-it note.
+For MoE *decode* shapes the XLA program necessarily touches every local
+expert's weights (static shapes), so we additionally report the
+effective memory term from the active-expert cost model — the paper's own
+§2.4 analysis — as `memory_eff`.
+
+Usage: python -m benchmarks.roofline [--dir experiments/dryrun]
+       [--variant experiments/dryrun_opt]   (prints before/after deltas)
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.core import cost_model as cm
+from repro.models.config import INPUT_SHAPES
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+SPEC_K = 3
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N(_active)·D global."""
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d  # forward only
+    d = shape.global_batch * (SPEC_K + 1)
+    return 2.0 * n * d
+
+
+def analyze(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = rec["devices"]
+
+    # trip-aware numbers (hlo_analysis.py): XLA's cost_analysis counts scan
+    # (while) bodies once; these multiply by known_trip_count.
+    ta = rec.get("trip_aware")
+    if ta:
+        flops = ta["flops_per_device"]
+        bytes_ = ta["bytes_per_device"]
+        coll_b = ta["collective_bytes_per_device"]
+    else:  # legacy artifact
+        flops = rec["flops_per_device"]
+        bytes_ = rec["bytes_accessed_per_device"]
+        coll_b = rec["collectives"]["total_bytes"]
+
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_ / HBM_BW
+    t_coll = coll_b / ICI_BW
+
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops * chips, 1.0)
+
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "model_flops": mf, "useful_ratio": useful,
+        "temp_bytes_per_device": rec["memory"]["temp_bytes"],
+        "arg_bytes_per_device": rec["memory"]["argument_bytes"],
+    }
+
+    # effective (active-experts) memory term for MoE decode
+    if cfg.is_moe and shape.kind == "decode":
+        b = cm.iteration_bytes(cfg, shape.global_batch * (SPEC_K + 1),
+                               shape.seq_len, affinity=0.3,
+                               window=rec.get("window", 0))
+        out["memory_eff_s"] = b["total"] / (chips * HBM_BW)
+
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    out["dominant"] = dom
+    out["bound_s"] = terms[dom]
+    out["note"] = {
+        "compute": "reduce recompute (remat policy) / pick a lower-FLOP "
+                   "dispatch; MoE capacity factor directly scales this term",
+        "memory": "shard or shrink the dominant resident tensor (KV ring, "
+                  "dispatch buffers); for MoE decode the active-expert "
+                  "kernel path realizes memory_eff_s",
+        "collective": "re-shard to turn all-gathers into reduce-scatters / "
+                      "move the expert all-to-all onto the data axis",
+    }[dom]
+    return out
+
+
+def main(fast: bool = False, dir_: str = "experiments/dryrun",
+         variant: str = None):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*_16x16.json"))):
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            print(f"roofline/{rec.get('arch')}/{rec.get('shape')},0,"
+                  f"FAILED={rec.get('error', '')[:60]}")
+            continue
+        a = analyze(rec)
+        rows.append(a)
+        eff = (f";mem_eff={a['memory_eff_s']*1e6:.0f}us"
+               if "memory_eff_s" in a else "")
+        print(f"roofline/{a['arch']}/{a['shape']},{a['bound_s']*1e6:.1f},"
+              f"dom={a['dominant']};comp={a['compute_s']*1e6:.0f}us;"
+              f"mem={a['memory_s']*1e6:.0f}us;"
+              f"coll={a['collective_s']*1e6:.0f}us;"
+              f"useful={a['useful_ratio']:.2f}{eff}")
+
+    if variant:
+        base = {(r["arch"], r["shape"]): r for r in rows}
+        for path in sorted(glob.glob(os.path.join(variant, "*_16x16.json"))):
+            rec = json.load(open(path))
+            if not rec.get("ok"):
+                continue
+            a = analyze(rec)
+            b = base.get((a["arch"], a["shape"]))
+            if b:
+                print(f"roofline_delta/{a['arch']}/{a['shape']},"
+                      f"{a['bound_s']*1e6:.1f},"
+                      f"dom_before={b['bound_s']*1e6:.0f}us;"
+                      f"dom_after={a['bound_s']*1e6:.0f}us;"
+                      f"x{b['bound_s']/max(a['bound_s'],1e-12):.2f}")
+
+    os.makedirs("experiments/bench", exist_ok=True)
+    with open("experiments/bench/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+    main(dir_=args.dir, variant=args.variant)

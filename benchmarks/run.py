@@ -1,0 +1,58 @@
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows and persists JSON to
+experiments/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Default is the fast profile (CPU-friendly); --full uses the paper-scale
+request counts. The roofline module reads experiments/dryrun/ (run
+repro.launch.dryrun first for deliverables e/g)."""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+MODULES = [
+    "serving_micro",   # real-engine primitives (wall clock)
+    "static_k",        # Fig. 4/5
+    "utility_fit",     # Fig. 8 / Thm 4.2
+    "cascade_main",    # Fig. 13 (headline)
+    "ablation",        # Fig. 18
+    "sensitivity",     # 7.5
+    "eagle_study",     # Fig. 17
+    "traces",          # Figs. 6/7/15/16
+    "lookahead_study", # paper 8.1 quantified (beyond-paper)
+    "roofline",        # deliverable g (needs dry-run artifacts)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    mods = [args.only] if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = []
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            if name == "roofline" and not os.path.isdir("experiments/dryrun"):
+                print(f"{name},0,SKIPPED=no-dryrun-artifacts")
+                continue
+            mod.main(fast=not args.full)
+            print(f"{name}/_elapsed,{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:  # pragma: no cover
+            failures.append(name)
+            print(f"{name},0,ERROR={type(e).__name__}:{e}")
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper §7.5: hyperparameter sensitivity of the test-and-set policy —
+trial length t in {2,4,8} (T=4t) and set length S in {8,16,32} on the
+Mixtral task suite."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.manager import CascadeConfig
+from repro.data.workloads import MIXES
+from repro.sim.simulator import run_point
+
+from .common import PAPER_TASKS, emit, save_json
+
+
+def main(fast: bool = False):
+    cfg = get_config("mixtral-8x7b")
+    tasks = PAPER_TASKS[:3] if fast else PAPER_TASKS
+    n_req, iters = (3, 120) if fast else (6, 300)
+    rows = []
+    for t, s in [(2, 8), (4, 16), (8, 32)]:
+        cc = CascadeConfig(trial_len=t, set_len=s)
+        sp = []
+        for task in tasks:
+            r = run_point(cfg, list(MIXES[task]), None, n_requests=n_req,
+                          iters=iters, seed=19, cascade_cfg=cc)
+            sp.append(r["speedup"])
+        mean = float(np.mean(sp))
+        rows.append({"t": t, "S": s, "mean_speedup": mean,
+                     "per_task": dict(zip(tasks, sp))})
+        emit(f"sensitivity/t{t}_S{s}", 0.0, f"mean_speedup={mean:.3f}")
+    save_json("sensitivity", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

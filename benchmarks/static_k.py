@@ -1,0 +1,42 @@
+"""Paper Fig. 4 / Fig. 5: static-K n-gram speculation across the 5 MoEs and
+7 workloads — shows per-(model,task) TPOT speedups/slowdowns and ETR."""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.data.workloads import MIXES
+from repro.sim.simulator import run_point
+
+from .common import PAPER_MODELS, PAPER_TASKS, Timer, emit, save_json
+
+
+def main(fast: bool = False):
+    models = PAPER_MODELS[:2] if fast else PAPER_MODELS
+    tasks = PAPER_TASKS[:3] if fast else PAPER_TASKS
+    n_req, iters = (4, 120) if fast else (8, 256)
+    rows = []
+    for model in models:
+        cfg = get_config(model)
+        for task in tasks:
+            mix = list(MIXES[task])
+            for k in (1, 2, 3):
+                with Timer() as t:
+                    r = run_point(cfg, mix, k, n_requests=n_req, iters=iters,
+                                  seed=7)
+                rows.append({"model": model, "task": task, "k": k,
+                             "speedup": r["speedup"], "etr": r["etr"],
+                             "tpot_s": r["tpot"]})
+                emit(f"static_k/{model}/{task}/K{k}",
+                     r["tpot"] * 1e6,
+                     f"speedup={r['speedup']:.3f};etr={r['etr']:.2f}")
+    worst = min(rows, key=lambda r: r["speedup"])
+    best = max(rows, key=lambda r: r["speedup"])
+    save_json("static_k", {"rows": rows, "worst": worst, "best": best})
+    emit("static_k/worst", worst["tpot_s"] * 1e6,
+         f"{worst['model']}/{worst['task']}/K{worst['k']}="
+         f"{worst['speedup']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

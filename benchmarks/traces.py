@@ -1,0 +1,63 @@
+"""Paper Figs. 6/7/15/16: iteration-level utility traces.
+
+Dumps per-iteration (utility, K, phase) series for selected
+(model, task, policy) combinations — the data behind the paper's trace
+figures — and reports the trace-level worst-case slowdown windows that
+motivate §7.1's SLO discussion."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.controller import CascadeController, StaticKController
+from repro.sim.simulator import SpeculationSimulator
+
+from .common import emit, save_json
+
+
+def _trace(sim, task, controller, iters):
+    req = sim.run_request(task, iters, controller)
+    return [{"k": i.k, "tokens": i.tokens, "t_iter": i.t_iter,
+             "utility": i.utility, "phase": i.phase}
+            for i in req.iterations]
+
+
+def main(fast: bool = False):
+    iters = 120 if fast else 400
+    out = {}
+
+    # Fig. 15: mixtral+math, static K=3 vs Cascade
+    cfg = get_config("mixtral-8x7b")
+    sim = SpeculationSimulator(cfg, seed=31)
+    out["mixtral_math_static3"] = _trace(sim, "math", StaticKController(3),
+                                         iters)
+    sim = SpeculationSimulator(cfg, seed=31)
+    out["mixtral_math_cascade"] = _trace(sim, "math", CascadeController(),
+                                         iters)
+
+    # Fig. 7-style: phi + extraction (phases of high/low utility)
+    cfg_p = get_config("phi-3.5-moe")
+    sim = SpeculationSimulator(cfg_p, seed=37)
+    out["phi_extract_static3"] = _trace(sim, "extract", StaticKController(3),
+                                        iters)
+
+    # Fig. 16: all-3 mix on mixtral with Cascade
+    sim = SpeculationSimulator(cfg, seed=41)
+    reqs = sim.run_workload(["code", "math", "extract"], n_requests=3,
+                            iters_per_request=iters,
+                            controller_factory=lambda: CascadeController())
+    out["mixtral_all3_cascade"] = [
+        {"task": r.task,
+         "utility": [i.utility for i in r.iterations[-8:]]} for r in reqs]
+
+    for name in ("mixtral_math_static3", "mixtral_math_cascade"):
+        u = np.array([row["utility"] for row in out[name][8:]])
+        emit(f"traces/{name}", 0.0,
+             f"min_u={u.min():.3f};mean_u={u.mean():.3f}")
+    save_json("traces", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Pytree checkpointing via msgpack (no orbax in this environment).
+
+Arrays are stored as (dtype, shape, raw bytes); bfloat16 round-trips through
+uint16 views. Restores onto host then device_put — adequate for the example
+runs; a production deployment would swap in tensorstore-backed async
+checkpointing behind the same two functions."""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _encode_leaf(x):
+    x = np.asarray(x)
+    if x.dtype == jnp.bfloat16:
+        return {"__arr__": True, "dtype": _BF16, "shape": list(x.shape),
+                "data": x.view(np.uint16).tobytes()}
+    return {"__arr__": True, "dtype": str(x.dtype), "shape": list(x.shape),
+            "data": x.tobytes()}
+
+
+def _decode_leaf(d):
+    if d["dtype"] == _BF16:
+        arr = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    arr = np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
+    return jnp.asarray(arr)
+
+
+def _to_serializable(tree):
+    if isinstance(tree, dict):
+        return {k: _to_serializable(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {"__seq__": type(tree).__name__,
+                "items": [_to_serializable(v) for v in tree]}
+    if hasattr(tree, "shape"):
+        return _encode_leaf(tree)
+    return {"__py__": True, "value": tree}
+
+
+def _from_serializable(obj):
+    if isinstance(obj, dict):
+        if obj.get("__arr__"):
+            return _decode_leaf(obj)
+        if obj.get("__py__"):
+            return obj["value"]
+        if "__seq__" in obj:
+            items = [_from_serializable(v) for v in obj["items"]]
+            return tuple(items) if obj["__seq__"] == "tuple" else items
+        return {k: _from_serializable(v) for k, v in obj.items()}
+    return obj
+
+
+def save(path: str, tree: Any) -> None:
+    tree = jax.device_get(tree)
+    payload = msgpack.packb(_to_serializable(tree), use_bin_type=True)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)  # atomic
+
+
+def restore(path: str) -> Any:
+    with open(path, "rb") as f:
+        obj = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    return _from_serializable(obj)

@@ -1,0 +1,21 @@
+"""Qwen2-VL-7B language backbone: M-RoPE (t/h/w sections), dynamic
+resolution. The ViT vision tower is a STUB per the assignment: input_specs
+provides precomputed patch embeddings + 3-D position ids.
+[arXiv:2409.12191]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    rope_variant="mrope",
+    mrope_sections=(16, 24, 24),
+    vision_stub=True,
+    source="arXiv:2409.12191",
+)

@@ -1,0 +1,23 @@
+"""Whisper large-v3 — encoder-decoder audio model. The mel-spectrogram +
+conv frontend/encoder is a STUB per the assignment: input_specs provides
+precomputed 1500-frame encoder embeddings; this config is the decoder
+backbone. [arXiv:2212.04356]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    is_encoder_decoder=True,
+    encoder_len=1500,
+    rope_variant="none",   # sinusoid positions (learned in the original)
+    norm="layernorm",
+    activation="gelu",
+    source="arXiv:2212.04356",
+)

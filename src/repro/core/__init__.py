@@ -1,0 +1,20 @@
+"""Cascade — the paper's contribution: utility-driven speculative decoding
+management for MoE serving."""
+
+from .controller import (CascadeController, StaticKController,
+                         cascade_for_model)
+from .cost_model import (Hardware, TPU_V5E, RTX_6000_ADA,
+                         expected_unique_experts, iteration_bytes,
+                         iteration_flops, iteration_time, draft_time,
+                         sample_time, kv_bytes_per_token)
+from .manager import BASELINE, TEST, SET, CascadeConfig, SpeculationManager
+from .utility import IterationRecord, UtilityAnalyzer
+
+__all__ = [
+    "CascadeController", "StaticKController", "CascadeConfig",
+    "SpeculationManager", "UtilityAnalyzer", "IterationRecord",
+    "Hardware", "TPU_V5E", "RTX_6000_ADA", "expected_unique_experts",
+    "iteration_bytes", "iteration_flops", "iteration_time", "draft_time",
+    "sample_time", "kv_bytes_per_token", "BASELINE", "TEST", "SET",
+    "cascade_for_model",
+]

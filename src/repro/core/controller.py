@@ -1,0 +1,84 @@
+"""CascadeController: the per-request composition of utility analyzer and
+speculation manager — the object the serving engine talks to.
+
+    ctl = CascadeController(CascadeConfig())
+    k = ctl.next_k()                 # draft k tokens (0 = no speculation)
+    ... run draft + verify ...
+    ctl.observe(tokens_emitted, t_iter, t_draft, t_verify, t_sample)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .manager import CascadeConfig, SpeculationManager
+from .utility import IterationRecord, UtilityAnalyzer
+
+
+def cascade_for_model(cfg_model, hw=None, **overrides) -> "CascadeController":
+    """Build a controller whose first trial K comes from the analytic
+    cost-model prior for this architecture (beyond-paper §Perf item)."""
+    from . import cost_model as _cm
+    hw = hw or _cm.TPU_V5E
+    k0 = _cm.suggest_k_start(cfg_model, hw)
+    return CascadeController(CascadeConfig(k_start=k0, **overrides))
+
+
+@dataclass
+class CascadeController:
+    config: CascadeConfig = field(default_factory=CascadeConfig)
+    manager: Optional[SpeculationManager] = None
+    _last_k: int = 0
+
+    def __post_init__(self):
+        if self.manager is None:
+            self.manager = SpeculationManager(cfg=self.config)
+
+    # ------------------------------------------------------------------ #
+
+    @property
+    def analyzer(self) -> UtilityAnalyzer:
+        return self.manager.analyzer
+
+    @property
+    def phase(self) -> str:
+        return self.manager.phase
+
+    def next_k(self) -> int:
+        self._last_k = self.manager.next_k()
+        return self._last_k
+
+    def observe(self, tokens: int, t_iter: float, *, t_draft: float = 0.0,
+                t_verify: float = 0.0, t_sample: float = 0.0,
+                k: Optional[int] = None) -> None:
+        rec = IterationRecord(k=self._last_k if k is None else k,
+                              tokens=tokens, t_iter=t_iter, t_draft=t_draft,
+                              t_verify=t_verify, t_sample=t_sample)
+        self.manager.observe(rec)
+
+    def utility(self, n: Optional[int] = None) -> float:
+        return self.analyzer.utility(n)
+
+
+class StaticKController:
+    """Baseline controller: fixed speculation length (the paper's static-K
+    comparison points, with K=0 being the no-speculation baseline)."""
+
+    def __init__(self, k: int):
+        self.k = k
+        self.analyzer = UtilityAnalyzer()
+        self.phase = "static"
+
+    def next_k(self) -> int:
+        return self.k
+
+    def observe(self, tokens: int, t_iter: float, *, t_draft: float = 0.0,
+                t_verify: float = 0.0, t_sample: float = 0.0,
+                k: Optional[int] = None) -> None:
+        self.analyzer.observe(IterationRecord(
+            k=self.k if k is None else k, tokens=tokens, t_iter=t_iter,
+            t_draft=t_draft, t_verify=t_verify, t_sample=t_sample))
+
+    def utility(self, n: Optional[int] = None) -> float:
+        return self.analyzer.utility(n)

@@ -1,0 +1,229 @@
+"""Data-movement cost model for MoE speculative verification (paper §2.4,
+adapted from the paper's GPU to our TPU v5e target — DESIGN.md §3).
+
+Single-batch decoding is memory-bandwidth-bound: iteration time is governed
+by the bytes fetched from HBM — all attention weights, the *unique* experts
+activated by the in-flight tokens, the KV cache read, and the unembedding.
+Verifying K+1 tokens multiplies the expert term by the number of unique
+experts they collectively activate (bucket-and-balls, damped by expert
+affinity), which is exactly why speculation can slow MoEs down.
+
+The same model is used by (1) the serving engine's deterministic virtual
+clock on CPU, (2) the paper-figure simulator, and (3) the §Roofline
+active-expert correction for MoE decode."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    hbm_bw: float            # bytes/s
+    peak_flops: float        # FLOP/s at serving precision
+    ici_bw: float = 0.0      # bytes/s per link (TPU interconnect)
+    weight_bytes: int = 2    # serving precision (bf16/fp16 = 2)
+
+
+TPU_V5E = Hardware("tpu-v5e", hbm_bw=819e9, peak_flops=197e12, ici_bw=50e9)
+# the paper's workstation GPU (RTX 6000 Ada): ~960 GB/s GDDR6, ~91 TFLOP/s fp16
+RTX_6000_ADA = Hardware("rtx-6000-ada", hbm_bw=960e9, peak_flops=91e12)
+
+
+# --------------------------------------------------------------------- #
+# Expert activation statistics (paper §2.4)
+# --------------------------------------------------------------------- #
+
+def expected_unique_experts(num_experts: int, top_k: int, n_tokens: int,
+                            affinity: float = 0.0) -> float:
+    """Expected number of distinct experts activated by `n_tokens` tokens,
+    each selecting `top_k` distinct experts.
+
+    affinity=0: uniform-random routing (bucket-and-balls):
+        E[unique] = E * (1 - (1 - k/E)^T)
+    affinity=1: perfect temporal reuse (all tokens share one expert set).
+    The paper observes real tasks fall between the two (§2.4: Mixtral math
+    shows 3x instead of the random 3.5x at K=7)."""
+    if num_experts == 0:
+        return 0.0
+    n_tokens = max(int(n_tokens), 1)
+    e, k = float(num_experts), float(min(top_k, num_experts))
+    rand = e * (1.0 - (1.0 - k / e) ** n_tokens)
+    floor = k  # one shared expert set
+    return floor + (rand - floor) * (1.0 - affinity)
+
+
+# --------------------------------------------------------------------- #
+# Per-iteration bytes / flops
+# --------------------------------------------------------------------- #
+
+def _per_layer_weight_bytes(cfg, wb: int):
+    """(attention_bytes, dense_ffn_bytes, one_expert_bytes, shared_bytes)."""
+    attn = cfg._attn_params() * wb
+    mult = 3 if cfg.activation == "swiglu" else 2
+    if cfg.is_moe:
+        expert = mult * cfg.d_model * cfg.moe_d_ff * wb
+        shared = mult * cfg.d_model * cfg.moe_d_ff * cfg.num_shared_experts * wb
+        router = cfg.d_model * cfg.num_experts * wb
+        return attn + router, 0, expert, shared
+    return attn, mult * cfg.d_model * cfg.d_ff * wb, 0, 0
+
+
+def kv_bytes_per_token(cfg, wb: int) -> float:
+    """KV-cache bytes appended per token per layer."""
+    if cfg.use_mla:
+        return (cfg.kv_lora_rank + cfg.qk_rope_dim) * wb
+    if cfg.attention_free:
+        return 0.0
+    return 2 * cfg.num_kv_heads * cfg.head_dim * wb
+
+
+def iteration_bytes(cfg, n_tokens: int, context_len: int,
+                    unique_experts: float = None, affinity: float = 0.0,
+                    window: int = 0, wb: int = None) -> dict:
+    """HBM bytes moved by one target-model iteration processing `n_tokens`
+    in-flight tokens against a `context_len`-token KV cache."""
+    wb = wb or 2
+    kinds = cfg.layer_kinds()
+    attn_b, ffn_b, expert_b, shared_b = _per_layer_weight_bytes(cfg, wb)
+
+    if cfg.is_moe and unique_experts is None:
+        unique_experts = expected_unique_experts(
+            cfg.num_experts, cfg.experts_per_token, n_tokens, affinity)
+
+    n_attnish = sum(1 for k in kinds if k in ("A", "X"))
+    n_rec = sum(1 for k in kinds if k == "R")
+    n_rwkv = sum(1 for k in kinds if k == "W")
+
+    weights = 0.0
+    experts = 0.0
+    for k in kinds:
+        if k in ("A", "X"):
+            weights += attn_b + ffn_b
+            if k == "X":
+                weights += attn_b  # cross-attention weights
+            if cfg.is_moe:
+                experts += min(unique_experts, cfg.num_experts) * expert_b
+                weights += shared_b
+        elif k == "R":
+            weights += cfg._rglru_layer_params() * wb + ffn_b
+            if not ffn_b:  # hybrid is dense-ffn
+                weights += 3 * cfg.d_model * cfg.d_ff * wb
+        elif k == "W":
+            weights += cfg._rwkv_layer_params() * wb
+
+    # unembedding is read every iteration; embedding read is per-token rows
+    weights += cfg.vocab_size * cfg.d_model * wb
+
+    # KV cache read: every layer reads its cache (windowed layers read only
+    # the window)
+    eff_ctx = context_len if not window else min(context_len, window)
+    kv_read = 0.0
+    for k in kinds:
+        if k in ("A", "X"):
+            lw = window if k == "A" else window
+            if cfg.layer_pattern and k == "A":
+                lw = cfg.local_window
+            ctx = context_len if not lw else min(context_len, lw)
+            kv_read += ctx * kv_bytes_per_token(cfg, wb)
+        elif k == "W":
+            kv_read += cfg.rwkv_num_heads * cfg.rwkv_head_size ** 2 * 4
+        elif k == "R":
+            kv_read += cfg.d_rnn * 4
+    del eff_ctx
+
+    return {"weights": weights, "experts": experts, "kv": kv_read,
+            "total": weights + experts + kv_read,
+            "unique_experts": unique_experts or 0.0}
+
+
+def iteration_flops(cfg, n_tokens: int, context_len: int,
+                    window: int = 0) -> float:
+    """Approximate FLOPs of one iteration over n_tokens in-flight tokens."""
+    active = cfg.active_param_count()
+    flops = 2.0 * active * n_tokens
+    # attention over the cache
+    kinds = cfg.layer_kinds()
+    for k in kinds:
+        if k in ("A", "X"):
+            lw = cfg.local_window if (cfg.layer_pattern and k == "A") else window
+            ctx = context_len if not lw else min(context_len, lw)
+            hd = cfg.head_dim if not cfg.use_mla else cfg.kv_lora_rank + cfg.qk_rope_dim
+            flops += 4.0 * n_tokens * ctx * cfg.num_heads * hd
+    return flops
+
+
+# --------------------------------------------------------------------- #
+# Iteration time
+# --------------------------------------------------------------------- #
+
+def iteration_time(cfg, hw: Hardware, n_tokens: int, context_len: int,
+                   unique_experts: float = None, affinity: float = 0.0,
+                   window: int = 0, fixed_overhead: float = 2e-4) -> dict:
+    """Seconds for one target iteration. max(memory, compute) + overhead —
+    single-batch decode is deep in the memory-bound regime, so the memory
+    term dominates everywhere the paper (and we) evaluate."""
+    b = iteration_bytes(cfg, n_tokens, context_len, unique_experts,
+                        affinity, window)
+    f = iteration_flops(cfg, n_tokens, context_len, window)
+    t_mem = b["total"] / hw.hbm_bw
+    t_compute = f / hw.peak_flops
+    t = max(t_mem, t_compute) + fixed_overhead
+    return {"t_iter": t, "t_mem": t_mem, "t_compute": t_compute,
+            "bytes": b["total"], "expert_bytes": b["experts"],
+            "flops": f, "unique_experts": b["unique_experts"]}
+
+
+def draft_time(hw: Hardware, k: int, drafter_active_params: int = 0,
+               per_token_overhead: float = 2e-5) -> float:
+    """Drafting cost: ~free for n-gram (CPU table lookup), weight-bound for
+    model drafters (EAGLE-style)."""
+    if k <= 0:
+        return 0.0
+    model = k * drafter_active_params * 2 / hw.hbm_bw if drafter_active_params else 0.0
+    return model + k * per_token_overhead
+
+
+def sample_time(k: int, per_token: float = 1.5e-5) -> float:
+    """Rejection-sampling cost, linear in verified tokens (paper: 1-2%)."""
+    return (k + 1) * per_token
+
+
+# --------------------------------------------------------------------- #
+# Analytic K prior (beyond-paper): warm-start Cascade's hill-climb
+# --------------------------------------------------------------------- #
+
+def expected_utility(cfg, hw: Hardware, k: int, accept_rate: float,
+                     context_len: int = 1024, affinity: float = 0.3,
+                     drafter_params: int = 0) -> float:
+    """Analytic Definition-4.1 utility of speculating K tokens when draft
+    acceptance is ~accept_rate: ETR from the truncated geometric series,
+    cost from the data-movement model."""
+    if k <= 0:
+        return 1.0
+    a = min(max(accept_rate, 0.0), 0.999)
+    etr = (1.0 - a ** (k + 1)) / (1.0 - a)
+    base = iteration_time(cfg, hw, 1, context_len, affinity=affinity)
+    spec = iteration_time(cfg, hw, k + 1, context_len, affinity=affinity)
+    t_spec = spec["t_iter"] + draft_time(hw, k, drafter_params) + \
+        sample_time(k)
+    return etr / (t_spec / base["t_iter"])
+
+
+def suggest_k_start(cfg, hw: Hardware = TPU_V5E, *,
+                    accept_rate: float = 0.5, k_max: int = 8,
+                    context_len: int = 1024, affinity: float = 0.3,
+                    drafter_params: int = 0) -> int:
+    """Bucket-and-balls prior for Cascade's first trial K (beyond-paper):
+    instead of a fixed k_start=3, pick the analytic utility-maximizing K
+    for this architecture — MoEs with steep expert-activation curves get a
+    conservative start, dense models an aggressive one. The test-and-set
+    loop still measures and adapts; this only saves test iterations."""
+    best_k, best_u = 1, -1.0
+    for k in range(1, k_max + 1):
+        u = expected_utility(cfg, hw, k, accept_rate, context_len, affinity,
+                             drafter_params)
+        if u > best_u:
+            best_k, best_u = k, u
+    return best_k

@@ -1,0 +1,118 @@
+"""Speculation-utility telemetry (paper §4).
+
+Definition 4.1:  U = benefit / cost
+    benefit = ETR_spec            (tokens emitted per target iteration)
+    cost    = t_iter_spec / t_iter_base
+
+Theorem 4.2:     TPOT_spec = TPOT_base / U
+(so maximizing utility minimizes time-per-output-token; verified by a
+property test in tests/test_core.py).
+
+The UtilityAnalyzer mirrors the paper's vLLM implementation: it tracks
+recent per-iteration (tokens, time) samples, maintains a no-speculation
+baseline iteration time measured from the first few decode iterations and
+refreshed infrequently (§5.3), and reports windowed utility."""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Optional, Tuple
+
+
+@dataclass
+class IterationRecord:
+    k: int              # speculation length used (0 = no speculation)
+    tokens: int         # tokens emitted this iteration (>=1)
+    t_iter: float       # iteration time (seconds, wall-clock or cost model)
+    t_draft: float = 0.0
+    t_verify: float = 0.0
+    t_sample: float = 0.0
+
+
+@dataclass
+class UtilityAnalyzer:
+    """Per-request utility tracker.
+
+    Parameters mirror §5.3: `baseline_iters` no-spec iterations measured at
+    request start, refreshed every `baseline_refresh` iterations."""
+
+    baseline_iters: int = 4
+    baseline_refresh: int = 100
+    window: int = 16
+
+    _records: Deque[IterationRecord] = field(default_factory=lambda: deque(maxlen=512))
+    _baseline_samples: Deque[float] = field(default_factory=lambda: deque(maxlen=16))
+    _iters_since_refresh: int = 0
+    total_iters: int = 0
+
+    # ------------------------------------------------------------------ #
+
+    def observe(self, rec: IterationRecord) -> None:
+        self._records.append(rec)
+        self.total_iters += 1
+        self._iters_since_refresh += 1
+        if rec.k == 0:
+            self._baseline_samples.append(rec.t_iter)
+            self._iters_since_refresh = 0
+
+    @property
+    def baseline_time(self) -> Optional[float]:
+        """Average no-speculation iteration time (None until measured)."""
+        if not self._baseline_samples:
+            return None
+        return sum(self._baseline_samples) / len(self._baseline_samples)
+
+    def needs_baseline(self) -> bool:
+        """True while the manager should run no-spec iterations to (re)measure
+        the baseline (first `baseline_iters`, then every `baseline_refresh`)."""
+        if len(self._baseline_samples) < self.baseline_iters:
+            return True
+        return self._iters_since_refresh >= self.baseline_refresh
+
+    # ------------------------------------------------------------------ #
+
+    def _window_records(self, n: Optional[int] = None, k: Optional[int] = None):
+        n = n or self.window
+        recs = [r for r in self._records if k is None or r.k == k]
+        return recs[-n:]
+
+    def etr(self, n: Optional[int] = None, k: Optional[int] = None) -> float:
+        recs = self._window_records(n, k)
+        if not recs:
+            return 1.0
+        return sum(r.tokens for r in recs) / len(recs)
+
+    def cost(self, n: Optional[int] = None, k: Optional[int] = None) -> float:
+        """Mean iteration time over window / baseline time."""
+        base = self.baseline_time
+        recs = self._window_records(n, k)
+        if not recs or not base:
+            return 1.0
+        return (sum(r.t_iter for r in recs) / len(recs)) / base
+
+    def utility(self, n: Optional[int] = None, k: Optional[int] = None) -> float:
+        """Definition 4.1 over the last `n` iterations (optionally only those
+        run at speculation length `k`)."""
+        c = self.cost(n, k)
+        return self.etr(n, k) / max(c, 1e-9)
+
+    def trial_utility(self, trial_records) -> float:
+        """Utility of an explicit list of records (one test-phase trial)."""
+        base = self.baseline_time
+        if not trial_records or not base:
+            return 1.0
+        etr = sum(r.tokens for r in trial_records) / len(trial_records)
+        cost = (sum(r.t_iter for r in trial_records) / len(trial_records)) / base
+        return etr / max(cost, 1e-9)
+
+    # -- diagnostics ---------------------------------------------------- #
+
+    def breakdown(self, n: Optional[int] = None) -> Tuple[float, float, float]:
+        recs = self._window_records(n)
+        if not recs:
+            return (0.0, 0.0, 0.0)
+        m = len(recs)
+        return (sum(r.t_draft for r in recs) / m,
+                sum(r.t_verify for r in recs) / m,
+                sum(r.t_sample for r in recs) / m)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot spots, each with:
+    kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+    ops.py    — jit'd wrapper (backend dispatch: TPU=compiled, CPU=ref)
+    ref.py    — pure-jnp oracle used by the models and the allclose tests
+
+Kernels:
+    moe_gmm          grouped expert matmul over the capacity dispatch layout
+                     (the paper's MoE verification hot spot)
+    flash_attention  blockwise causal / sliding-window attention (prefill)
+    decode_attention single-step GQA attention over a long KV ring cache
+    rwkv_scan        RWKV-6 decayed outer-product recurrence
+    linear_scan      RG-LRU elementwise linear recurrence (RecurrentGemma)
+"""

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a long KV
+(ring) cache — the memory-bound hot loop of `decode_32k` / `long_500k`.
+
+Tiling: grid = (B, H, S/bs); the KV cache is streamed through VMEM in
+(bs × D) blocks while the online-softmax running statistics (m, l) and the
+accumulator stay resident in revisited output blocks for the (b,h) pair.
+HBM traffic = one read of the cache (the floor); GQA means each KV block is
+re-read once per query head in its group — the group-batched variant
+(q-heads of one KV group share a block fetch) is the §Perf follow-up."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref, m_ref, l_ref,
+            *, ns, window, scale):
+    s_i = pl.program_id(2)
+
+    @pl.when(s_i == 0)
+    def _init():
+        o_ref[0, 0] = jnp.zeros_like(o_ref[0, 0])
+        m_ref[0, 0] = jnp.full_like(m_ref[0, 0], NEG_INF)
+        l_ref[0, 0] = jnp.zeros_like(l_ref[0, 0])
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [D]
+    k = k_ref[0, :, 0].astype(jnp.float32)               # [bs, D]
+    v = v_ref[0, :, 0].astype(jnp.float32)               # [bs, D]
+    pos = pos_ref[0]                                     # [bs]
+    qpos = qpos_ref[0]                                   # scalar
+
+    s = jnp.sum(k * q[None, :], axis=-1)                 # [bs]
+    valid = (pos >= 0) & (pos <= qpos)
+    if window:
+        valid = valid & (pos > qpos - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0, 0][0]
+    l_prev = l_ref[0, 0][0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                               # [bs]
+    l_new = l_prev * alpha + jnp.sum(p)
+    acc = o_ref[0, 0] * alpha + jnp.sum(p[:, None] * v, axis=0)
+
+    m_ref[0, 0] = jnp.full_like(m_ref[0, 0], m_new)
+    l_ref[0, 0] = jnp.full_like(l_ref[0, 0], l_new)
+
+    @pl.when(s_i == ns - 1)
+    def _final():
+        o_ref[0, 0] = acc / jnp.maximum(l_new, 1e-30)
+
+    @pl.when(s_i < ns - 1)
+    def _store():
+        o_ref[0, 0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "window", "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_pos, q_pos, *,
+                     window: int = 0, bs: int = 128,
+                     interpret: bool = False):
+    """q: [B,H,D]; k_cache/v_cache: [B,S,Hkv,D]; cache_pos: [B,S];
+    q_pos: [B] -> out [B,H,D]."""
+    b, h, d = q.shape
+    s_len, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    bs = min(bs, s_len)
+    assert s_len % bs == 0, (s_len, bs)
+    ns = s_len // bs
+    scale = 1.0 / (d ** 0.5)
+
+    kv_spec = pl.BlockSpec((1, bs, 1, d),
+                           lambda ib, ih, is_: (ib, is_, ih // g, 0))
+    out, m, l = pl.pallas_call(
+        functools.partial(_kernel, ns=ns, window=window, scale=scale),
+        grid=(b, h, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda ib, ih, is_: (ib, ih, 0)),
+            kv_spec, kv_spec,
+            pl.BlockSpec((1, bs), lambda ib, ih, is_: (ib, is_)),
+            pl.BlockSpec((1,), lambda ib, ih, is_: (ib,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, d), lambda ib, ih, is_: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, 8), lambda ib, ih, is_: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, 8), lambda ib, ih, is_: (ib, ih, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 8), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 8), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, cache_pos, q_pos)
+    del m, l
+    return out.astype(q.dtype)

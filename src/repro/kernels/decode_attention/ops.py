@@ -1,0 +1,23 @@
+"""Backend dispatch for decode_attention."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import decode_attention as decode_attention_pallas
+from .ref import decode_attention_ref
+
+__all__ = ["decode_attention", "decode_attention_pallas",
+           "decode_attention_ref"]
+
+
+def decode_attention(q, k_cache, v_cache, cache_pos, q_pos, *,
+                     window: int = 0, force_pallas: bool = False, **kw):
+    if jax.default_backend() == "tpu":
+        return decode_attention_pallas(q, k_cache, v_cache, cache_pos, q_pos,
+                                       window=window, **kw)
+    if force_pallas:
+        return decode_attention_pallas(q, k_cache, v_cache, cache_pos, q_pos,
+                                       window=window, interpret=True, **kw)
+    return decode_attention_ref(q, k_cache, v_cache, cache_pos, q_pos,
+                                window=window)

@@ -1,0 +1,28 @@
+"""Oracle for single-token GQA decode attention over a (ring) KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_pos, q_pos,
+                         window: int = 0):
+    """q: [B,H,D]; k_cache/v_cache: [B,S,Hkv,D]; cache_pos: [B,S] (-1 empty);
+    q_pos: [B]. Returns [B,H,D]."""
+    b, h, d = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d) / jnp.sqrt(d)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf)
+    valid = (cache_pos >= 0) & (cache_pos <= q_pos[:, None])
+    if window:
+        valid = valid & (cache_pos > q_pos[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (prefill): blockwise online-softmax causal /
+sliding-window GQA.
+
+Tiling: grid = (B, H, S/bq, S/bk), kv innermost-sequential. Q blocks are
+(bq × D) and KV blocks (bk × D) in VMEM — MXU-aligned for D ∈ {64,128,256}
+and bq=bk=128 by default. Running (m, l) statistics and the accumulator for
+each (b, h, iq) live in revisited output blocks. Fully-masked KV blocks
+(beyond the causal frontier or outside the sliding window) are skipped with
+`pl.when`, giving the ~2x causal saving and O(window) work in windowed
+mode."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            bq, bk, nk, window, scale):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[0, :, 0, :] = jnp.zeros_like(o_ref[0, :, 0, :])
+        m_ref[0, 0, :] = jnp.full_like(m_ref[0, 0, :], NEG_INF)
+        l_ref[0, 0, :] = jnp.zeros_like(l_ref[0, 0, :])
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # block-level skip: entirely above the diagonal, or entirely out-of-window
+    above_diag = k_start > q_start + bq - 1
+    out_of_window = (window > 0) & (k_start + bk - 1 <= q_start - window)
+    live = jnp.logical_not(above_diag | out_of_window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale     # [bq,D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # [bk,D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = q @ k.T                                           # [bq,bk]
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = kj <= qi
+        if window:
+            valid = valid & (kj > qi - window)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[0, 0, :]                               # [bq]
+        l_prev = l_ref[0, 0, :]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        # fully-masked rows (can happen in ragged window tails): keep zeros
+        p = jnp.where(valid, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = o_ref[0, :, 0, :] * alpha[:, None] + p @ v
+        m_ref[0, 0, :] = m_new
+        l_ref[0, 0, :] = l_new
+        o_ref[0, :, 0, :] = acc
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        l = l_ref[0, 0, :]
+        o_ref[0, :, 0, :] = (o_ref[0, :, 0, :]
+                             / jnp.maximum(l, 1e-30)[:, None])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bk", "window", "interpret"))
+def flash_attention(q, k, v, *, window: int = 0, bq: int = 128,
+                    bk: int = 128, interpret: bool = False):
+    """q: [B,S,H,D]; k,v: [B,S,Hkv,D] -> [B,S,H,D] (causal)."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    nq, nk = s // bq, s // bk
+    scale = 1.0 / (d ** 0.5)
+
+    out, m, l = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, nk=nk, window=window,
+                          scale=scale),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda ib, ih, iq, ik: (ib, ik, ih // g, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda ib, ih, iq, ik: (ib, ik, ih // g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+            pl.BlockSpec((1, 1, bq), lambda ib, ih, iq, ik: (ib, ih, iq)),
+            pl.BlockSpec((1, 1, bq), lambda ib, ih, iq, ik: (ib, ih, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    del m, l
+    return out.astype(q.dtype)

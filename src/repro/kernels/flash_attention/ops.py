@@ -1,0 +1,20 @@
+"""Backend dispatch for flash_attention."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention as flash_attention_pallas
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention", "flash_attention_pallas", "flash_attention_ref"]
+
+
+def flash_attention(q, k, v, *, window: int = 0, force_pallas: bool = False,
+                    **kw):
+    if jax.default_backend() == "tpu":
+        return flash_attention_pallas(q, k, v, window=window, **kw)
+    if force_pallas:
+        return flash_attention_pallas(q, k, v, window=window,
+                                      interpret=True, **kw)
+    return flash_attention_ref(q, k, v, window=window)

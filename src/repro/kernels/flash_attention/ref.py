@@ -1,0 +1,26 @@
+"""Oracle for blockwise causal / sliding-window GQA prefill attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, window: int = 0):
+    """q: [B,S,H,D]; k,v: [B,S,Hkv,D] -> [B,S,H,D]. Causal; optional
+    sliding window."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, s, hkv, g, d) / jnp.sqrt(d)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qf, k.astype(jnp.float32))
+    idx = jnp.arange(s)
+    valid = idx[None, :] <= idx[:, None]
+    if window:
+        valid = valid & (idx[None, :] > idx[:, None] - window)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

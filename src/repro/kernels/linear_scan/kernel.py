@@ -1,0 +1,71 @@
+"""Pallas TPU kernel for the elementwise linear recurrence
+    h_t = a_t * h_{t-1} + x_t                     (RG-LRU, Griffin)
+
+Tiling: grid = (B, D/bd, T/bt); the T axis is the innermost (fastest)
+sequential grid dimension so the running state for a given (batch, channel
+block) can live in a VMEM scratch register file across T blocks. Within a
+block the recurrence over bt steps is unrolled as a log-depth associative
+combine — MXU-free, pure VPU work, with the HBM traffic being exactly one
+read of a,x and one write of y (the roofline floor for this op)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assoc_scan_block(a, x):
+    """In-block inclusive scan of h_t = a_t h_{t-1} + x_t over axis 0 via
+    the associative combine ((a1,x1)∘(a2,x2) = (a1*a2, x1*a2 + x2))."""
+    return jax.lax.associative_scan(
+        lambda l, r: (l[0] * r[0], l[1] * r[0] + r[1]), (a, x), axis=0)
+
+
+def _kernel(a_ref, x_ref, h0_ref, y_ref, hlast_ref, *, nt):
+    it = pl.program_id(2)
+    a = a_ref[0]          # [bt, bd]
+    x = x_ref[0]
+
+    @pl.when(it == 0)
+    def _init():
+        hlast_ref[0, :] = h0_ref[0, :]
+
+    h_in = hlast_ref[0, :]
+    a_cum, y = _assoc_scan_block(a, x)
+    y = y + a_cum * h_in[None, :]
+    y_ref[0] = y
+    hlast_ref[0, :] = y[-1, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bd", "interpret"))
+def linear_scan(a, x, h0, *, bt: int = 128, bd: int = 128,
+                interpret: bool = False):
+    """a, x: [B,T,D] f32; h0: [B,D] f32 -> (y [B,T,D], h_last [B,D])."""
+    b, t, d = a.shape
+    bt = min(bt, t)
+    bd = min(bd, d)
+    assert t % bt == 0 and d % bd == 0, (t, d, bt, bd)
+    grid = (b, d // bd, t // bt)
+
+    y, h_last = pl.pallas_call(
+        functools.partial(_kernel, nt=t // bt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda ib, id_, it: (ib, it, id_)),
+            pl.BlockSpec((1, bt, bd), lambda ib, id_, it: (ib, it, id_)),
+            pl.BlockSpec((1, bd), lambda ib, id_, it: (ib, id_)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, bd), lambda ib, id_, it: (ib, it, id_)),
+            pl.BlockSpec((1, bd), lambda ib, id_, it: (ib, id_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, d), a.dtype),
+            jax.ShapeDtypeStruct((b, d), a.dtype),
+        ],
+        interpret=interpret,
+    )(a, x, h0)
+    return y, h_last

@@ -1,0 +1,19 @@
+"""Backend dispatch for linear_scan: compiled Pallas on TPU, oracle on CPU
+(interpret-mode Pallas is available for correctness tests via force)."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import linear_scan as linear_scan_pallas
+from .ref import linear_scan_ref
+
+__all__ = ["linear_scan", "linear_scan_pallas", "linear_scan_ref"]
+
+
+def linear_scan(a, x, h0, *, force_pallas: bool = False, **kw):
+    if jax.default_backend() == "tpu":
+        return linear_scan_pallas(a, x, h0, **kw)
+    if force_pallas:
+        return linear_scan_pallas(a, x, h0, interpret=True, **kw)
+    return linear_scan_ref(a, x, h0)

@@ -1,0 +1,17 @@
+"""Oracle for the RG-LRU linear recurrence: h_t = a_t * h_{t-1} + x_t."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a, x, h0):
+    """a, x: [B,T,D] (f32); h0: [B,D]. Returns (y [B,T,D], h_last [B,D])."""
+    def step(h, inp):
+        a_t, x_t = inp
+        h = a_t * h + x_t
+        return h, h
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(x, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_last

@@ -1,0 +1,18 @@
+"""Backend dispatch for moe_gmm."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import moe_gmm as moe_gmm_pallas
+from .ref import moe_gmm_ref
+
+__all__ = ["moe_gmm", "moe_gmm_pallas", "moe_gmm_ref"]
+
+
+def moe_gmm(x, w, counts, *, force_pallas: bool = False, **kw):
+    if jax.default_backend() == "tpu":
+        return moe_gmm_pallas(x, w, counts, **kw)
+    if force_pallas:
+        return moe_gmm_pallas(x, w, counts, interpret=True, **kw)
+    return moe_gmm_ref(x, w, counts)

@@ -1,0 +1,17 @@
+"""Oracle for the grouped expert matmul over the capacity dispatch layout."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def moe_gmm_ref(x, w, counts=None):
+    """x: [E,C,d]; w: [E,d,F]; counts: [E] valid tokens per expert (slots
+    beyond the count hold zeros by construction). Returns [E,C,F]."""
+    y = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    if counts is not None:
+        c = x.shape[1]
+        mask = jnp.arange(c)[None, :] < counts[:, None]
+        y = jnp.where(mask[..., None], y, 0.0)
+    return y.astype(x.dtype)

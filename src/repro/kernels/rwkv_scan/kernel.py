@@ -1,0 +1,74 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence.
+
+Per (batch, head): state S ∈ R^{N×N} (N = head_size, 64):
+    y_t = r_t^T (S + diag(u) k_t v_t^T)
+    S  <- diag(w_t) S + k_t v_t^T
+
+Tiling: grid = (B, H, T/bt) with T innermost-sequential; the N×N f32 state
+lives in the `s_last` output block (revisited across T blocks for a fixed
+(b,h), initialised from s0 at it==0) so it stays resident in VMEM for the
+whole sweep — the kernel reads r/k/v/w once from HBM and writes y once,
+which is the bandwidth floor. The inner bt-step loop is a fori_loop of
+rank-1 updates: outer products and row-scales are VPU ops; on the MXU this
+could be chunked into (bt × N) @ (N × N) dots, which is the documented
+next optimization (DESIGN.md §Perf)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s_ref, *, bt):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        s_ref[0, 0] = s0_ref[0, 0]
+
+    u = u_ref[0]                       # [N]
+    s = s_ref[0, 0]                    # [N,N] running state
+
+    def step(i, carry):
+        s, = carry
+        r_t = r_ref[0, i, 0, :]        # [N]
+        k_t = k_ref[0, i, 0, :]
+        v_t = v_ref[0, i, 0, :]
+        w_t = w_ref[0, i, 0, :]
+        kv = k_t[:, None] * v_t[None, :]          # [N,N]
+        y = jnp.sum((s + u[:, None] * kv) * r_t[:, None], axis=0)
+        y_ref[0, i, 0, :] = y
+        s = w_t[:, None] * s + kv
+        return (s,)
+
+    (s,) = jax.lax.fori_loop(0, bt, step, (s,))
+    s_ref[0, 0] = s
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def rwkv_scan(r, k, v, w, u, s0, *, bt: int = 32, interpret: bool = False):
+    """r,k,v,w: [B,T,H,N] f32; u: [H,N]; s0: [B,H,N,N] f32.
+    Returns (y [B,T,H,N], s_last [B,H,N,N])."""
+    b, t, h, n = r.shape
+    bt = min(bt, t)
+    assert t % bt == 0, (t, bt)
+    grid = (b, h, t // bt)
+
+    seq_spec = pl.BlockSpec((1, bt, 1, n), lambda ib, ih, it: (ib, it, ih, 0))
+    state_spec = pl.BlockSpec((1, 1, n, n), lambda ib, ih, it: (ib, ih, 0, 0))
+
+    y, s_last = pl.pallas_call(
+        functools.partial(_kernel, bt=bt),
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, n), lambda ib, ih, it: (ih, 0)),
+                  state_spec],
+        out_specs=[seq_spec, state_spec],
+        out_shape=[jax.ShapeDtypeStruct((b, t, h, n), r.dtype),
+                   jax.ShapeDtypeStruct((b, h, n, n), s0.dtype)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, s_last

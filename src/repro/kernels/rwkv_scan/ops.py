@@ -1,0 +1,18 @@
+"""Backend dispatch for rwkv_scan."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import rwkv_scan as rwkv_scan_pallas
+from .ref import rwkv_scan_ref
+
+__all__ = ["rwkv_scan", "rwkv_scan_pallas", "rwkv_scan_ref"]
+
+
+def rwkv_scan(r, k, v, w, u, s0, *, force_pallas: bool = False, **kw):
+    if jax.default_backend() == "tpu":
+        return rwkv_scan_pallas(r, k, v, w, u, s0, **kw)
+    if force_pallas:
+        return rwkv_scan_pallas(r, k, v, w, u, s0, interpret=True, **kw)
+    return rwkv_scan_ref(r, k, v, w, u, s0)

@@ -1,0 +1,20 @@
+"""Oracle for the RWKV-6 WKV recurrence (same math as models/rwkv.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv_scan_ref(r, k, v, w, u, s0):
+    """r,k,v,w: [B,T,H,N] f32; u: [H,N]; s0: [B,H,N,N].
+    Returns (y [B,T,H,N], s_last [B,H,N,N])."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                            # [B,H,N]
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [B,H,Nk,Nv]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_last

@@ -1,0 +1,179 @@
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) on the production mesh with 512 placeholder
+host devices, then extract memory / FLOP / collective-byte telemetry for
+the roofline analysis (deliverable g).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+        --shape decode_32k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+# The XLA device-count override MUST precede any other import (jax locks the
+# device count on first init).
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh               # noqa: E402
+from repro.launch import specs as S                              # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo                # noqa: E402
+from repro.models.config import INPUT_SHAPES                     # noqa: E402
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[dims] group in an HLO result type."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-type byte totals parsed from post-SPMD HLO. Bytes are
+    the op result size (per participating device)."""
+    out = {c: 0 for c in _COLLECTIVES}
+    count = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.*?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start)?\(", line)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(result_type)
+        count[op] += 1
+    out_total = sum(out.values())
+    return {"bytes_by_type": out, "count_by_type": count,
+            "total_bytes": out_total}
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            spec_k: int = 3, builder=None, opts=None) -> dict:
+    """Lower + compile one (arch, shape, mesh) combo; return telemetry."""
+    from repro.distributed.sharding import set_options
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_options(opts, mesh=mesh)
+    build = builder or S.build
+    t0 = time.time()
+    fn, arg_sds, arg_shardings = build(cfg, shape_name, mesh)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=arg_shardings)
+        lowered = jitted.lower(*arg_sds)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    # trip-count-aware re-analysis: XLA's cost_analysis counts while (scan)
+    # bodies once; this recovers the true per-step totals (hlo_analysis.py)
+    trip = analyze_hlo(hlo_text)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(mesh.devices.size),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", 0.0)),
+        "trip_aware": {
+            "flops_per_device": trip["flops"],
+            "bytes_per_device": trip["bytes"],
+            "collective_bytes_per_device": trip["collective_bytes"],
+            "collectives": trip["collectives"],
+        },
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "window": S.decode_window(cfg, INPUT_SHAPES[shape_name]),
+        "opts": sorted(opts or []),
+        "ok": True,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned archs x all shapes on this mesh")
+    ap.add_argument("--assigned-only", action="store_true", default=True)
+    ap.add_argument("--spec-k", type=int, default=3)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opts", default="",
+                    help="comma-separated perf options (§Perf): "
+                         "serve-capacity,dispatch-shard,residual-shard,"
+                         "chunked-wkv")
+    args = ap.parse_args()
+    opts = [o for o in args.opts.split(",") if o]
+
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch}_{shape}_{'2x16x16' if args.multi_pod else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            try:
+                rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                              spec_k=args.spec_k, opts=opts)
+                ta = rec["trip_aware"]
+                print(f"OK   {tag}: compile={rec['compile_s']}s "
+                      f"flops/dev={ta['flops_per_device']:.3e} "
+                      f"bytes/dev={ta['bytes_per_device']:.3e} "
+                      f"coll={ta['collective_bytes_per_device']:.3e}B "
+                      f"temp={rec['memory']['temp_bytes']}")
+            except Exception as e:  # a failure here is a sharding bug
+                rec = {"arch": arch, "shape": shape, "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                print(f"FAIL {tag}: {rec['error']}")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            results.append(rec)
+
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} combinations compiled")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

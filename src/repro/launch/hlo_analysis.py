@@ -1,0 +1,285 @@
+"""Trip-count-aware HLO analysis.
+
+XLA's `compiled.cost_analysis()` counts a `while` body **once**, so for a
+`lax.scan`-over-layers model the reported FLOPs/bytes understate the true
+per-step cost by ~num_layers. The compiled HLO carries
+`backend_config={"known_trip_count":{"n":...}}` for counted loops, so this
+module re-derives:
+
+    * flops            — 2·prod(result)·prod(contracting) per dot, with
+                         while-body totals multiplied by trip count
+                         (descends into fusions and control flow)
+    * bytes            — per-op operand+result sizes at fusion granularity
+                         (a fused op reads its inputs and writes its output
+                         once — XLA's own bytes-accessed convention),
+                         trip-aware
+    * collective bytes — result sizes of all-gather / all-reduce /
+                         reduce-scatter / all-to-all / collective-permute,
+                         trip-aware, per type
+
+Used by launch/dryrun.py for the §Roofline terms."""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_ARRAY_RE = re.compile(
+    r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|pred|"
+    r"f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*{")
+
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|true_computation|false_computation|"
+    r"comparator|scatter|select|update_computation)=(%[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations={([^}]*)}")
+_TRIP_RE = re.compile(r'known_trip_count[\\\"{:n ]+(\d+)')
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _array_dims(type_str: str) -> Optional[List[int]]:
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str              # operand list + attrs (raw remainder of line)
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # %name -> type
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        m = _COMP_START_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = Computation(m.group(2), bool(m.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if not om:
+            continue
+        name, rtype, opcode, rest = om.groups()
+        operands = re.findall(r"%[\w.\-]+", rest.split(", ", 1)[0]
+                              if opcode != "fusion" else rest)
+        op = Op(name, rtype, opcode, rest, operands)
+        cur.ops.append(op)
+        cur.symbols[name] = rtype
+    return comps
+
+
+def _dot_flops(op: Op, symbols: Dict[str, str]) -> float:
+    dims = _array_dims(op.result_type)
+    if dims is None:
+        return 0.0
+    cm = re.search(r"lhs_contracting_dims={([0-9,]*)}", op.rest)
+    ops_in_line = re.findall(r"%[\w.\-]+", op.rest)
+    if not ops_in_line:
+        return 0.0
+    lhs_type = symbols.get(ops_in_line[0], "")
+    lhs_dims = _array_dims(lhs_type) or []
+    contract = 1
+    if cm:
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    n = 1
+    for d in dims:
+        n *= d
+    return 2.0 * n * contract
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self.entry = next((c for c in self.comps.values() if c.is_entry),
+                          None)
+        self._memo_flops: Dict[str, float] = {}
+        self._memo_bytes: Dict[str, float] = {}
+        self._memo_coll: Dict[str, Dict[str, float]] = {}
+
+    # ---- helpers ----
+
+    def _callees(self, op: Op) -> List[Tuple[str, float]]:
+        """(computation, multiplier) pairs invoked by this op."""
+        out = []
+        mult = 1.0
+        if op.opcode == "while":
+            tm = _TRIP_RE.search(op.rest)
+            mult = float(tm.group(1)) if tm else 1.0
+        for name in _CALL_ATTR_RE.findall(op.rest):
+            if name in self.comps:
+                # condition bodies run trip+1 times; treat as trip (small)
+                out.append((name, mult))
+        bm = _BRANCHES_RE.search(op.rest)
+        if bm:
+            for name in re.findall(r"%[\w.\-]+", bm.group(1)):
+                if name in self.comps:
+                    out.append((name, 1.0))
+        return out
+
+    # ---- flops (descends into fusions + control flow) ----
+
+    def flops_of(self, comp_name: str) -> float:
+        if comp_name in self._memo_flops:
+            return self._memo_flops[comp_name]
+        self._memo_flops[comp_name] = 0.0  # cycle guard
+        comp = self.comps[comp_name]
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode == "dot":
+                total += _dot_flops(op, comp.symbols)
+            for callee, mult in self._callees(op):
+                total += mult * self.flops_of(callee)
+        self._memo_flops[comp_name] = total
+        return total
+
+    # ---- bytes (fusion = boundary; control flow descended) ----
+
+    _CONTROL = {"while", "conditional", "call"}
+    _SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast"}
+
+    def _fusion_inplace_credit(self, op: Op) -> float:
+        """Bytes to SUBTRACT for a fusion whose internals slice/update a
+        large parameter buffer in place (XLA aliases dynamic-update-slice
+        and reads only the slice for dynamic-slice): without this credit a
+        scan that carries a [L, ...] stacked KV cache appears to copy the
+        whole cache every layer."""
+        credit = 0.0
+        for name in _CALL_ATTR_RE.findall(op.rest):
+            fused = self.comps.get(name)
+            if fused is None:
+                continue
+            for fop in fused.ops:
+                if fop.opcode == "dynamic-update-slice":
+                    buf = fused.symbols.get(fop.operands[0], "") \
+                        if fop.operands else ""
+                    upd = fused.symbols.get(fop.operands[1], "") \
+                        if len(fop.operands) > 1 else ""
+                    bb, ub = _type_bytes(buf), _type_bytes(upd)
+                    if bb > 4 * ub:
+                        # full buffer read + write replaced by update-sized
+                        credit += 2 * (bb - ub)
+                elif fop.opcode == "dynamic-slice":
+                    buf = fused.symbols.get(fop.operands[0], "") \
+                        if fop.operands else ""
+                    sb = _type_bytes(fop.result_type)
+                    bb = _type_bytes(buf)
+                    if bb > 4 * sb:
+                        credit += bb - sb
+        return credit
+
+    def bytes_of(self, comp_name: str) -> float:
+        if comp_name in self._memo_bytes:
+            return self._memo_bytes[comp_name]
+        self._memo_bytes[comp_name] = 0.0
+        comp = self.comps[comp_name]
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode in self._CONTROL:
+                for callee, mult in self._callees(op):
+                    total += mult * self.bytes_of(callee)
+                continue
+            if op.opcode in self._SKIP_BYTES:
+                continue
+            b = _type_bytes(op.result_type)
+            for o in op.operands:
+                t = comp.symbols.get(o)
+                if t:
+                    b += _type_bytes(t)
+            if op.opcode == "fusion":
+                b = max(b - self._fusion_inplace_credit(op), 0.0)
+            elif op.opcode == "dynamic-update-slice":
+                upd = (comp.symbols.get(op.operands[1], "")
+                       if len(op.operands) > 1 else "")
+                b = min(b, 2 * _type_bytes(upd) + 64)
+            elif op.opcode == "dynamic-slice":
+                b = 2 * _type_bytes(op.result_type)
+            total += b
+        self._memo_bytes[comp_name] = total
+        return total
+
+    # ---- collectives ----
+
+    def collectives_of(self, comp_name: str) -> Dict[str, float]:
+        if comp_name in self._memo_coll:
+            return self._memo_coll[comp_name]
+        self._memo_coll[comp_name] = {}
+        comp = self.comps[comp_name]
+        acc: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+        counts: Dict[str, float] = {c + "_count": 0.0 for c in _COLLECTIVES}
+        for op in comp.ops:
+            base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+            if base in _COLLECTIVES:
+                acc[base] += _type_bytes(op.result_type)
+                counts[base + "_count"] += 1
+            for callee, mult in self._callees(op):
+                sub = self.collectives_of(callee)
+                for k, v in sub.items():
+                    if k in acc:
+                        acc[k] += mult * v
+                    else:
+                        counts[k] = counts.get(k, 0.0) + mult * v
+        acc.update(counts)
+        self._memo_coll[comp_name] = acc
+        return acc
+
+    # ---- public ----
+
+    def analyze(self) -> dict:
+        if self.entry is None:
+            return {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+        coll = self.collectives_of(self.entry.name)
+        total = sum(v for k, v in coll.items() if not k.endswith("_count"))
+        return {
+            "flops": self.flops_of(self.entry.name),
+            "bytes": self.bytes_of(self.entry.name),
+            "collective_bytes": total,
+            "collectives": coll,
+        }
+
+
+def analyze_hlo(text: str) -> dict:
+    return HloCostModel(text).analyze()

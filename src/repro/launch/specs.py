@@ -1,0 +1,140 @@
+"""Abstract input construction (ShapeDtypeStruct — never allocated) and
+step-function builders for every (architecture x input shape) pair. Used by
+the multi-pod dry-run (deliverable e) and the roofline benchmark (g).
+
+  train_4k    -> train_step(state, batch)
+  prefill_32k -> prefill_step(params, tokens [, enc/embeds])
+  decode_32k  -> serve_step(params, cache, tokens[B, K+1])   (K=3: paper max)
+  long_500k   -> serve_step with a sliding-window (8192) variant for
+                 full-attention archs (DESIGN.md §5) — SSM/hybrid run native
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as sh
+from repro.models import transformer as T
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.training.train import make_train_step
+
+SPEC_K = 3           # paper's static-K ceiling; verification step = K+1
+LONG_WINDOW = 8192   # sliding-window variant used at long_500k
+CACHE_HEADROOM = 64
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """Window override: full-attention archs get the sliding-window variant
+    at long_500k (otherwise their KV cache would be 0.5M entries)."""
+    if shape.name != "long_500k":
+        return cfg.window
+    kinds = set(cfg.layer_kinds())
+    if kinds & {"A", "X"} and not cfg.layer_pattern and not cfg.window:
+        return LONG_WINDOW
+    return cfg.window
+
+
+# --------------------------------------------------------------------- #
+# Abstract batches
+# --------------------------------------------------------------------- #
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    dp = sh.data_axes(mesh)
+    batch: Dict[str, Any] = {}
+    shard: Dict[str, Any] = {}
+
+    def add(name, shp, dtype, spec):
+        batch[name] = sds(shp, dtype)
+        shard[name] = NamedSharding(mesh, spec)
+
+    if cfg.vision_stub:
+        # carve-out: precomputed patch/frame embeddings of the right shape
+        add("embeds", (b, s, cfg.d_model), cfg.dtype, P(dp, None, None))
+        add("rope_pos", (3, b, s), jnp.int32, P(None, dp, None))
+    else:
+        add("tokens", (b, s), jnp.int32, P(dp, None))
+    add("labels", (b, s), jnp.int32, P(dp, None))
+    add("mask", (b, s), jnp.float32, P(dp, None))
+    if cfg.is_encoder_decoder:
+        add("enc_out", (b, cfg.encoder_len, cfg.encoder_d_model), cfg.dtype,
+            P(dp, None, None))
+    return batch, shard
+
+
+def token_specs(cfg, mesh, b, t):
+    dp = sh.data_axes(mesh)
+    lead = dp if b % sh.axis_size(mesh, dp) == 0 else None
+    return sds((b, t), jnp.int32), NamedSharding(mesh, P(lead, None))
+
+
+# --------------------------------------------------------------------- #
+# Step builders: (fn, arg_specs, arg_shardings)
+# --------------------------------------------------------------------- #
+
+def build_train(cfg: ModelConfig, shape: InputShape, mesh):
+    init_state, train_step = make_train_step(cfg)
+    state_sds = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    state_shard = sh.param_shardings(cfg, state_sds, mesh)
+    batch_sds, batch_shard = train_batch_specs(cfg, shape, mesh)
+    return train_step, (state_sds, batch_sds), (state_shard, batch_shard)
+
+
+def build_prefill(cfg: ModelConfig, shape: InputShape, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    win = decode_window(cfg, shape)
+
+    def prefill_step(params, batch):
+        cache = T.init_cache(cfg, b, s + CACHE_HEADROOM, window=win)
+        logits, cache, _ = T.prefill(
+            cfg, params, batch.get("tokens"), cache,
+            embeds=batch.get("embeds"), rope_pos=batch.get("rope_pos"),
+            enc_out=batch.get("enc_out"), window=win, moe_exact=False)
+        return logits[:, -1], cache
+
+    params_sds = jax.eval_shape(
+        functools.partial(T.init_params, cfg), jax.random.PRNGKey(0))
+    params_shard = sh.param_shardings(cfg, params_sds, mesh)
+    batch_sds, batch_shard = train_batch_specs(cfg, shape, mesh)
+    for k in ("labels", "mask"):
+        batch_sds.pop(k), batch_shard.pop(k)
+    return prefill_step, (params_sds, batch_sds), (params_shard, batch_shard)
+
+
+def build_decode(cfg: ModelConfig, shape: InputShape, mesh, spec_k=SPEC_K):
+    b, s = shape.global_batch, shape.seq_len
+    win = decode_window(cfg, shape)
+    t = spec_k + 1
+
+    def serve_step(params, cache, tokens):
+        logits, new_cache, aux, _ = T.decode_step(cfg, params, cache, tokens,
+                                                  window=win)
+        return logits, new_cache
+
+    params_sds = jax.eval_shape(
+        functools.partial(T.init_params, cfg), jax.random.PRNGKey(0))
+    params_shard = sh.param_shardings(cfg, params_sds, mesh)
+    cache_sds = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, s + CACHE_HEADROOM, window=win))
+    cache_shard = sh.cache_shardings(cfg, cache_sds, mesh, b)
+    tok_sds, tok_shard = token_specs(cfg, mesh, b, t)
+    return serve_step, (params_sds, cache_sds, tok_sds), \
+        (params_shard, cache_shard, tok_shard)
+
+
+def build(cfg: ModelConfig, shape_name: str, mesh, spec_k=SPEC_K):
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    return build_decode(cfg, shape, mesh, spec_k=spec_k)

@@ -1,0 +1,63 @@
+"""Training launcher: runs train_step for any --arch on the local devices
+(reduced config on CPU) or lowers it against the production mesh
+(--dry-run delegates to dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b \
+        --reduced --steps 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.data import batch_iterator
+from repro.training import make_train_step
+from repro.training.optimizer import adamw
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b", choices=ALL_ARCHS)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params "
+          f"({cfg.active_param_count()/1e6:.1f}M active)")
+
+    init_state, step = make_train_step(cfg, optimizer=adamw(args.lr))
+    state = init_state(jax.random.PRNGKey(0))
+    step = jax.jit(step, donate_argnums=0)
+    it = batch_iterator("all-3", args.batch, args.seq,
+                        vocab=min(cfg.vocab_size, 512))
+    t0 = time.time()
+    for i in range(args.steps):
+        raw = next(it)
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        if cfg.is_encoder_decoder:
+            batch["enc_out"] = jnp.zeros(
+                (args.batch, cfg.encoder_len, cfg.encoder_d_model),
+                jnp.dtype(cfg.dtype))
+        if cfg.vision_stub:
+            batch["embeds"] = jnp.zeros(
+                (args.batch, args.seq, cfg.d_model), jnp.dtype(cfg.dtype))
+            batch.pop("tokens")
+        state, m = step(state, batch)
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model substrate: configs, layers, and the six architecture families."""
+
+from .config import ModelConfig, InputShape, INPUT_SHAPES

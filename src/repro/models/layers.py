@@ -1,0 +1,85 @@
+"""Shared primitive layers: norms, MLPs, embeddings. Pure functional JAX —
+params are plain dicts of jnp arrays; every layer has init_* and a matching
+apply function."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------- #
+
+def init_norm(cfg, dim, dtype):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def apply_norm(cfg, p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Feed-forward
+# --------------------------------------------------------------------- #
+
+def init_mlp(cfg, key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {
+            "w_gate": _dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": _dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": _dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": _dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+
+
+def apply_mlp(cfg, p, x):
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------- #
+# Embeddings / logits
+# --------------------------------------------------------------------- #
+
+def init_embed(cfg, key, dtype):
+    ks = jax.random.split(key, 2)
+    p = {"embedding": _dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(ks[1], (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def embed_tokens(p, tokens):
+    return p["embedding"][tokens]
+
+
+def unembed(cfg, p, x):
+    if cfg.tie_embeddings:
+        return x @ p["embedding"].T
+    return x @ p["unembed"]

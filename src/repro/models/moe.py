@@ -1,0 +1,173 @@
+"""Mixture-of-Experts layer: top-k router (+optional shared experts) and a
+capacity-based scatter/gather expert dispatch.
+
+Design notes (TPU adaptation, see DESIGN.md §3):
+  * Dispatch uses integer scatter/gather (zero-FLOP data movement) plus a
+    stacked-expert einsum whose FLOP count is E*C*d*F with
+    C = ceil(T*k/E * capacity_factor)  ==>  ~active FLOPs * capacity_factor.
+    This keeps the dry-run roofline honest about MoE sparsity (a one-hot
+    dispatch einsum would add a T*E*C*d term that swamps everything).
+  * The routed expert indices are also returned so (a) the serving engine can
+    feed *unique activated expert counts* to Cascade's cost model — the
+    paper's central quantity — and (b) the Pallas `moe_gmm` kernel path can
+    consume the identical routing decision.
+  * Verification steps (decode) use exact capacity C=T so no token is ever
+    dropped (drops would corrupt rejection sampling); training uses the
+    standard GShard capacity factor with drop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, init_mlp, apply_mlp
+
+
+def init_moe(cfg, key, dtype):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, e), dtype, scale=0.02),
+        "w_gate": _dense_init(ks[1], (e, d, f), dtype),
+        "w_up": _dense_init(ks[2], (e, d, f), dtype),
+        "w_down": _dense_init(ks[3], (e, f, d), dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(cfg, ks[4], d, f * cfg.num_shared_experts, dtype)
+    return p
+
+
+def route(cfg, p, x2d):
+    """x2d: [T,d] -> (weights [T,k], idx [T,k], probs [T,E])."""
+    logits = x2d.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    if cfg.router_score == "sigmoid":        # DeepSeek-V3 / Kimi-K2 style
+        scores = jax.nn.sigmoid(logits)
+        top, idx = jax.lax.top_k(scores, cfg.experts_per_token)
+        weights = top / (jnp.sum(top, -1, keepdims=True) + 1e-20)
+        probs = scores / (jnp.sum(scores, -1, keepdims=True) + 1e-20)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        top, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+        weights = top / (jnp.sum(top, -1, keepdims=True) + 1e-20)
+    return weights, idx, probs
+
+
+def load_balance_loss(cfg, probs, idx):
+    """Switch-Transformer auxiliary loss: E * sum_e f_e * P_e."""
+    e = cfg.num_experts
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)      # [T,k,E]
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=1), axis=0)  # [E]
+    frac_probs = jnp.mean(probs, axis=0)                     # [E]
+    return e * jnp.sum(frac_tokens * frac_probs) / cfg.experts_per_token
+
+
+def unique_expert_count(cfg, idx):
+    """Number of distinct experts activated by this batch of tokens — the
+    paper's data-movement driver (§2.4). idx: [T,k] -> scalar int."""
+    hits = jnp.zeros((cfg.num_experts,), jnp.int32).at[idx.reshape(-1)].add(1)
+    return jnp.sum(hits > 0)
+
+
+CAPACITY_FACTORS = {"train": 1.25, "serve": 2.0}
+
+
+def _capacity(cfg, n_tokens: int, policy: str) -> int:
+    """Tokens-per-expert buffer size.
+
+    "exact":  C = T — no drop is possible (top-k experts are distinct per
+              token); required for bit-exact speculative verification at
+              single-request scale (the paper's single-batch setting).
+    "train":  GShard capacity factor 1.25 (drops allowed, standard).
+    "serve":  factor 2.0 — for batched decode/prefill, where C = T would
+              make the dispatch buffer E x T x d (the §Perf kimi-decode
+              finding); drop probability at 2x expected load is negligible
+              and a dropped token only costs a skipped speculation."""
+    if policy == "exact":
+        return n_tokens
+    cf = CAPACITY_FACTORS[policy]
+    cap = int(n_tokens * cfg.experts_per_token * cf) // cfg.num_experts + 1
+    # never below k (tiny batches) and never above T (pointless)
+    return max(min(n_tokens, cap), min(n_tokens, cfg.experts_per_token))
+
+
+_EP_CACHE = {}
+
+
+def _ep_apply(cfg, mesh):
+    from repro.distributed.expert_parallel import make_expert_parallel_moe
+    key = (cfg.name, tuple(sorted(dict(mesh.shape).items())))
+    if key not in _EP_CACHE:
+        _EP_CACHE[key] = make_expert_parallel_moe(cfg, mesh)
+    return _EP_CACHE[key]
+
+
+def apply_moe(cfg, p, x2d, *, capacity_policy: str = "train"):
+    """x2d: [T,d] -> (y [T,d], aux dict with routing telemetry)."""
+    from repro.distributed.sharding import _CONTEXT_MESH, constrain, opt
+    t, d = x2d.shape
+    if opt("ep-a2a") and capacity_policy != "exact":
+        # §Perf/beyond-paper: explicit all-to-all expert parallelism
+        mesh = _CONTEXT_MESH[0]
+        if mesh is not None:
+            from repro.distributed.sharding import axis_size, data_axes
+            n_data = axis_size(mesh, data_axes(mesh))
+            if cfg.num_experts % n_data == 0 and t % n_data == 0:
+                y, aux = _ep_apply(cfg, mesh)(
+                    {k: p[k] for k in p}, x2d)
+                aux = dict(aux,
+                           unique_experts=jnp.sum(aux["unique_experts"]),
+                           dropped=jnp.sum(aux["dropped"]))
+                return y, aux
+    k, e = cfg.experts_per_token, cfg.num_experts
+    c = _capacity(cfg, t, capacity_policy)
+
+    weights, idx, probs = route(cfg, p, x2d)
+
+    # --- slot assignment: position of each (token, choice) inside its expert
+    flat_e = idx.reshape(-1)                                  # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # [T*k,E]
+    pos = jnp.cumsum(onehot, axis=0) * onehot                 # rank within expert
+    flat_p = jnp.sum(pos, axis=-1) - 1                        # [T*k], 0-based
+    keep = flat_p < c
+    flat_p = jnp.where(keep, flat_p, c)  # overflow rows scatter to a spill slot
+
+    # --- dispatch: scatter tokens into [E, C(+spill), d]
+    x_rep = jnp.repeat(x2d, k, axis=0)                        # [T*k,d]
+    disp = jnp.zeros((e, c + 1, d), x2d.dtype)
+    disp = disp.at[flat_e, flat_p].set(x_rep)
+    disp = disp[:, :c]                                        # drop spill slot
+    if opt("dispatch-shard"):
+        # §Perf: pin the dispatch buffer (experts over 'data') so GSPMD
+        # does not involuntarily replicate it through the scatter
+        disp = constrain(disp, "data", None, None)
+
+    # --- expert FFN (stacked einsum; FLOPs = E*C*d*F per matmul)
+    if "w_gate" in p and cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, p["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", disp, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", disp, p["w_up"]))
+    if opt("dispatch-shard"):
+        h = constrain(h, "data", None, "model")
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])          # [E,C,d]
+    if opt("dispatch-shard"):
+        out = constrain(out, "data", None, None)
+
+    # --- combine: gather each slot's output back to its token
+    pad = jnp.zeros((e, 1, d), out.dtype)
+    out = jnp.concatenate([out, pad], axis=1)                 # spill reads zeros
+    y_rep = out[flat_e, jnp.where(keep, flat_p, c)]           # [T*k,d]
+    w_flat = (weights.reshape(-1) * keep).astype(out.dtype)
+    y = jnp.sum((y_rep * w_flat[:, None]).reshape(t, k, d), axis=1)
+
+    if cfg.num_shared_experts:
+        y = y + apply_mlp(cfg, p["shared"], x2d)
+
+    aux = {
+        "lb_loss": load_balance_loss(cfg, probs, idx),
+        "expert_idx": idx,
+        "unique_experts": unique_expert_count(cfg, idx),
+        "dropped": jnp.sum(~keep),
+    }
+    return y, aux

@@ -1,0 +1,95 @@
+"""RecurrentGemma / Griffin recurrent block (arXiv:2402.19427).
+
+Block: x -> {branch1: linear -> causal conv1d -> RG-LRU} * gelu(branch2)
+          -> out projection.
+
+RG-LRU per channel:
+    r_t = sigmoid(x_t W_a + b_a)             (recurrence gate)
+    i_t = sigmoid(x_t W_x + b_x)             (input gate)
+    log a_t = -c * softplus(Lambda) * r_t    (c = 8)
+    h_t = exp(log a_t) * h_{t-1} + sqrt(1 - exp(2 log a_t)) * (i_t * x_t)
+
+The serial scan here is the oracle; repro.kernels.linear_scan provides the
+blocked associative-scan Pallas kernel for the same recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+RG_LRU_C = 8.0
+
+
+def init_rglru_block(cfg, key, dtype):
+    d, dr, cw = cfg.d_model, cfg.d_rnn, cfg.conv1d_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": _dense_init(ks[0], (d, dr), dtype),
+        "w_gate": _dense_init(ks[1], (d, dr), dtype),
+        "conv_w": _dense_init(ks[2], (cw, dr), dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": _dense_init(ks[3], (dr, dr), dtype),
+        "b_a": jnp.zeros((dr,), dtype),
+        "w_x": _dense_init(ks[4], (dr, dr), dtype),
+        "b_x": jnp.zeros((dr,), dtype),
+        # Lambda init so that a^c ~ uniform(0.9, 0.999) at r=1 (Griffin A.2)
+        "lam": (jax.random.uniform(ks[5], (dr,), jnp.float32, 0.9, 0.999)
+                ).astype(jnp.float32),
+        "w_out": _dense_init(ks[6], (dr, d), dtype),
+    }
+
+
+def causal_conv1d(p, x, conv_state, *, want_states: bool = False):
+    """Depthwise causal conv. x: [B,T,dr]; conv_state: [B,cw-1,dr] history.
+    Returns (y [B,T,dr], new_state [B,cw-1,dr], staged [T+1,B,cw-1,dr]|None)."""
+    cw = p["conv_w"].shape[0]
+    full = jnp.concatenate([conv_state, x], axis=1)          # [B,cw-1+T,dr]
+    t = x.shape[1]
+    y = sum(full[:, i:i + t] * p["conv_w"][i] for i in range(cw))
+    y = y + p["conv_b"]
+    new_state = full[:, -(cw - 1):] if cw > 1 else conv_state
+    staged = None
+    if want_states and cw > 1:
+        # conv history as of having consumed j of the T new tokens
+        staged = jnp.stack([full[:, j:j + cw - 1] for j in range(t + 1)], axis=0)
+    return y, new_state, staged
+
+
+def rg_lru(p, x, h0, *, want_states: bool = False):
+    """x: [B,T,dr], h0: [B,dr] -> (y [B,T,dr], h_last, states [T+1,B,dr]|None)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"].astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(-jnp.log(p["lam"])) * r   # [B,T,dr], <0
+    a = jnp.exp(log_a)
+    gated_x = i * xf
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+
+    def step(h, inp):
+        a_t, bx_t = inp
+        h_new = a_t * h + bx_t
+        return h_new, h_new
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(beta * gated_x, 1, 0))
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    states = None
+    if want_states:
+        states = jnp.concatenate([h0.astype(jnp.float32)[None], hs], axis=0)
+    return y, h_last, states
+
+
+def apply_rglru_block(cfg, p, x, state, *, want_states: bool = False):
+    """x: [B,T,d]; state: {"h": [B,dr], "conv": [B,cw-1,dr]}.
+    Returns (out [B,T,d], new_state, staged {"h": [T+1,B,dr]}|None)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u = x @ p["w_in"]
+    u, conv_state, conv_staged = causal_conv1d(p, u, state["conv"],
+                                               want_states=want_states)
+    y, h_last, hs = rg_lru(p, u, state["h"], want_states=want_states)
+    out = (y * gate) @ p["w_out"]
+    new_state = {"h": h_last, "conv": conv_state}
+    staged = {"h": hs, "conv": conv_staged} if want_states else None
+    return out, new_state, staged

@@ -1,0 +1,81 @@
+"""Rotary position embeddings: standard, ChatGLM 2-D, and Qwen2-VL M-RoPE.
+
+All functions operate on tensors shaped [..., seq, heads, head_dim] and take
+explicit integer position ids so the same code serves prefill (positions
+0..S-1) and speculative decode steps (positions L..L+K).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rotate_half_pairs(x):
+    """Rotate interleaved pairs (x0,x1) -> (-x1,x0) on the last dim."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    return jnp.stack([-x2, x1], axis=-1).reshape(x.shape)
+
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions [...,S] -> angles [...,S,dim//2]."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions[..., None].astype(jnp.float32) * inv_freq
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """Standard RoPE over the full head_dim. x: [B,S,H,D], positions: [B,S]."""
+    d = x.shape[-1]
+    ang = rope_angles(positions, d, theta)          # [B,S,d/2]
+    cos = jnp.repeat(jnp.cos(ang), 2, axis=-1)[:, :, None, :]
+    sin = jnp.repeat(jnp.sin(ang), 2, axis=-1)[:, :, None, :]
+    out = x.astype(jnp.float32) * cos + _rotate_half_pairs(x.astype(jnp.float32)) * sin
+    return out.astype(x.dtype)
+
+
+def apply_rope_2d(x, positions, theta: float = 10000.0):
+    """ChatGLM-style 2-D RoPE: rotate only the first half of head_dim,
+    leave the second half untouched (the '2d' scheme of GLM)."""
+    d = x.shape[-1]
+    half = d // 2
+    x_rot, x_pass = x[..., :half], x[..., half:]
+    ang = rope_angles(positions, half, theta)
+    cos = jnp.repeat(jnp.cos(ang), 2, axis=-1)[:, :, None, :]
+    sin = jnp.repeat(jnp.sin(ang), 2, axis=-1)[:, :, None, :]
+    rot = x_rot.astype(jnp.float32) * cos + _rotate_half_pairs(x_rot.astype(jnp.float32)) * sin
+    return jnp.concatenate([rot.astype(x.dtype), x_pass], axis=-1)
+
+
+def apply_mrope(x, positions_3d, sections, theta: float = 10000.0):
+    """Qwen2-VL multimodal RoPE. positions_3d: [3,B,S] (t,h,w ids);
+    `sections` splits head_dim//2 frequency slots among (t,h,w)."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    # angles per modality: [3,B,S,d/2]
+    ang = positions_3d[..., None].astype(jnp.float32) * inv_freq
+    # select which modality drives each frequency slot
+    sel = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])                                              # [d/2]
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang, 0, -1),                   # [B,S,d/2,3]
+        sel[None, None, :, None], axis=-1)[..., 0]  # [B,S,d/2]
+    cos = jnp.repeat(jnp.cos(ang), 2, axis=-1)[:, :, None, :]
+    sin = jnp.repeat(jnp.sin(ang), 2, axis=-1)[:, :, None, :]
+    out = x.astype(jnp.float32) * cos + _rotate_half_pairs(x.astype(jnp.float32)) * sin
+    return out.astype(x.dtype)
+
+
+def apply_positional(cfg, x, positions):
+    """Dispatch on cfg.rope_variant. `positions` is [B,S] int32, or [3,B,S]
+    for mrope."""
+    if cfg.rope_variant == "none":
+        return x
+    if cfg.rope_variant == "2d":
+        return apply_rope_2d(x, positions, cfg.rope_theta)
+    if cfg.rope_variant == "mrope":
+        if positions.ndim == 2:  # text-only fallback: same id on all three
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return apply_mrope(x, positions, cfg.mrope_sections, cfg.rope_theta)
+    return apply_rope(x, positions, cfg.rope_theta)

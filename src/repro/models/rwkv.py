@@ -1,0 +1,211 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free token mixing with
+data-dependent per-channel decay.
+
+Per head (size n), state S in R^{n_k x n_v}:
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(w0 + lora_w(x-shift-mix))) data-dependent (the Finch
+novelty vs RWKV-5's static decay).
+
+The pure-`lax.scan` implementation here is the oracle; the blocked Pallas
+kernel lives in repro.kernels.rwkv_scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+LORA_DIM = 32
+
+
+def init_time_mix(cfg, key, dtype):
+    d = cfg.d_model
+    h, n = cfg.rwkv_num_heads, cfg.rwkv_head_size
+    ks = jax.random.split(key, 16)
+    p = {
+        # token-shift mixing coefficients (static part) for x,w,k,v,r,g
+        "mu_x": jnp.zeros((d,), dtype),
+        "mu_w": jnp.zeros((d,), dtype), "mu_k": jnp.zeros((d,), dtype),
+        "mu_v": jnp.zeros((d,), dtype), "mu_r": jnp.zeros((d,), dtype),
+        "mu_g": jnp.zeros((d,), dtype),
+        # data-dependent mix loras (rank LORA_DIM), one per of w,k,v,r,g
+        "lora_a": _dense_init(ks[0], (5, d, LORA_DIM), dtype),
+        "lora_b": _dense_init(ks[1], (5, LORA_DIM, d), dtype),
+        # decay lora (deeper, per RWKV6) + base decay
+        "w0": (jnp.zeros((d,), jnp.float32) - 4.0).astype(dtype),
+        "wa": _dense_init(ks[2], (d, 2 * LORA_DIM), dtype),
+        "wb": _dense_init(ks[3], (2 * LORA_DIM, d), dtype),
+        # projections
+        "wr": _dense_init(ks[4], (d, d), dtype),
+        "wk": _dense_init(ks[5], (d, d), dtype),
+        "wv": _dense_init(ks[6], (d, d), dtype),
+        "wg": _dense_init(ks[7], (d, d), dtype),
+        "wo": _dense_init(ks[8], (d, d), dtype),
+        # per-channel bonus
+        "u": (jax.random.normal(ks[9], (h, n), jnp.float32) * 0.1).astype(dtype),
+        # group-norm over heads
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+    }
+    return p
+
+
+def init_channel_mix(cfg, key, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dtype), "mu_r": jnp.zeros((d,), dtype),
+        "wk": _dense_init(ks[0], (d, cfg.d_ff), dtype),
+        "wv": _dense_init(ks[1], (cfg.d_ff, d), dtype),
+        "wr": _dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def _group_norm(x, scale, bias, n_heads, eps=1e-5):
+    """x: [..., d] normalized per head group."""
+    shp = x.shape
+    xh = x.reshape(shp[:-1] + (n_heads, shp[-1] // n_heads)).astype(jnp.float32)
+    mu = jnp.mean(xh, -1, keepdims=True)
+    var = jnp.var(xh, -1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    out = xh.reshape(shp) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _mix_inputs(p, x, x_prev):
+    """RWKV6 data-dependent token-shift. x,x_prev: [B,T,d].
+    Returns xw,xk,xv,xr,xg each [B,T,d]."""
+    dx = x_prev - x
+    xx = x + dx * p["mu_x"]
+    # 5 low-rank data-dependent deltas
+    delta = jnp.einsum("btd,sdr->sbtr", jnp.tanh(xx), p["lora_a"])
+    delta = jnp.einsum("sbtr,srd->sbtd", delta, p["lora_b"])  # [5,B,T,d]
+    mus = jnp.stack([p["mu_w"], p["mu_k"], p["mu_v"], p["mu_r"], p["mu_g"]])
+    mixed = x[None] + dx[None] * (mus[:, None, None, :] + delta)
+    return tuple(mixed[i] for i in range(5))
+
+
+def wkv_scan(r, k, v, w, u, s0):
+    """The serial WKV recurrence (oracle).
+    r,k,v: [B,T,H,N]; w: [B,T,H,N] decay in (0,1); u: [H,N]; s0: [B,H,N,N].
+    Returns y [B,T,H,N], states [T+1,B,H,N,N] (for speculative rollback)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # [B,H,N]
+        kv = k_t[..., :, None] * v_t[..., None, :]            # [B,H,Nk,Nv]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[..., :, None] * kv)
+        s_new = w_t[..., :, None] * s + kv
+        return s_new, (y, s_new)
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))   # [T,B,H,N]
+    s_last, (ys, states) = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                # [B,T,H,N]
+    states = jnp.concatenate([s0[None], states], axis=0)      # [T+1,...]
+    return y, states
+
+
+def wkv_chunked(r, k, v, w, u, s0, chunk: int = 32):
+    """Chunked WKV (§Perf 'chunked-wkv'): materialize the N x N state once
+    per chunk instead of once per token, turning the serial per-step
+    rank-1 recurrence into three MXU matmuls per chunk (the standard
+    linear-attention chunking, adapted to RWKV-6's per-channel decay).
+
+    For chunk step i (0-based), with cum_i = sum_{l<=i} log w_l:
+        y_i = (r_i * e^{cum_{i-1}})^T S_0                      (inter-chunk)
+            + sum_{j<i} [ (r_i e^{cum_{i-1}}) . (k_j e^{-cum_j}) ] v_j
+            + ((r_i*u) . k_i) v_i                              (bonus diag)
+        S_next = diag(e^{cum_last}) S_0 + sum_j (k_j e^{cum_last-cum_j}) v_j^T
+
+    exp(-cum) is clamped at e^25: when a channel has decayed by more than
+    e^-25 within one chunk its contribution is below f32 noise anyway."""
+    b, t, h, n = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+
+    def reshape(x_):
+        return x_.reshape(b, nc, chunk, h, n)
+
+    r_, k_, v_ = reshape(r), reshape(k), reshape(v)
+    logw = jnp.log(jnp.maximum(reshape(w), 1e-38))
+    cum = jnp.cumsum(logw, axis=2)                       # inclusive
+    cum_prev = cum - logw                                # exclusive
+    cum_last = cum[:, :, -1:]                            # [B,nc,1,H,N]
+
+    r_t = r_ * jnp.exp(cum_prev)                         # decay from start
+    k_t = k_ * jnp.exp(jnp.minimum(-cum, 25.0))          # inverse decay
+    k_end = k_ * jnp.exp(cum_last - cum)                 # decay to chunk end
+
+    # intra-chunk pairwise scores, strictly causal + bonus diagonal
+    scores = jnp.einsum("bcihn,bcjhn->bchij", r_t, k_t)  # [B,nc,H,C,C]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bcihn,hn,bcihn->bchi", r_, u, k_)
+    y_intra = (jnp.einsum("bchij,bcjhn->bcihn", scores, v_)
+               + diag[..., None].transpose(0, 1, 3, 2, 4) * v_)
+
+    # inter-chunk: sequential scan over per-chunk state updates
+    kv_chunk = jnp.einsum("bcihk,bcihv->bchkv", k_end, v_)   # [B,nc,H,N,N]
+    a_chunk = jnp.exp(cum_last[:, :, 0])                     # [B,nc,H,N]
+
+    def step(s, inp):
+        a_c, kv_c, r_c = inp          # [B,H,Nk], [B,H,Nk,Nv], [B,C,H,Nk]
+        y_inter = jnp.einsum("bihk,bhkv->bihv", r_c, s)
+        s_new = a_c[..., None] * s + kv_c
+        return s_new, y_inter
+
+    xs = (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(kv_chunk, 1, 0),
+          jnp.moveaxis(r_t, 1, 0))
+    s_last, y_inter = jax.lax.scan(step, s0, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    return y.reshape(b, t, h, n), s_last
+
+
+def time_mix(cfg, p, x, x_prev_tok, s0, *, want_states: bool = False):
+    """x: [B,T,d]; x_prev_tok: [B,d] last token of the previous chunk.
+    Returns (out [B,T,d], last_x [B,d], s_last [B,H,N,N], states or None)."""
+    b, t, d = x.shape
+    h, n = cfg.rwkv_num_heads, cfg.rwkv_head_size
+    x_prev = jnp.concatenate([x_prev_tok[:, None, :], x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _mix_inputs(p, x, x_prev)
+
+    r = (xr @ p["wr"]).reshape(b, t, h, n)
+    k = (xk @ p["wk"]).reshape(b, t, h, n)
+    v = (xv @ p["wv"]).reshape(b, t, h, n)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay
+    ww = p["w0"].astype(jnp.float32) + (jnp.tanh(xw @ p["wa"]) @ p["wb"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww)).reshape(b, t, h, n)
+
+    from repro.distributed.sharding import opt as _perf_opt
+    if _perf_opt("chunked-wkv") and not want_states and t > 1:
+        chunk = 32 if t % 32 == 0 else (8 if t % 8 == 0 else 1)
+        if chunk > 1:
+            y, s_last_c = wkv_chunked(
+                r.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), w, p["u"].astype(jnp.float32),
+                s0.astype(jnp.float32), chunk=chunk)
+            y = y.reshape(b, t, d).astype(x.dtype)
+            y = _group_norm(y, p["gn_scale"], p["gn_bias"], h)
+            out = (y * g) @ p["wo"]
+            return out, x[:, -1], s_last_c, None
+    y, states = wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), w,
+                         p["u"].astype(jnp.float32),
+                         s0.astype(jnp.float32))
+    y = y.reshape(b, t, d).astype(x.dtype)
+    y = _group_norm(y, p["gn_scale"], p["gn_bias"], h)
+    out = (y * g) @ p["wo"]
+    s_last = states[-1]
+    return out, x[:, -1], s_last, (states if want_states else None)
+
+
+def channel_mix(cfg, p, x, x_prev_tok):
+    """RWKV6 FFN with token shift. Returns (out, last_x)."""
+    x_prev = jnp.concatenate([x_prev_tok[:, None, :], x[:, :-1]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"]), x[:, -1]

@@ -1,0 +1,552 @@
+"""Model assembly for all six families with three entry points:
+
+    train_forward(cfg, params, tokens, ...)    -> logits, aux
+    prefill(cfg, params, tokens, cache, ...)   -> logits, cache, aux
+    decode_step(cfg, params, cache, tokens,..) -> logits, cache, aux
+
+Uniform-kind architectures (dense / moe / ssm / audio / vlm) stack per-layer
+params with a leading L dim and run `lax.scan` over layers, keeping compile
+time O(1) in depth (the 61-layer Kimi-K2 config must compile on one CPU core
+with 512 host devices for the dry-run). The hybrid pattern architecture
+(RecurrentGemma "RRA") uses a python loop over its 38 heterogeneous layers.
+
+KV caches are ring buffers: ring size = full length for full attention, or
+window + SPEC_PAD for sliding-window variants, so `long_500k` decode on a
+windowed model allocates O(window), not O(seq). Speculative rollback is a
+pure metadata operation for attention caches and an indexed select into
+staged states for recurrent caches (`rollback_cache`)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import layers as L
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv as rwkv_mod
+
+SPEC_PAD = 16  # ring-buffer slack so speculative writes never clobber window
+
+
+# ===================================================================== #
+# Parameter init
+# ===================================================================== #
+
+def _init_block(cfg, kind: str, key, dtype):
+    ks = jax.random.split(key, 6)
+    if kind == "W":  # rwkv
+        return {
+            "ln1": L.init_norm(cfg, cfg.d_model, dtype),
+            "tmix": rwkv_mod.init_time_mix(cfg, ks[0], dtype),
+            "ln2": L.init_norm(cfg, cfg.d_model, dtype),
+            "cmix": rwkv_mod.init_channel_mix(cfg, ks[1], dtype),
+        }
+    if kind == "R":  # rg-lru recurrent block + ffn
+        return {
+            "ln1": L.init_norm(cfg, cfg.d_model, dtype),
+            "rec": rglru_mod.init_rglru_block(cfg, ks[0], dtype),
+            "ln2": L.init_norm(cfg, cfg.d_model, dtype),
+            "ffn": L.init_mlp(cfg, ks[1], cfg.d_model, cfg.d_ff, dtype),
+        }
+    # attention-bearing kinds
+    p = {"ln1": L.init_norm(cfg, cfg.d_model, dtype)}
+    p["attn"] = (mla_mod.init_mla(cfg, ks[0], dtype) if cfg.use_mla
+                 else attn_mod.init_attention(cfg, ks[0], dtype))
+    if kind == "X":
+        p["lnx"] = L.init_norm(cfg, cfg.d_model, dtype)
+        p["xattn"] = attn_mod.init_cross_attention(cfg, ks[1], dtype)
+    p["ln2"] = L.init_norm(cfg, cfg.d_model, dtype)
+    if cfg.is_moe:
+        p["moe"] = moe_mod.init_moe(cfg, ks[2], dtype)
+    else:
+        p["ffn"] = L.init_mlp(cfg, ks[2], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    kinds = cfg.layer_kinds()
+    k_embed, k_blocks = jax.random.split(key)
+    params: Dict[str, Any] = {"embed": L.init_embed(cfg, k_embed, dtype)}
+    if len(set(kinds)) == 1:  # uniform: stacked params + scan
+        keys = jax.random.split(k_blocks, cfg.num_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: _init_block(cfg, kinds[0], k, dtype))(keys)
+    else:
+        keys = jax.random.split(k_blocks, cfg.num_layers)
+        params["blocks_list"] = tuple(
+            _init_block(cfg, kind, k, dtype) for kind, k in zip(kinds, keys))
+    params["final_norm"] = L.init_norm(cfg, cfg.d_model, dtype)
+    return params
+
+
+# ===================================================================== #
+# Cache
+# ===================================================================== #
+
+def ring_size(cfg, max_len: int, window: int) -> int:
+    """Ring slots for a sliding-window cache: `window + SPEC_PAD` live slots
+    (modulus) so writing position p only ever evicts p-window-SPEC_PAD —
+    outside the window for every in-flight query — plus SPEC_PAD spill slots
+    so a contiguous dynamic-update-slice write never wraps."""
+    if window and window > 0:
+        return min(max_len, window + 2 * SPEC_PAD)
+    return max_len
+
+
+def init_cache(cfg, batch: int, max_len: int, *, window: int = 0,
+               dtype=None):
+    """Allocate an empty cache for `batch` sequences of up to `max_len`
+    tokens. `window` (0=full) selects sliding-window attention and sizes the
+    ring buffer accordingly."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kinds = cfg.layer_kinds()
+    cache: Dict[str, Any] = {
+        "length": jnp.zeros((), jnp.int32),
+    }
+    n_attn = sum(1 for k in kinds if k in ("A", "X"))
+    n_rec = sum(1 for k in kinds if k == "R")
+    n_rwkv = sum(1 for k in kinds if k == "W")
+
+    if n_attn:
+        w_eff = window if window else (cfg.window or 0)
+        r = ring_size(cfg, max_len, w_eff)
+        cache["pos"] = jnp.full((batch, r), -1, jnp.int32)
+        if cfg.use_mla:
+            cache["ckv"] = jnp.zeros((n_attn, batch, r, cfg.kv_lora_rank), dtype)
+            cache["krope"] = jnp.zeros((n_attn, batch, r, cfg.qk_rope_dim), dtype)
+        else:
+            hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            cache["k"] = jnp.zeros((n_attn, batch, r, hkv, hd), dtype)
+            cache["v"] = jnp.zeros((n_attn, batch, r, hkv, hd), dtype)
+        if cfg.is_encoder_decoder:
+            cache["enc_k"] = jnp.zeros(
+                (n_attn, batch, cfg.encoder_len, cfg.num_heads, cfg.head_dim), dtype)
+            cache["enc_v"] = jnp.zeros_like(cache["enc_k"])
+    if n_rwkv:
+        h, n = cfg.rwkv_num_heads, cfg.rwkv_head_size
+        cache["wkv"] = jnp.zeros((n_rwkv, batch, h, n, n), jnp.float32)
+        cache["sx_att"] = jnp.zeros((n_rwkv, batch, cfg.d_model), dtype)
+        cache["sx_ffn"] = jnp.zeros((n_rwkv, batch, cfg.d_model), dtype)
+    if n_rec:
+        cache["h"] = jnp.zeros((n_rec, batch, cfg.d_rnn), jnp.float32)
+        cache["conv"] = jnp.zeros(
+            (n_rec, batch, cfg.conv1d_width - 1, cfg.d_rnn), dtype)
+    return cache
+
+
+def cache_slots(cache, positions_1d):
+    """Map absolute positions [T] to ring slots [T]."""
+    r = cache["pos"].shape[1]
+    return positions_1d % r
+
+
+def rollback_cache(cfg, cache, staged, n_accept, length_before):
+    """Rewind the cache to `length_before + n_accept` after verification.
+
+    Attention caches: metadata-only (invalidate pos of rejected slots).
+    Recurrent caches: select the staged state at index n_accept."""
+    new_len = length_before + n_accept
+    cache = dict(cache)
+    cache["length"] = jnp.asarray(new_len, jnp.int32)
+    if "pos" in cache:
+        cache["pos"] = jnp.where(cache["pos"] >= new_len, -1, cache["pos"])
+    if staged:
+        for name in ("wkv", "sx_att", "sx_ffn", "h", "conv"):
+            if name in staged and staged[name] is not None:
+                # staged[name]: [L, T+1, ...] -> pick index n_accept
+                cache[name] = jnp.take(staged[name], n_accept, axis=1).astype(
+                    cache[name].dtype)
+    return cache
+
+
+# ===================================================================== #
+# Block application
+# ===================================================================== #
+
+def _write_ring(buf_l, vals, wctx):
+    """Write T new entries into a cache buffer [B,R,...].
+
+    Two modes (wctx from _forward):
+      * slots scatter (baseline): buf.at[:, slots].set(vals)
+      * contiguous dynamic_update_slice (§Perf "dus-cache"): in-place, no
+        SPMD resharding copy — the scatter path triggers XLA "involuntary
+        full rematerialization" of the whole stacked cache per layer."""
+    vals = vals.astype(buf_l.dtype)
+    if wctx.get("offset") is not None:
+        starts = (jnp.zeros((), jnp.int32), wctx["offset"]) + tuple(
+            jnp.zeros((), jnp.int32) for _ in range(buf_l.ndim - 2))
+        return jax.lax.dynamic_update_slice(buf_l, vals, starts)
+    return buf_l.at[:, wctx["slots"]].set(vals)
+
+
+def _attn_block(cfg, p, x, lc, ctx, kind):
+    """Attention(+cross)(+ffn/moe) block.
+
+    lc: layer cache dict ({"k","v"} or {"ckv","krope"}, + enc_*) or None.
+    ctx: dict with mode, seq_pos [B,T], rope_pos, cache_pos [B,R] (updated),
+         slots [T], window, enc_out.
+    Returns (x, new_layer_cache, aux)."""
+    mode = ctx["mode"]
+    window = ctx["window"]
+    seq_pos, rope_pos = ctx["seq_pos"], ctx["rope_pos"]
+    h = L.apply_norm(cfg, p["ln1"], x)
+    new_lc = {}
+    if cfg.use_mla:
+        if mode == "decode":
+            ckv_new, krope_new = mla_mod.latent_kv(cfg, p["attn"], h, seq_pos)
+            ckv = _write_ring(lc["ckv"], ckv_new, ctx)
+            krope = _write_ring(lc["krope"], krope_new, ctx)
+            out = mla_mod.mla_absorbed(cfg, p["attn"], h, seq_pos, ckv, krope,
+                                       ctx["cache_pos"], window=window)
+            new_lc.update(ckv=ckv, krope=krope)
+        else:
+            out, (ckv_new, krope_new) = mla_mod.mla_full(cfg, p["attn"], h, seq_pos)
+            if mode == "prefill":
+                t_w = ctx["t_w"]
+                new_lc["ckv"] = _write_ring(lc["ckv"], ckv_new[:, -t_w:],
+                                            ctx)
+                new_lc["krope"] = _write_ring(lc["krope"],
+                                              krope_new[:, -t_w:], ctx)
+    else:
+        q, k, v = attn_mod.qkv(cfg, p["attn"], h, rope_pos)
+        if mode == "decode":
+            kb = _write_ring(lc["k"], k, ctx)
+            vb = _write_ring(lc["v"], v, ctx)
+            out = attn_mod.attend(q, kb.astype(q.dtype), vb.astype(q.dtype),
+                                  seq_pos, ctx["cache_pos"],
+                                  window=window, causal=True)
+            new_lc.update(k=kb, v=vb)
+        else:
+            out = attn_mod.attend(q, k, v, seq_pos, seq_pos,
+                                  window=window, causal=True)
+            if mode == "prefill":
+                t_w = ctx["t_w"]
+                new_lc["k"] = _write_ring(lc["k"], k[:, -t_w:], ctx)
+                new_lc["v"] = _write_ring(lc["v"], v[:, -t_w:], ctx)
+        b, t = out.shape[:2]
+        out = out.reshape(b, t, -1) @ p["attn"]["wo"]
+    x = x + out
+
+    if kind == "X":  # cross-attention to (stub) encoder states
+        hx = L.apply_norm(cfg, p["lnx"], x)
+        if mode == "prefill":
+            enc_k, enc_v = attn_mod.encode_cross_kv(cfg, p["xattn"],
+                                                    ctx["enc_out"])
+            new_lc["enc_k"], new_lc["enc_v"] = enc_k, enc_v
+        elif mode == "decode":
+            enc_k, enc_v = lc["enc_k"], lc["enc_v"]
+            new_lc["enc_k"], new_lc["enc_v"] = enc_k, enc_v
+        else:  # train
+            enc_k, enc_v = attn_mod.encode_cross_kv(cfg, p["xattn"],
+                                                    ctx["enc_out"])
+        x = x + attn_mod.cross_attention(cfg, p["xattn"], hx,
+                                         enc_k.astype(hx.dtype),
+                                         enc_v.astype(hx.dtype))
+
+    h2 = L.apply_norm(cfg, p["ln2"], x)
+    aux = {}
+    if cfg.is_moe:
+        b, t, d = h2.shape
+        y2d, moe_aux = moe_mod.apply_moe(cfg, p["moe"], h2.reshape(b * t, d),
+                                         capacity_policy=ctx["moe_policy"])
+        x = x + y2d.reshape(b, t, d)
+        aux["lb_loss"] = moe_aux["lb_loss"]
+        aux["unique_experts"] = moe_aux["unique_experts"]
+    else:
+        x = x + L.apply_mlp(cfg, p["ffn"], h2)
+        aux["lb_loss"] = jnp.zeros((), jnp.float32)
+        aux["unique_experts"] = jnp.zeros((), jnp.int32)
+    return x, new_lc, aux
+
+
+def _rwkv_block(cfg, p, x, lc, ctx):
+    mode = ctx["mode"]
+    want = mode == "decode"
+    h = L.apply_norm(cfg, p["ln1"], x)
+    if mode == "train":
+        b = x.shape[0]
+        sx_att = jnp.zeros((b, cfg.d_model), x.dtype)
+        sx_ffn = jnp.zeros((b, cfg.d_model), x.dtype)
+        s0 = jnp.zeros((b, cfg.rwkv_num_heads, cfg.rwkv_head_size,
+                        cfg.rwkv_head_size), jnp.float32)
+    else:
+        sx_att, sx_ffn, s0 = lc["sx_att"], lc["sx_ffn"], lc["wkv"]
+    out, last_x, s_last, states = rwkv_mod.time_mix(
+        cfg, p["tmix"], h, sx_att.astype(h.dtype), s0, want_states=want)
+    x = x + out
+    h2 = L.apply_norm(cfg, p["ln2"], x)
+    out2, last_x2 = rwkv_mod.channel_mix(cfg, p["cmix"], h2,
+                                         sx_ffn.astype(h2.dtype))
+    x = x + out2
+    new_lc = {"wkv": s_last, "sx_att": last_x, "sx_ffn": last_x2}
+    staged = None
+    if want:
+        # staged token-shift states: value after consuming j tokens
+        sx_att_staged = jnp.concatenate(
+            [sx_att.astype(h.dtype)[None], jnp.moveaxis(h, 1, 0)], axis=0)
+        sx_ffn_staged = jnp.concatenate(
+            [sx_ffn.astype(h2.dtype)[None], jnp.moveaxis(h2, 1, 0)], axis=0)
+        staged = {"wkv": states, "sx_att": sx_att_staged,
+                  "sx_ffn": sx_ffn_staged}
+    return x, new_lc, staged
+
+
+def _rec_block(cfg, p, x, lc, ctx):
+    mode = ctx["mode"]
+    want = mode == "decode"
+    h = L.apply_norm(cfg, p["ln1"], x)
+    if mode == "train":
+        b = x.shape[0]
+        state = {"h": jnp.zeros((b, cfg.d_rnn), jnp.float32),
+                 "conv": jnp.zeros((b, cfg.conv1d_width - 1, cfg.d_rnn),
+                                   x.dtype)}
+    else:
+        state = {"h": lc["h"], "conv": lc["conv"]}
+    out, new_state, staged = rglru_mod.apply_rglru_block(
+        cfg, p["rec"], h, state, want_states=want)
+    x = x + out
+    h2 = L.apply_norm(cfg, p["ln2"], x)
+    x = x + L.apply_mlp(cfg, p["ffn"], h2)
+    return x, new_state, staged
+
+
+# ===================================================================== #
+# Forward passes
+# ===================================================================== #
+
+def _sinusoid(positions, dim):
+    """[B,T] -> [B,T,dim] sinusoidal embedding (whisper decoder positions)."""
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed_inputs(cfg, params, tokens, embeds, seq_pos):
+    if embeds is None:
+        embeds = L.embed_tokens(params["embed"], tokens)
+    if cfg.is_encoder_decoder:  # whisper-style learned/sinusoid positions
+        embeds = embeds + _sinusoid(seq_pos, cfg.d_model).astype(embeds.dtype)
+    return embeds
+
+
+def _layer_cache_slice(cfg, cache, mode):
+    """Split the stacked cache into per-kind stacked dicts for scan xs."""
+    kinds = cfg.layer_kinds()
+    kind = kinds[0]
+    if mode == "train" and kind != "X":
+        return None
+    names = {
+        "A": ["k", "v"] if not cfg.use_mla else ["ckv", "krope"],
+        "X": ["k", "v", "enc_k", "enc_v"],
+        "W": ["wkv", "sx_att", "sx_ffn"],
+    }[kind]
+    if mode == "train":
+        return None
+    return {n: cache[n] for n in names if n in cache}
+
+
+def _run_uniform(cfg, params, x, cache, ctx):
+    """lax.scan over stacked homogeneous layers."""
+    kind = cfg.layer_kinds()[0]
+    mode = ctx["mode"]
+    lc_stack = _layer_cache_slice(cfg, cache, mode) if cache is not None else None
+
+    def body(carry, xs):
+        h = carry
+        from repro.distributed.sharding import constrain as _con, opt as _po
+        if _po("residual-shard"):
+            # §Perf: 2-D activation sharding — remat-stored residuals live
+            # (batch over data) x (d_model over model) instead of replicated
+            # over the model axis
+            h = _con(h, ("pod", "data"), None, "model")
+        p_l, lc_l = xs
+        if kind == "W":
+            h, new_lc, staged = _rwkv_block(cfg, p_l, h, lc_l, ctx)
+            aux = {}
+        else:
+            h, new_lc, aux = _attn_block(cfg, p_l, h, lc_l, ctx, kind)
+            staged = None
+        ys = {"cache": new_lc, "staged": staged, "aux": aux}
+        ys = {k: v for k, v in ys.items() if v}
+        return h, ys
+
+    if mode == "train":
+        body = jax.checkpoint(body)
+    xs = (params["blocks"], lc_stack)
+    x, ys = jax.lax.scan(body, x, xs)
+    return x, ys
+
+
+def _run_pattern(cfg, params, x, cache, ctx):
+    """Python loop over heterogeneous layers (hybrid RecurrentGemma)."""
+    kinds = cfg.layer_kinds()
+    mode = ctx["mode"]
+    i_rec = i_attn = 0
+    new_rec = {"h": [], "conv": []}
+    new_attn = {"k": [], "v": []}
+    staged_rec = {"h": [], "conv": []}
+    for kind, p_l in zip(kinds, params["blocks_list"]):
+        if kind == "R":
+            lc = (None if cache is None or mode == "train" else
+                  {"h": cache["h"][i_rec], "conv": cache["conv"][i_rec]})
+            if mode == "train":
+                x = jax.checkpoint(
+                    lambda p, h: _rec_block(cfg, p, h, None, ctx)[0])(p_l, x)
+                st = staged = None
+            else:
+                x, st, staged = _rec_block(cfg, p_l, x, lc, ctx)
+                new_rec["h"].append(st["h"])
+                new_rec["conv"].append(st["conv"])
+            if staged is not None:
+                staged_rec["h"].append(staged["h"])
+                staged_rec["conv"].append(staged["conv"])
+            i_rec += 1
+        else:  # local attention layer
+            lc = (None if cache is None or mode == "train" else
+                  {"k": cache["k"][i_attn], "v": cache["v"][i_attn]})
+            lctx = dict(ctx, window=cfg.local_window)
+            if mode == "train":
+                x = jax.checkpoint(
+                    lambda p, h: _attn_block(cfg, p, h, None, lctx, "A")[0])(p_l, x)
+            else:
+                x, new_lc, _ = _attn_block(cfg, p_l, x, lc, lctx, "A")
+                new_attn["k"].append(new_lc["k"])
+                new_attn["v"].append(new_lc["v"])
+            i_attn += 1
+    ys = {}
+    if mode != "train":
+        ys["cache"] = {}
+        if new_rec["h"]:
+            ys["cache"]["h"] = jnp.stack(new_rec["h"])
+            ys["cache"]["conv"] = jnp.stack(new_rec["conv"])
+        if new_attn["k"]:
+            ys["cache"]["k"] = jnp.stack(new_attn["k"])
+            ys["cache"]["v"] = jnp.stack(new_attn["v"])
+    if staged_rec["h"]:
+        ys["staged"] = {"h": jnp.stack(staged_rec["h"]),
+                        "conv": jnp.stack(staged_rec["conv"])}
+    return x, ys
+
+
+def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
+             window, enc_out, moe_exact):
+    x = _embed_inputs(cfg, params, tokens, embeds, seq_pos)
+    n_inflight = x.shape[0] * x.shape[1]
+    if not moe_exact:
+        moe_policy = "train"
+    elif n_inflight <= 64:
+        moe_policy = "exact"     # single-request verification: bit-exact
+    else:
+        from repro.distributed.sharding import opt as _opt
+        moe_policy = "serve" if _opt("serve-capacity") else "exact"
+    from repro.distributed.sharding import opt as _perf_opt
+    ctx = {"mode": mode, "seq_pos": seq_pos, "rope_pos": rope_pos,
+           "window": window, "enc_out": enc_out, "moe_policy": moe_policy,
+           "cache_pos": None if cache is None else cache.get("pos"),
+           "slots": None, "offset": None, "t_w": 0}
+    if cache is not None and "pos" in cache:
+        t = x.shape[1]
+        r = cache["pos"].shape[1]
+        # effective ring modulus: ring caches (window + SPEC_PAD slots) wrap
+        # at `window` so a contiguous write of <= SPEC_PAD entries never
+        # splits; full caches never wrap.
+        is_ring = window and r == ring_size(cfg, 1 << 62, window)
+        m_eff = (r - SPEC_PAD) if is_ring else r
+        t_w = min(t, m_eff)
+        ctx["t_w"] = t_w
+        write_pos = seq_pos[0, -t_w:]          # positions shared across batch
+        if _perf_opt("dus-cache") and mode == "decode":
+            ctx["offset"] = write_pos[0] % m_eff
+        else:
+            # slot mapping uses the same modulus as the DUS path so mixed
+            # prefill(scatter)/decode(DUS) runs agree on slot placement
+            ctx["slots"] = write_pos % m_eff
+        if mode in ("prefill", "decode"):
+            if ctx["offset"] is not None:
+                new_pos = jax.lax.dynamic_update_slice(
+                    cache["pos"], seq_pos[:, -t_w:],
+                    (jnp.zeros((), jnp.int32), ctx["offset"]))
+            else:
+                new_pos = cache["pos"].at[:, ctx["slots"]].set(
+                    seq_pos[:, -t_w:])
+            ctx["cache_pos"] = new_pos
+    uniform = len(set(cfg.layer_kinds())) == 1
+    run = _run_uniform if uniform else _run_pattern
+    x, ys = run(cfg, params, x, cache, ctx)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+
+    aux = {}
+    if "aux" in ys:
+        aux["lb_loss"] = jnp.mean(ys["aux"]["lb_loss"])
+        aux["unique_experts"] = ys["aux"]["unique_experts"]  # [L]
+    staged = ys.get("staged")
+
+    new_cache = None
+    if cache is not None and mode in ("prefill", "decode"):
+        new_cache = dict(cache)
+        new_cache.update(ys.get("cache", {}))
+        if "pos" in cache:
+            new_cache["pos"] = ctx["cache_pos"]
+        new_cache["length"] = seq_pos[0, -1] + 1
+    return logits, new_cache, aux, staged
+
+
+# --------------------------------------------------------------------- #
+# Public entry points
+# --------------------------------------------------------------------- #
+
+def train_forward(cfg, params, tokens, *, embeds=None, seq_pos=None,
+                  rope_pos=None, window=0, enc_out=None, moe_exact=False):
+    b, t = tokens.shape[:2] if tokens is not None else embeds.shape[:2]
+    if seq_pos is None:
+        seq_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    if rope_pos is None:
+        rope_pos = seq_pos
+    window = window or cfg.window
+    logits, _, aux, _ = _forward(cfg, params, tokens, embeds=embeds,
+                                 cache=None, mode="train", seq_pos=seq_pos,
+                                 rope_pos=rope_pos, window=window,
+                                 enc_out=enc_out, moe_exact=moe_exact)
+    return logits, aux
+
+
+def prefill(cfg, params, tokens, cache, *, embeds=None, rope_pos=None,
+            enc_out=None, window: int = 0, moe_exact: bool = True):
+    b, t = tokens.shape[:2] if tokens is not None else embeds.shape[:2]
+    seq_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    if rope_pos is None:
+        rope_pos = seq_pos
+    window = window or cfg.window
+    logits, cache, aux, _ = _forward(cfg, params, tokens, embeds=embeds,
+                                     cache=cache, mode="prefill",
+                                     seq_pos=seq_pos, rope_pos=rope_pos,
+                                     window=window, enc_out=enc_out,
+                                     moe_exact=moe_exact)
+    return logits, cache, aux
+
+
+def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
+                window: int = 0, moe_exact: bool = True):
+    """Verify/decode T tokens starting at cache['length'].
+    Returns (logits [B,T,V], new_cache, aux, staged)."""
+    b, t = tokens.shape[:2] if tokens is not None else embeds.shape[:2]
+    start = cache["length"]
+    seq_pos = start + jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    if rope_pos is None:
+        rope_pos = seq_pos
+    window = window or cfg.window
+    logits, cache, aux, staged = _forward(cfg, params, tokens, embeds=embeds,
+                                          cache=cache, mode="decode",
+                                          seq_pos=seq_pos, rope_pos=rope_pos,
+                                          window=window, enc_out=None,
+                                          moe_exact=moe_exact)
+    return logits, cache, aux, staged

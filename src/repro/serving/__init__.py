@@ -1,0 +1,7 @@
+"""Serving substrate: engine, drafters, rejection sampler, scheduler."""
+
+from .drafter import Drafter, DraftModelDrafter, NGramDrafter
+from .engine import GenerationResult, ServingEngine
+from .sampler import greedy_verify, rejection_sample
+from .scheduler import Request, Scheduler
+from .telemetry import IterationTelemetry, RequestTelemetry

@@ -1,0 +1,131 @@
+"""Drafters: n-gram prompt-lookup (the paper's main technique, model-free)
+and a learned draft-model drafter (EAGLE stand-in — the paper's EAGLE case
+study uses a feature-level drafter available only for Mixtral; we implement
+the general draft-model form with the same engine interface).
+
+A drafter proposes up to K tokens given the token history. It may return
+fewer than K (n-gram returns none when no match exists) — the engine treats
+the actual proposal length as this iteration's effective K."""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+class Drafter:
+    """Interface."""
+    #: active params fetched per drafted token (cost-model input); 0 => free
+    active_params: int = 0
+
+    def reset(self) -> None:
+        pass
+
+    def propose(self, history: List[int], k: int, rng=None
+                ) -> Tuple[List[int], Optional[np.ndarray]]:
+        """Return (draft_tokens, draft_probs or None). Stochastic drafters
+        sample from `rng` (np.random.Generator); deterministic drafters
+        return draft_probs=None (point-mass q)."""
+        raise NotImplementedError
+
+
+class NGramDrafter(Drafter):
+    """Prompt-lookup decoding (Saxena '23 [38]): find the longest recent
+    n-gram suffix that occurred earlier in the history and propose the
+    tokens that followed it. Deterministic — draft_probs is None."""
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def propose(self, history: List[int], k: int, rng=None):
+        if k <= 0 or len(history) < self.min_ngram + 1:
+            return [], None
+        h = np.asarray(history)
+        n_hist = len(h)
+        for n in range(min(self.max_ngram, n_hist - 1), self.min_ngram - 1, -1):
+            suffix = h[-n:]
+            # vectorized rolling-window match: windows[i] == h[i:i+n]
+            windows = np.lib.stride_tricks.sliding_window_view(
+                h[:-1], n)                       # exclude the suffix itself
+            hits = np.nonzero((windows == suffix).all(axis=1))[0]
+            # latest earlier occurrence with a non-empty continuation
+            hits = hits[hits + n < n_hist]
+            if hits.size:
+                start = int(hits[-1])
+                cont = h[start + n:start + n + k]
+                if cont.size:
+                    return [int(c) for c in cont], None
+        return [], None
+
+
+class DraftModelDrafter(Drafter):
+    """A small autoregressive target-family-agnostic draft model with its own
+    KV cache, kept in sync with the request's token history. Drafted tokens
+    are rolled back after each proposal (only externally-committed tokens
+    stay in the drafter's cache)."""
+
+    def __init__(self, cfg, params, max_len: int = 4096,
+                 temperature: float = 1.0):
+        from repro.models import transformer as T
+        self._T = T
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.temperature = temperature
+        self.active_params = cfg.active_param_count()
+        self._decode = jax.jit(
+            lambda p, c, t: T.decode_step(cfg, p, c, t)[:2])
+        self.reset()
+
+    def reset(self):
+        self.cache = None
+        self.synced = 0  # tokens of history already in the drafter cache
+        self._last_logits = None
+
+    def _ensure_cache(self, batch: int = 1):
+        if self.cache is None:
+            self.cache = self._T.init_cache(self.cfg, batch, self.max_len)
+
+    def _feed(self, tokens: List[int]):
+        """Advance the drafter cache over committed tokens."""
+        if not tokens:
+            return
+        self._ensure_cache()
+        arr = jnp.asarray(tokens, jnp.int32)[None, :]
+        logits, self.cache = self._decode(self.params, self.cache, arr)
+        self._last_logits = np.asarray(logits[0, -1])
+        self.synced += len(tokens)
+
+    def propose(self, history: List[int], k: int, rng=None):
+        self._feed(history[self.synced:])
+        if k <= 0 or self._last_logits is None:
+            return [], None
+        greedy = self.temperature <= 0 or rng is None
+        drafts: List[int] = []
+        probs: List[np.ndarray] = []
+        logits = self._last_logits
+        cache = self.cache
+        for _ in range(k):
+            if greedy:
+                tok = int(np.argmax(logits))
+            else:
+                x = np.asarray(logits, np.float64) / self.temperature
+                x -= x.max()
+                p = np.exp(x)
+                p /= p.sum()
+                tok = int(rng.choice(len(p), p=p))
+                probs.append(p.astype(np.float32))
+            drafts.append(tok)
+            lo, cache = self._decode(self.params,
+                                     cache, jnp.asarray([[tok]], jnp.int32))
+            logits = np.asarray(lo[0, -1])
+        # roll back: drafted tokens are speculative; keep only synced prefix
+        # (attention cache rollback is metadata-only)
+        self.cache = self._T.rollback_cache(self.cfg, cache, None, 0,
+                                            self.synced)
+        return drafts, (np.stack(probs) if probs else None)

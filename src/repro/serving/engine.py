@@ -1,0 +1,184 @@
+"""Serving engine: the vLLM-analogue decode loop with speculative decoding
+and Cascade in the loop.
+
+Per iteration (paper Fig. 14's spec-decode worker):
+    1. controller.next_k() -> K            (Cascade / static policy)
+    2. drafter.propose(history, K)         (n-gram or draft model)
+    3. decode_step over [last_token, d_0..d_{K-1}]   (verification)
+    4. rejection sample -> accepted prefix + next token
+    5. rollback cache to the accepted length
+    6. controller.observe(tokens, t_iter, breakdown)
+
+Timing source is pluggable: 'wall' uses the host clock (meaningful on real
+accelerators); 'model' uses the deterministic TPU-v5e data-movement cost
+model driven by the *measured* unique-expert activations of this iteration
+(DESIGN.md §4 — the honest CPU-container strategy)."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model as cm
+from repro.core.controller import CascadeController, StaticKController
+from repro.models import transformer as T
+
+from .drafter import Drafter
+from .sampler import greedy_verify, logits_to_probs, rejection_sample, sample_token
+from .telemetry import IterationTelemetry, RequestTelemetry
+
+
+@dataclass
+class GenerationResult:
+    tokens: List[int]
+    telemetry: RequestTelemetry
+
+
+class ServingEngine:
+    """Single-request-at-a-time serving (the paper's single-batch,
+    latency-bound setting)."""
+
+    def __init__(self, cfg, params, drafter: Drafter, *,
+                 controller_factory: Callable = None,
+                 clock: str = "model",
+                 hw: cm.Hardware = cm.TPU_V5E,
+                 affinity: float = 0.0,
+                 window: int = 0,
+                 max_len: int = 2048,
+                 temperature: float = 1.0,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.drafter = drafter
+        self.controller_factory = controller_factory or (
+            lambda: CascadeController())
+        self.clock = clock
+        self.hw = hw
+        self.affinity = affinity
+        self.window = window
+        self.max_len = max_len
+        self.temperature = temperature
+        self.rng = np.random.default_rng(seed)
+
+        self._prefill = jax.jit(
+            lambda p, t, c, e: T.prefill(cfg, p, t, c, window=window,
+                                         enc_out=e))
+        self._decode = jax.jit(
+            lambda p, c, t: T.decode_step(cfg, p, c, t, window=window))
+
+    # ------------------------------------------------------------------ #
+
+    def _iter_time(self, n_tokens: int, context_len: int,
+                   unique_experts: Optional[float], wall: float) -> float:
+        """Virtual (cost-model) or wall-clock verification time."""
+        if self.clock == "wall":
+            return wall
+        r = cm.iteration_time(self.cfg, self.hw, n_tokens, context_len,
+                              unique_experts=unique_experts,
+                              affinity=self.affinity, window=self.window)
+        return r["t_iter"]
+
+    def _draft_time(self, k: int) -> float:
+        return cm.draft_time(self.hw, k, self.drafter.active_params)
+
+    # ------------------------------------------------------------------ #
+
+    def generate(self, prompt: List[int], max_new: int = 128, *,
+                 controller=None, request_id: str = "", task: str = "",
+                 stop_token: Optional[int] = None,
+                 enc_out=None) -> GenerationResult:
+        cfg = self.cfg
+        controller = controller or self.controller_factory()
+        self.drafter.reset()
+        tel = RequestTelemetry(request_id=request_id, task=task,
+                               prompt_len=len(prompt))
+
+        cache = T.init_cache(cfg, 1, self.max_len, window=self.window)
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        t0 = time.perf_counter()
+        logits, cache, _ = self._prefill(self.params, toks, cache, enc_out)
+        logits = np.asarray(logits[0, -1], np.float32)
+        tel.t_prefill = time.perf_counter() - t0
+
+        history = list(prompt)
+        # first output token comes from the prefill logits
+        last_tok = self._sample(logits)
+        out: List[int] = [last_tok]
+        history.append(last_tok)
+
+        it = 0
+        while len(out) < max_new:
+            k_req = controller.next_k()
+            t0 = time.perf_counter()
+            drafts, draft_probs = self.drafter.propose(history, k_req,
+                                                       rng=self.rng)
+            wall_draft = time.perf_counter() - t0
+            k_eff = len(drafts)
+
+            step_toks = jnp.asarray([ [last_tok] + drafts ], jnp.int32)
+            len_before = int(cache["length"])
+            t1 = time.perf_counter()
+            lo, new_cache, aux, staged = self._decode(self.params, cache,
+                                                      step_toks)
+            lo = np.asarray(lo[0], np.float32)           # [K+1, V]
+            wall_verify = time.perf_counter() - t1
+
+            t2 = time.perf_counter()
+            if self.temperature <= 0:
+                res = greedy_verify(lo, drafts)
+            else:
+                probs = np.asarray(
+                    logits_to_probs(jnp.asarray(lo), self.temperature))
+                res = rejection_sample(self.rng, probs, drafts, draft_probs)
+            wall_sample = time.perf_counter() - t2
+
+            n_keep = 1 + res.n_accepted           # last_tok + accepted drafts
+            cache = T.rollback_cache(cfg, new_cache, staged, n_keep,
+                                     len_before)
+            emitted = res.accepted + [res.next_token]
+            out.extend(emitted)
+            history.extend(emitted)
+            last_tok = res.next_token
+
+            uniq = None
+            if "unique_experts" in aux and cfg.is_moe:
+                uniq = float(np.mean(np.asarray(aux["unique_experts"])))
+            t_verify = self._iter_time(k_eff + 1, len_before, uniq,
+                                       wall_verify)
+            t_draft = (wall_draft if self.clock == "wall"
+                       else self._draft_time(k_eff))
+            t_sample = (wall_sample if self.clock == "wall"
+                        else cm.sample_time(k_eff))
+            t_iter = t_draft + t_verify + t_sample
+
+            controller.observe(len(emitted), t_iter, t_draft=t_draft,
+                               t_verify=t_verify, t_sample=t_sample,
+                               k=k_eff if k_req > 0 else 0)
+            tel.iterations.append(IterationTelemetry(
+                iteration=it, k_requested=k_req, k_drafted=k_eff,
+                tokens_emitted=len(emitted), t_iter=t_iter, t_draft=t_draft,
+                t_verify=t_verify, t_sample=t_sample,
+                unique_experts=uniq or 0.0, context_len=len_before,
+                phase=getattr(controller, "phase", ""),
+                utility=controller.utility()))
+            it += 1
+            if stop_token is not None and res.next_token == stop_token:
+                break
+            if len(history) + 16 >= self.max_len:
+                break
+        return GenerationResult(out[:max_new], tel)
+
+    # ------------------------------------------------------------------ #
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.temperature <= 0:
+            return int(np.argmax(logits))
+        probs = np.asarray(logits_to_probs(jnp.asarray(logits),
+                                           self.temperature))
+        return sample_token(self.rng, probs)

@@ -1,0 +1,58 @@
+"""Request scheduler: a FIFO queue of heterogeneous requests served
+sequentially — the paper's single-batch, latency-critical serving setting.
+Mixed workloads (code+math etc.) are interleaved streams of task-tagged
+requests, matching the paper's §3 'mixed' workloads."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, List, Optional
+
+from .engine import GenerationResult, ServingEngine
+
+
+@dataclass
+class Request:
+    request_id: str
+    prompt: list
+    max_new: int = 128
+    task: str = ""
+    enc_out: object = None
+
+
+@dataclass
+class Scheduler:
+    engine: ServingEngine
+    controller_factory: Optional[Callable] = None
+    share_controller_across_requests: bool = False
+
+    _shared_controller: object = None
+    results: List[GenerationResult] = field(default_factory=list)
+
+    def run(self, requests: Iterable[Request]) -> List[GenerationResult]:
+        for req in requests:
+            ctl = None
+            if self.controller_factory is not None:
+                if self.share_controller_across_requests:
+                    if self._shared_controller is None:
+                        self._shared_controller = self.controller_factory()
+                    ctl = self._shared_controller
+                else:
+                    ctl = self.controller_factory()
+            res = self.engine.generate(req.prompt, req.max_new,
+                                       controller=ctl,
+                                       request_id=req.request_id,
+                                       task=req.task, enc_out=req.enc_out)
+            self.results.append(res)
+        return self.results
+
+    # -- aggregate figures of merit (paper §3) -------------------------- #
+
+    def tokens_per_second(self) -> float:
+        toks = sum(r.telemetry.output_tokens for r in self.results)
+        t = sum(r.telemetry.decode_time for r in self.results)
+        return toks / t if t else 0.0
+
+    def mean_tpot(self) -> float:
+        tps = self.tokens_per_second()
+        return 1.0 / tps if tps else float("inf")

@@ -1,0 +1,64 @@
+"""Per-iteration serving telemetry: the measurement substrate Cascade's
+utility analyzer feeds on (the paper's 'utility analysis telemetry', §6)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class IterationTelemetry:
+    iteration: int
+    k_requested: int           # controller's K
+    k_drafted: int             # tokens the drafter actually proposed
+    tokens_emitted: int        # accepted + 1
+    t_iter: float              # total iteration seconds (virtual or wall)
+    t_draft: float
+    t_verify: float
+    t_sample: float
+    unique_experts: float = 0.0   # mean per layer (MoE only)
+    context_len: int = 0
+    phase: str = ""            # cascade phase when the iteration ran
+    utility: float = 0.0       # analyzer's running utility after observe
+
+
+@dataclass
+class RequestTelemetry:
+    request_id: str = ""
+    task: str = ""
+    prompt_len: int = 0
+    iterations: List[IterationTelemetry] = field(default_factory=list)
+    t_prefill: float = 0.0
+
+    # ------------------------------------------------------------------ #
+
+    @property
+    def output_tokens(self) -> int:
+        return sum(it.tokens_emitted for it in self.iterations)
+
+    @property
+    def decode_time(self) -> float:
+        return sum(it.t_iter for it in self.iterations)
+
+    @property
+    def tpot(self) -> float:
+        """Time per output token (paper's figure of merit)."""
+        n = self.output_tokens
+        return self.decode_time / n if n else float("inf")
+
+    @property
+    def etr(self) -> float:
+        its = self.iterations
+        return self.output_tokens / len(its) if its else 0.0
+
+    def breakdown(self):
+        its = self.iterations
+        if not its:
+            return {}
+        return {
+            "draft": sum(i.t_draft for i in its),
+            "verify": sum(i.t_verify for i in its),
+            "sample": sum(i.t_sample for i in its),
+            "total": self.decode_time,
+        }

@@ -1,0 +1,3 @@
+from .optimizer import (adafactor, adamw, apply_updates, clip_by_global_norm,
+                        global_norm, make_optimizer, warmup_cosine)
+from .train import cross_entropy, loss_fn, make_train_step

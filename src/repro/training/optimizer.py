@@ -1,0 +1,181 @@
+"""Optimizers from scratch (no optax in this environment): AdamW and
+Adafactor. Adafactor exists because Adam's per-parameter m,v for the 1T-param
+Kimi-K2 config needs ~8 TB of optimizer state — beyond the assigned meshes —
+while Adafactor's factored second moment is sublinear (DESIGN.md §6)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Any
+
+
+class _Out(NamedTuple):
+    """Marker for per-leaf multi-value returns inside tree_map (params may
+    legitimately contain plain tuples — blocks_list — so unpacking must key
+    on this type, not on tuple)."""
+    u: Any
+    a: Any
+    b: Any
+
+
+def _split3(out):
+    is_leaf = lambda x: isinstance(x, _Out)  # noqa: E731
+    return (jax.tree.map(lambda o: o.u, out, is_leaf=is_leaf),
+            jax.tree.map(lambda o: o.a, out, is_leaf=is_leaf),
+            jax.tree.map(lambda o: o.b, out, is_leaf=is_leaf))
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+# --------------------------------------------------------------------- #
+# Schedules
+# --------------------------------------------------------------------- #
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# --------------------------------------------------------------------- #
+# AdamW
+# --------------------------------------------------------------------- #
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32),
+                        {"m": zeros, "v": jax.tree.map(jnp.copy, zeros)})
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        b1t = 1 - b1 ** step.astype(jnp.float32)
+        b2t = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / b1t
+            vh = v / b2t
+            u = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return _Out((-lr_t * u).astype(p.dtype), m, v)
+
+        out = jax.tree.map(upd, grads, state.inner["m"], state.inner["v"],
+                           params)
+        updates, m, v = _split3(out)
+        return updates, OptState(step, {"m": m, "v": v})
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------- #
+# Adafactor (Shazeer & Stern '18), factored second moment
+# --------------------------------------------------------------------- #
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def make(p):
+            if _factored(p.shape):
+                row = jnp.zeros(p.shape[:-1], jnp.float32)
+                col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"row": row, "col": col}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(make, params,
+                                     is_leaf=lambda x: hasattr(x, "shape")))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "row" in s:
+                row = beta * s["row"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                col = beta * s["col"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                row_mean = jnp.mean(row, axis=-1, keepdims=True)
+                r = (row / jnp.maximum(row_mean, eps))[..., None]
+                u = g * jax.lax.rsqrt(jnp.maximum(r * col[..., None, :], eps))
+                new_s = {"row": row, "col": col}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return _Out((-lr_t * u).astype(p.dtype), new_s, None)
+
+        def map_states(fn, g_tree, s_tree, p_tree):
+            # state leaves are {"row","col"} / {"v"} dicts aligned with params
+            if isinstance(s_tree, dict) and ("row" in s_tree or "v" in s_tree):
+                return fn(g_tree, s_tree, p_tree)
+            if isinstance(s_tree, dict):
+                return {k: map_states(fn, g_tree[k], s_tree[k], p_tree[k])
+                        for k in s_tree}
+            if isinstance(s_tree, (list, tuple)):
+                return type(s_tree)(map_states(fn, g, st, pp) for g, st, pp
+                                    in zip(g_tree, s_tree, p_tree))
+            return fn(g_tree, s_tree, p_tree)
+
+        out = map_states(upd, grads, state.inner, params)
+        updates, new_inner, _ = _split3(out)
+        return updates, OptState(step, new_inner)
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    return adamw(lr, **kw)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm

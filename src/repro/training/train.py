@@ -1,0 +1,73 @@
+"""Training substrate: loss, train-step builder (grad, clip, optimizer),
+usable both for the example ~100M runs on CPU and as the `train_step` the
+multi-pod dry-run lowers for the train_4k input shape."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+from .optimizer import (Optimizer, apply_updates, clip_by_global_norm,
+                        make_optimizer, warmup_cosine)
+
+LB_LOSS_COEF = 0.01  # MoE load-balance auxiliary loss weight
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits [B,S,V], labels [B,S] -> scalar mean NLL."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(cfg, params, batch, *, window: int = 0):
+    """batch: {"tokens": [B,S], "labels": [B,S], optional "mask", "embeds",
+    "enc_out", "rope_pos"}."""
+    logits, aux = T.train_forward(
+        cfg, params, batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        rope_pos=batch.get("rope_pos"),
+        enc_out=batch.get("enc_out"),
+        window=window)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    lb = aux.get("lb_loss", jnp.zeros((), jnp.float32))
+    loss = ce + LB_LOSS_COEF * lb
+    return loss, {"ce": ce, "lb": lb}
+
+
+def make_train_step(cfg, optimizer: Optional[Optimizer] = None, *,
+                    window: int = 0, max_grad_norm: float = 1.0):
+    """Returns (init_state, train_step).
+
+    train_step(state, batch) -> (state, metrics); state = (params, opt_state).
+    The returned train_step is what launch/dryrun.py lowers for train_4k."""
+    if optimizer is None:
+        optimizer = make_optimizer(cfg.optimizer,
+                                   warmup_cosine(3e-4, 100, 10_000))
+
+    def init_state(key):
+        params = T.init_params(cfg, key)
+        return params, optimizer.init(params)
+
+    def train_step(state, batch):
+        params, opt_state = state
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, window=window), has_aux=True
+        )(params)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "ce": parts["ce"], "lb": parts["lb"],
+                   "grad_norm": gnorm}
+        return (params, opt_state), metrics
+
+    return init_state, train_step

@@ -1,0 +1,66 @@
+"""Deliverable-artifact consistency: if the dry-run matrices have been run
+(experiments/dryrun/), every (arch x shape x mesh) record must be ok with
+sane telemetry. Skipped when artifacts are absent (fresh checkout)."""
+
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS
+from repro.models.config import INPUT_SHAPES
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def _records(mesh):
+    paths = glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))
+    return [json.load(open(p)) for p in paths]
+
+
+@pytest.mark.parametrize("mesh,devices", [("16x16", 256), ("2x16x16", 512)])
+def test_dryrun_matrix_complete_and_ok(mesh, devices):
+    if not os.path.isdir(DRYRUN_DIR):
+        pytest.skip("dry-run artifacts not generated")
+    recs = _records(mesh)
+    if not recs:
+        pytest.skip(f"no {mesh} artifacts")
+    by_key = {(r.get("arch"), r.get("shape")): r for r in recs}
+    missing = [(a, s) for a in ASSIGNED_ARCHS for s in INPUT_SHAPES
+               if (a.replace(".", "-"), s) not in
+               {(k[0].replace(".", "-"), k[1]) for k in by_key}]
+    assert not missing, f"missing combos: {missing}"
+    for r in recs:
+        assert r.get("ok"), (r.get("arch"), r.get("shape"), r.get("error"))
+        assert r["devices"] == devices
+        ta = r.get("trip_aware")
+        if ta:  # multi-pod artifacts may predate the analyzer; single must have it
+            assert ta["flops_per_device"] > 0
+            assert ta["bytes_per_device"] > 0
+
+
+def test_multi_pod_shards_per_device_work():
+    """The pod axis must genuinely shard: per-device FLOPs at 2x16x16 are
+    ~half of 16x16 for the batch-sharded shapes."""
+    if not os.path.isdir(DRYRUN_DIR):
+        pytest.skip("dry-run artifacts not generated")
+    single = {(r["arch"], r["shape"]): r for r in _records("16x16")
+              if r.get("ok")}
+    multi = {(r["arch"], r["shape"]): r for r in _records("2x16x16")
+             if r.get("ok")}
+    if not single or not multi:
+        pytest.skip("need both meshes")
+    checked = 0
+    for key, s in single.items():
+        m = multi.get(key)
+        if m is None or key[1] == "long_500k":  # batch=1: pod can't shard it
+            continue
+        fs = s.get("trip_aware", {}).get("flops_per_device") or \
+            s["flops_per_device"]
+        fm = m.get("trip_aware", {}).get("flops_per_device") or \
+            m["flops_per_device"]
+        assert fm < fs * 0.8, (key, fs, fm)
+        checked += 1
+    assert checked >= 10

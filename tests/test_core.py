@@ -1,0 +1,290 @@
+"""Cascade core: utility math (Theorem 4.2), manager FSM behaviour
+(disable / back-off / hill-climb / early exits), and cost-model properties.
+Property-based tests use hypothesis."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CascadeConfig, CascadeController, IterationRecord,
+                        SpeculationManager, UtilityAnalyzer, TPU_V5E,
+                        expected_unique_experts, iteration_bytes,
+                        iteration_time)
+from repro.core.manager import BASELINE, SET, TEST
+from repro.configs import get_config
+
+
+# ===================================================================== #
+# Theorem 4.2: t_spec = t_base / U
+# ===================================================================== #
+
+@settings(max_examples=200, deadline=None)
+@given(etr=st.floats(1.0, 8.0), cost=st.floats(0.2, 5.0),
+       t_base=st.floats(1e-4, 1.0))
+def test_theorem_4_2(etr, cost, t_base):
+    """TPOT under speculation equals TPOT_base / utility, exactly."""
+    t_iter_spec = t_base * cost
+    tpot_spec = t_iter_spec / etr
+    utility = etr / cost
+    assert math.isclose(tpot_spec, t_base / utility, rel_tol=1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(tokens=st.lists(st.integers(1, 8), min_size=8, max_size=40),
+       cost=st.floats(0.5, 3.0))
+def test_analyzer_utility_equals_measured_speedup(tokens, cost):
+    """Windowed analyzer utility must equal the measured TPOT ratio when
+    ETR/cost are stationary (the empirical Thm 4.2 check)."""
+    t_base = 1.0
+    an = UtilityAnalyzer(window=len(tokens) + 8)
+    for _ in range(4):
+        an.observe(IterationRecord(k=0, tokens=1, t_iter=t_base))
+    for n in tokens:
+        an.observe(IterationRecord(k=3, tokens=n, t_iter=t_base * cost))
+    etr = sum(tokens) / len(tokens)
+    u = an.utility(n=len(tokens), k=3)
+    tpot_spec = (t_base * cost) / etr
+    assert math.isclose(u, t_base / tpot_spec, rel_tol=1e-6)
+
+
+# ===================================================================== #
+# Manager FSM
+# ===================================================================== #
+
+def drive(mgr, k_to_util, iters, t_base=1.0):
+    """Drive the manager with a deterministic utility landscape:
+    k -> (etr, cost) chosen so utility(k) = k_to_util(k)."""
+    seq = []
+    for _ in range(iters):
+        k = mgr.next_k()
+        if k == 0:
+            mgr.observe(IterationRecord(k=0, tokens=1, t_iter=t_base))
+        else:
+            u = k_to_util(k)
+            cost = 2.0
+            toks = max(1, round(u * cost))
+            # recompute cost so utility is exact despite integer tokens
+            cost = toks / u
+            mgr.observe(IterationRecord(k=k, tokens=toks,
+                                        t_iter=t_base * cost))
+        seq.append((k, mgr.phase))
+    return seq
+
+
+def test_manager_disables_when_utility_below_one():
+    mgr = SpeculationManager(cfg=CascadeConfig())
+    drive(mgr, lambda k: 0.5, 40)
+    # after baseline+test it must park at K=0 in set phases
+    ks = [mgr.next_k()]
+    assert mgr.phase == SET
+    assert ks[0] == 0
+
+
+def test_manager_backoff_doubles_set_length():
+    cfg = CascadeConfig()
+    mgr = SpeculationManager(cfg=cfg)
+    lens = []
+    for _ in range(400):
+        k = mgr.next_k()
+        was_set = mgr.phase == SET
+        drive(mgr, lambda k: 0.4, 1)
+        if mgr.phase == SET and not was_set:
+            lens.append(mgr._set_len_now)
+    assert len(lens) >= 3
+    assert lens[1] >= lens[0] and lens[2] >= lens[1]  # monotone growth
+    assert lens[-1] <= cfg.max_set_len
+    assert any(b == 2 * a for a, b in zip(lens, lens[1:]))
+
+
+def test_manager_no_backoff_flag():
+    cfg = CascadeConfig(enable_backoff=False)
+    mgr = SpeculationManager(cfg=cfg)
+    drive(mgr, lambda k: 0.4, 300)
+    assert mgr._set_len_now == cfg.set_len
+
+
+def test_hillclimb_finds_peak():
+    """Utility peaked at k=5: hill-climbing should adopt k near 5 for the
+    set phase."""
+    peak = lambda k: 2.0 - 0.3 * abs(k - 5)  # noqa: E731
+    cfg = CascadeConfig(k_start=3, k_max=8)
+    mgr = SpeculationManager(cfg=cfg)
+    chosen = []
+    for _ in range(300):
+        k = mgr.next_k()
+        if mgr.phase == SET:
+            chosen.append(k)
+        drive(mgr, peak, 1)
+    assert chosen, "never reached a set phase"
+    # most set phases should sit at the peak +/- 1
+    close = sum(1 for k in chosen if abs(k - 5) <= 1)
+    assert close / len(chosen) > 0.5, chosen
+
+
+def test_hillclimb_early_exit_on_convergence():
+    cfg = CascadeConfig()
+    mgr = SpeculationManager(cfg=cfg)
+    # flat utility: trials converge within 10% -> exit after 2 trials
+    drive(mgr, lambda k: 1.5, cfg.baseline_iters)  # baseline
+    n_trials = 0
+    while mgr.phase == TEST:
+        n_trials += 1
+        drive(mgr, lambda k: 1.5, cfg.trial_len)
+        assert n_trials <= cfg.max_trials
+    assert n_trials <= 2
+
+
+def test_static_mode_fig18_baseline():
+    cfg = CascadeConfig(enable_disable=False)
+    mgr = SpeculationManager(cfg=cfg)
+    drive(mgr, lambda k: 0.5, cfg.baseline_iters + 5)
+    assert mgr.next_k() == cfg.k_start  # static K, never disables
+
+
+def test_k_always_in_range():
+    cfg = CascadeConfig(k_max=6)
+    mgr = SpeculationManager(cfg=cfg)
+    rngs = np.random.default_rng(3)
+    for _ in range(500):
+        k = mgr.next_k()
+        assert 0 <= k <= cfg.k_max
+        u = float(rngs.uniform(0.3, 2.5))
+        drive(mgr, lambda kk: u, 1)
+
+
+# ===================================================================== #
+# Cost model
+# ===================================================================== #
+
+@settings(max_examples=100, deadline=None)
+@given(e=st.integers(2, 512), k=st.integers(1, 16), t=st.integers(1, 16),
+       aff=st.floats(0.0, 1.0))
+def test_expected_unique_experts_bounds(e, k, t, aff):
+    k = min(k, e)
+    u = expected_unique_experts(e, k, t, aff)
+    assert k - 1e-9 <= u <= min(e, k * t) + 1e-6
+    # monotone in t at fixed affinity
+    assert u <= expected_unique_experts(e, k, t + 1, aff) + 1e-9
+
+
+def test_unique_experts_matches_paper_example():
+    """Paper §2.4: Mixtral at K=7 (8 tokens, top-2 of 8) activates >7 unique
+    experts on average under uniform routing (~3.5x data movement)."""
+    u = expected_unique_experts(8, 2, 8, affinity=0.0)
+    assert 7.0 < u < 8.0
+
+
+def test_iteration_time_moe_cost_grows_with_inflight_tokens():
+    cfg = get_config("mixtral-8x7b")
+    t1 = iteration_time(cfg, TPU_V5E, 1, 1024, affinity=0.0)["t_iter"]
+    t4 = iteration_time(cfg, TPU_V5E, 4, 1024, affinity=0.0)["t_iter"]
+    t8 = iteration_time(cfg, TPU_V5E, 8, 1024, affinity=0.0)["t_iter"]
+    assert t1 < t4 < t8
+    # paper: 2-3x verification overhead in the K=3..7 range
+    assert 1.5 < t8 / t1 < 4.0
+
+
+def test_iteration_time_dense_cost_flat():
+    """Dense models re-read all weights regardless of token count: the
+    paper's 'verification is free' baseline."""
+    cfg = get_config("stablelm-1.6b")
+    t1 = iteration_time(cfg, TPU_V5E, 1, 1024)["t_iter"]
+    t8 = iteration_time(cfg, TPU_V5E, 8, 1024)["t_iter"]
+    assert t8 / t1 < 1.05
+
+
+def test_iteration_bytes_mla_cache_small():
+    ds = get_config("deepseek-v2-236b")
+    b = iteration_bytes(ds, 1, 32768)
+    # MLA latent cache read per layer is (512+64)*2 bytes/token
+    assert b["kv"] == pytest.approx(
+        32768 * (512 + 64) * 2 * ds.num_layers, rel=0.01)
+
+
+def test_cost_model_k_prior():
+    """Beyond-paper: the analytic K prior must be conservative for
+    low-affinity MoEs and aggressive for dense models."""
+    from repro.core.cost_model import suggest_k_start
+    from repro.core import cascade_for_model
+    mixtral = get_config("mixtral-8x7b")
+    dense = get_config("stablelm-1.6b")
+    k_moe = suggest_k_start(mixtral, affinity=0.0, accept_rate=0.5)
+    k_dense = suggest_k_start(dense, affinity=0.0, accept_rate=0.5)
+    assert k_dense >= k_moe
+    assert k_dense >= 5       # dense verification ~free -> speculate deep
+    assert 1 <= k_moe <= 4    # MoE expert-activation curve caps it
+    ctl = cascade_for_model(mixtral)
+    assert ctl.config.k_start == k_moe
+
+
+def test_slo_constrained_cascade():
+    """Beyond-paper: with a tight TPOT SLO, the manager must never settle
+    on a K whose measured TPOT violates the bound, even when that K has
+    utility > 1."""
+    # K=4 has utility 1.6 (best) but cost 2.5 -> TPOT 2.5/4.0=0.625*t_base
+    # ... build a landscape where high K is fast-but-bursty: utility grows
+    # with K but iteration time (cost) grows too; SLO excludes K >= 3.
+    def util(k):
+        return 1.0 + 0.15 * k          # utility increasing in K
+
+    def run(slo):
+        cfg = CascadeConfig(slo_tpot=slo)
+        mgr = SpeculationManager(cfg=cfg)
+        chosen = []
+        for _ in range(400):
+            k = mgr.next_k()
+            if mgr.phase == SET:
+                chosen.append(k)
+            if k == 0:
+                mgr.observe(IterationRecord(k=0, tokens=1, t_iter=1.0))
+            else:
+                u = util(k)
+                cost = 1.0 + 0.5 * k          # t_iter grows with K
+                toks = max(1, round(u * cost))
+                cost = toks / u
+                mgr.observe(IterationRecord(k=k, tokens=toks,
+                                            t_iter=cost))
+        return chosen
+
+    unconstrained = run(None)
+    assert max(unconstrained) >= 5      # climbs high without SLO
+    # SLO: per-iteration TPOT estimate = cost/toks = 1/util(k);
+    # require TPOT <= 0.87 => util >= 1.15 => k>=1 ok; but cap cost-side:
+    # use a bound that measured tpot of k>=4 violates
+    bounded = run(0.80)
+    # measured tpot(k) = cost/tokens; tokens=round(u*c) => tpot ~ 1/u
+    # 1/util(4)=0.625 <= 0.8 ok; make the bound really tight instead:
+    tight = run(0.62)
+    assert max(tight, default=0) <= max(bounded, default=0)
+    for k in tight:
+        if k > 0:
+            assert 1.0 / util(k) <= 0.62 + 0.05, (k, tight)
+
+
+def test_multi_start_recovers_nonmonotone_peak():
+    """Beyond-paper: tree-drafter-style non-monotone utility (bad at K=3,
+    good at K>=5). Plain hill-climbing from k_start=3 descends to K=0;
+    multi-start probes k_max and recovers the high-K peak."""
+    def util(k):
+        return {1: 0.9, 2: 0.92, 3: 0.94, 4: 0.97, 5: 1.2, 6: 1.25,
+                7: 1.28, 8: 1.3}[k]
+
+    def run(multi):
+        mgr = SpeculationManager(cfg=CascadeConfig(multi_start=multi,
+                                                   k_start=3, k_max=8))
+        chosen = []
+        for _ in range(300):
+            k = mgr.next_k()
+            if mgr.phase == SET:
+                chosen.append(k)
+            drive(mgr, util, 1)
+        return chosen
+
+    plain = run(False)
+    multi = run(True)
+    assert max(multi, default=0) >= 5, multi
+    # the multi-start policy must strictly dominate on this landscape
+    assert (sum(multi) / max(len(multi), 1)
+            > sum(plain) / max(len(plain), 1))

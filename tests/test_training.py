@@ -1,0 +1,108 @@
+"""Training + data + checkpoint substrates."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.configs import get_config
+from repro.data import batch_iterator, make_sample, request_stream
+from repro.data.workloads import MIXES
+from repro.training import (adafactor, adamw, apply_updates,
+                            clip_by_global_norm, make_train_step,
+                            warmup_cosine)
+
+
+def test_loss_decreases_tiny_moe(trained_tiny_moe):
+    _, _, (first_ce, final_ce) = trained_tiny_moe
+    assert final_ce < first_ce * 0.25, (first_ce, final_ce)
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones((4,)) * 100.0, "b": (jnp.ones((2, 2)) * 100.0,)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    from repro.training import global_norm
+    assert float(norm) > 100
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_adamw_and_adafactor_step_shapes():
+    params = {"w": jnp.ones((8, 16), jnp.bfloat16),
+              "blocks_list": ({"x": jnp.ones((4,), jnp.float32)},),
+              "b": jnp.zeros((16,), jnp.float32)}
+    grads = jax.tree.map(lambda p: jnp.ones_like(p, jnp.float32) * 0.1,
+                         params)
+    for opt in (adamw(1e-2), adafactor(1e-2)):
+        st = opt.init(params)
+        up, st2 = opt.update(grads, st, params)
+        new = apply_updates(params, up)
+        assert jax.tree.structure(new) == jax.tree.structure(params)
+        assert all(n.shape == p.shape for n, p in
+                   zip(jax.tree.leaves(new), jax.tree.leaves(params)))
+        assert int(st2.step) == 1
+        # updates must be non-zero and finite
+        for u in jax.tree.leaves(up):
+            assert np.isfinite(np.asarray(u, np.float32)).all()
+            assert float(jnp.abs(u.astype(jnp.float32)).max()) > 0
+
+
+def test_warmup_cosine_schedule():
+    lr = warmup_cosine(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr(100)) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_workload_draftability_ordering():
+    """extraction must have far higher n-gram copy-rate than math — the
+    property the paper's task suite rests on."""
+    from repro.serving import NGramDrafter
+    rng = np.random.default_rng(0)
+    rates = {}
+    for task in ("extract", "math"):
+        hits = tot = 0
+        for i in range(10):
+            s = make_sample(task, rng, vocab=128, prompt_len=64,
+                            cont_len=128)
+            d = NGramDrafter()
+            hist = list(s.prompt)
+            for t in s.continuation:
+                drafts, _ = d.propose(hist, 1)
+                if drafts:
+                    tot += 1
+                    hits += int(drafts[0] == t)
+                hist.append(t)
+        rates[task] = hits / max(tot, 1)
+    assert rates["extract"] > rates["math"] + 0.2, rates
+
+
+def test_request_stream_mixing():
+    reqs = request_stream("code+math", 6, seed=0)
+    assert [r.task for r in reqs] == ["code", "math"] * 3
+    assert set(MIXES["all-3"]) == {"code", "math", "extract"}
+
+
+def test_batch_iterator_shapes():
+    it = batch_iterator("all-3", 4, 64, vocab=128)
+    b = next(it)
+    assert b["tokens"].shape == (4, 64)
+    assert b["labels"].shape == (4, 64)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:])[b["mask"][:, :-1] > 0].all()
+
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    tree = {"a": jnp.ones((3, 4), jnp.bfloat16) * 1.5,
+            "nested": ({"b": jnp.arange(5, dtype=jnp.int32)},),
+            "scalar": jnp.asarray(2.5, jnp.float32)}
+    path = os.path.join(tmp_path, "ck.msgpack")
+    save(path, tree)
+    back = restore(path)
+    assert back["a"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back["a"], np.float32),
+                                  np.asarray(tree["a"], np.float32))
+    np.testing.assert_array_equal(np.asarray(back["nested"][0]["b"]),
+                                  np.arange(5))
