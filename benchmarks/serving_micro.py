@@ -1,10 +1,19 @@
 """Real-engine microbenchmarks on CPU with a reduced MoE: wall-clock per
 call for the serving primitives (decode step, n-gram drafter, rejection
 sampler, Cascade manager). These verify the paper's claim that the
-manager/telemetry overhead is negligible relative to an MoE iteration."""
+manager/telemetry overhead is negligible relative to an MoE iteration.
+
+`--batch-sweep` runs the continuous-batching engine on the deterministic
+model clock for B in {1,2,4,8} and reports, per batch size: batch-union
+unique experts per iteration, tokens/s, and mean per-request utility — the
+paper's Fig. 2 expert-union inflation, now compounding across requests
+(speculation utility degrades as the batch grows because the union term is
+shared). The B=1 row is cross-checked against the legacy single-request
+engine (must agree within 1%)."""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -16,10 +25,11 @@ from repro.configs import get_config
 from repro.core import CascadeController
 from repro.core.utility import IterationRecord
 from repro.models import transformer as T
-from repro.serving import NGramDrafter
+from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
+                           NGramDrafter, Request, Scheduler, ServingEngine)
 from repro.serving.sampler import rejection_sample
 
-from .common import emit
+from .common import emit, save_json
 
 
 def _bench(fn, n=50, warmup=3):
@@ -65,5 +75,90 @@ def main(fast: bool = False):
          "py;paper-claims-negligible")
 
 
+# --------------------------------------------------------------------- #
+# Continuous-batching sweep (model clock)
+# --------------------------------------------------------------------- #
+
+def _sweep_requests(cfg, n_requests: int, max_new: int):
+    """Draftable task-tagged prompts (periodic patterns of varying period,
+    so requests disagree on routing but n-gram drafting gets traction)."""
+    rng = np.random.default_rng(11)
+    reqs = []
+    for i in range(n_requests):
+        period = 4 + 2 * (i % 4)
+        pat = list(rng.integers(3, cfg.vocab_size, period))
+        reqs.append(Request(request_id=f"r{i}", prompt=pat * (32 // period),
+                            max_new=max_new, task=f"p{period}"))
+    return reqs
+
+
+def batch_sweep(fast: bool = False, batches=(1, 2, 4, 8)):
+    cfg = get_config("mixtral-8x7b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    n_requests = max(batches)
+    max_new = 16 if fast else 32
+
+    # legacy single-request engine: the pre-refactor reference for B=1
+    leg_eng = ServingEngine(cfg, params, NGramDrafter(), max_len=512,
+                            temperature=0.0, clock="model", seed=0)
+    leg = Scheduler(leg_eng,
+                    controller_factory=lambda: CascadeController())
+    leg.run(_sweep_requests(cfg, n_requests, max_new))
+    leg_tps = leg.tokens_per_second()
+    emit("serving_micro/legacy_B1_tokens_per_s", leg_tps, "model-clock")
+
+    rows = []
+    for b in batches:
+        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=b, max_len=512, temperature=0.0,
+                            clock="model", seed=0)
+        sched = ContinuousBatchingScheduler(
+            eng, controller_factory=lambda: CascadeController())
+        sched.run(_sweep_requests(cfg, n_requests, max_new))
+        tel = eng.telemetry
+        row = {
+            "B": b,
+            "union_experts_per_iter": tel.mean_union_experts,
+            "tokens_per_s": sched.tokens_per_second(),
+            "mean_request_utility": sched.mean_request_utility(),
+            "mean_occupancy": tel.mean_occupancy,
+            "padding_frac": tel.mean_padding_frac,
+            "steps": len(tel.steps),
+        }
+        rows.append(row)
+        emit(f"serving_micro/batch_B{b}_union_experts",
+             row["union_experts_per_iter"], "per-iter;mean-layers")
+        emit(f"serving_micro/batch_B{b}_tokens_per_s",
+             row["tokens_per_s"], f"occ={row['mean_occupancy']:.2f}")
+        emit(f"serving_micro/batch_B{b}_mean_utility",
+             row["mean_request_utility"],
+             f"pad={row['padding_frac']:.3f}")
+
+    b1_rows = [r for r in rows if r["B"] == 1]
+    if not b1_rows:
+        raise ValueError("batch sweep needs B=1 for the legacy cross-check")
+    b1_tps = b1_rows[0]["tokens_per_s"]
+    drift = abs(b1_tps - leg_tps) / leg_tps if leg_tps else 0.0
+    emit("serving_micro/batch_B1_vs_legacy_drift", drift,
+         "must-be<0.01")
+    save_json("serving_micro_batch_sweep",
+              {"legacy_B1_tokens_per_s": leg_tps, "rows": rows,
+               "b1_drift": drift})
+    if drift >= 0.01:
+        raise SystemExit(
+            f"B=1 tokens/s drifted {drift:.2%} from the legacy engine")
+    return rows
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--batch-sweep", action="store_true",
+                    help="continuous-batching sweep over B in {1,2,4,8}")
+    ap.add_argument("--no-micro", action="store_true",
+                    help="skip the single-call microbenchmarks")
+    args = ap.parse_args()
+    if not args.no_micro:
+        main(fast=args.fast)
+    if args.batch_sweep:
+        batch_sweep(fast=args.fast)

@@ -4,7 +4,8 @@ management for MoE serving."""
 from .controller import (CascadeController, StaticKController,
                          cascade_for_model)
 from .cost_model import (Hardware, TPU_V5E, RTX_6000_ADA,
-                         expected_unique_experts, iteration_bytes,
+                         batch_iteration_time, expected_unique_experts,
+                         expected_unique_experts_batch, iteration_bytes,
                          iteration_flops, iteration_time, draft_time,
                          sample_time, kv_bytes_per_token)
 from .manager import BASELINE, TEST, SET, CascadeConfig, SpeculationManager
@@ -14,6 +15,7 @@ __all__ = [
     "CascadeController", "StaticKController", "CascadeConfig",
     "SpeculationManager", "UtilityAnalyzer", "IterationRecord",
     "Hardware", "TPU_V5E", "RTX_6000_ADA", "expected_unique_experts",
+    "expected_unique_experts_batch", "batch_iteration_time",
     "iteration_bytes", "iteration_flops", "iteration_time", "draft_time",
     "sample_time", "kv_bytes_per_token", "BASELINE", "TEST", "SET",
     "cascade_for_model",

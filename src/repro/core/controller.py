@@ -51,10 +51,16 @@ class CascadeController:
 
     def observe(self, tokens: int, t_iter: float, *, t_draft: float = 0.0,
                 t_verify: float = 0.0, t_sample: float = 0.0,
-                k: Optional[int] = None) -> None:
+                k: Optional[int] = None, batch: int = 1) -> None:
+        """Feed back one completed iteration. Under continuous batching the
+        times are this request's *attributed* share of the shared pass
+        (cost_model.batch_iteration_time's marginal-bytes split), so the
+        utility signal keeps meaning 'what this request's speculation costs
+        the cluster' even when B requests verify together."""
         rec = IterationRecord(k=self._last_k if k is None else k,
                               tokens=tokens, t_iter=t_iter, t_draft=t_draft,
-                              t_verify=t_verify, t_sample=t_sample)
+                              t_verify=t_verify, t_sample=t_sample,
+                              batch=batch)
         self.manager.observe(rec)
 
     def utility(self, n: Optional[int] = None) -> float:
@@ -75,10 +81,11 @@ class StaticKController:
 
     def observe(self, tokens: int, t_iter: float, *, t_draft: float = 0.0,
                 t_verify: float = 0.0, t_sample: float = 0.0,
-                k: Optional[int] = None) -> None:
+                k: Optional[int] = None, batch: int = 1) -> None:
         self.analyzer.observe(IterationRecord(
             k=self.k if k is None else k, tokens=tokens, t_iter=t_iter,
-            t_draft=t_draft, t_verify=t_verify, t_sample=t_sample))
+            t_draft=t_draft, t_verify=t_verify, t_sample=t_sample,
+            batch=batch))
 
     def utility(self, n: Optional[int] = None) -> float:
         return self.analyzer.utility(n)

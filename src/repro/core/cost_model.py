@@ -54,6 +54,38 @@ def expected_unique_experts(num_experts: int, top_k: int, n_tokens: int,
     return floor + (rand - floor) * (1.0 - affinity)
 
 
+def expected_unique_experts_batch(num_experts: int, top_k: int,
+                                  tokens_per_request, affinity: float = 0.0
+                                  ) -> dict:
+    """Multi-request extension of `expected_unique_experts`: B requests
+    jointly verifying sum(n_i) tokens in one shared pass activate the
+    *union* of their expert sets.
+
+    Returns:
+        union     — E[unique experts] over all sum(n_i) tokens
+        marginal  — per-request marginal contribution,
+                    m_i = union(all) - union(all minus request i),
+                    the bytes request i adds to the shared verification
+                    (the batch-level analogue of the paper's Fig. 2 curve:
+                    m_i shrinks as the rest of the batch grows, because the
+                    batch has already paid for most of i's experts)."""
+    ns = [max(int(n), 0) for n in tokens_per_request]
+    total = sum(ns)
+    if total <= 0:
+        return {"union": 0.0, "marginal": [0.0] * len(ns)}
+    union = expected_unique_experts(num_experts, top_k, total, affinity)
+    marginal = []
+    for n in ns:
+        if n <= 0:
+            marginal.append(0.0)
+        elif total - n <= 0:
+            marginal.append(union)
+        else:
+            marginal.append(union - expected_unique_experts(
+                num_experts, top_k, total - n, affinity))
+    return {"union": union, "marginal": marginal}
+
+
 # --------------------------------------------------------------------- #
 # Per-iteration bytes / flops
 # --------------------------------------------------------------------- #
@@ -79,32 +111,20 @@ def kv_bytes_per_token(cfg, wb: int) -> float:
     return 2 * cfg.num_kv_heads * cfg.head_dim * wb
 
 
-def iteration_bytes(cfg, n_tokens: int, context_len: int,
-                    unique_experts: float = None, affinity: float = 0.0,
-                    window: int = 0, wb: int = None) -> dict:
-    """HBM bytes moved by one target-model iteration processing `n_tokens`
-    in-flight tokens against a `context_len`-token KV cache."""
-    wb = wb or 2
+def _weight_read_bytes(cfg, wb: int) -> float:
+    """Dense weight bytes read once per iteration regardless of batch:
+    attention + dense/shared FFN + router + unembedding (expert bytes are
+    accounted separately — they scale with the activated-expert union)."""
     kinds = cfg.layer_kinds()
     attn_b, ffn_b, expert_b, shared_b = _per_layer_weight_bytes(cfg, wb)
-
-    if cfg.is_moe and unique_experts is None:
-        unique_experts = expected_unique_experts(
-            cfg.num_experts, cfg.experts_per_token, n_tokens, affinity)
-
-    n_attnish = sum(1 for k in kinds if k in ("A", "X"))
-    n_rec = sum(1 for k in kinds if k == "R")
-    n_rwkv = sum(1 for k in kinds if k == "W")
-
+    del expert_b
     weights = 0.0
-    experts = 0.0
     for k in kinds:
         if k in ("A", "X"):
             weights += attn_b + ffn_b
             if k == "X":
                 weights += attn_b  # cross-attention weights
             if cfg.is_moe:
-                experts += min(unique_experts, cfg.num_experts) * expert_b
                 weights += shared_b
         elif k == "R":
             weights += cfg._rglru_layer_params() * wb + ffn_b
@@ -112,17 +132,27 @@ def iteration_bytes(cfg, n_tokens: int, context_len: int,
                 weights += 3 * cfg.d_model * cfg.d_ff * wb
         elif k == "W":
             weights += cfg._rwkv_layer_params() * wb
-
     # unembedding is read every iteration; embedding read is per-token rows
     weights += cfg.vocab_size * cfg.d_model * wb
+    return weights
 
-    # KV cache read: every layer reads its cache (windowed layers read only
-    # the window)
-    eff_ctx = context_len if not window else min(context_len, window)
+
+def _expert_read_bytes(cfg, unique_experts: float, wb: int) -> float:
+    """Expert weight bytes for `unique_experts` activated per MoE layer."""
+    if not cfg.is_moe:
+        return 0.0
+    _, _, expert_b, _ = _per_layer_weight_bytes(cfg, wb)
+    n_moe = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
+    return n_moe * min(unique_experts, cfg.num_experts) * expert_b
+
+
+def _kv_read_bytes(cfg, context_len: int, window: int, wb: int) -> float:
+    """Per-request state read: KV cache rows (windowed layers read only the
+    window) plus recurrent-state reads."""
     kv_read = 0.0
-    for k in kinds:
+    for k in cfg.layer_kinds():
         if k in ("A", "X"):
-            lw = window if k == "A" else window
+            lw = window
             if cfg.layer_pattern and k == "A":
                 lw = cfg.local_window
             ctx = context_len if not lw else min(context_len, lw)
@@ -131,7 +161,22 @@ def iteration_bytes(cfg, n_tokens: int, context_len: int,
             kv_read += cfg.rwkv_num_heads * cfg.rwkv_head_size ** 2 * 4
         elif k == "R":
             kv_read += cfg.d_rnn * 4
-    del eff_ctx
+    return kv_read
+
+
+def iteration_bytes(cfg, n_tokens: int, context_len: int,
+                    unique_experts: float = None, affinity: float = 0.0,
+                    window: int = 0, wb: int = None) -> dict:
+    """HBM bytes moved by one target-model iteration processing `n_tokens`
+    in-flight tokens against a `context_len`-token KV cache."""
+    wb = wb or 2
+    if cfg.is_moe and unique_experts is None:
+        unique_experts = expected_unique_experts(
+            cfg.num_experts, cfg.experts_per_token, n_tokens, affinity)
+
+    weights = _weight_read_bytes(cfg, wb)
+    experts = _expert_read_bytes(cfg, unique_experts or 0.0, wb)
+    kv_read = _kv_read_bytes(cfg, context_len, window, wb)
 
     return {"weights": weights, "experts": experts, "kv": kv_read,
             "total": weights + experts + kv_read,
@@ -173,6 +218,93 @@ def iteration_time(cfg, hw: Hardware, n_tokens: int, context_len: int,
     return {"t_iter": t, "t_mem": t_mem, "t_compute": t_compute,
             "bytes": b["total"], "expert_bytes": b["experts"],
             "flops": f, "unique_experts": b["unique_experts"]}
+
+
+def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
+                         context_lens, *, unique_experts: float = None,
+                         per_request_unique=None, affinity: float = 0.0,
+                         window: int = 0, fixed_overhead: float = 2e-4
+                         ) -> dict:
+    """Seconds for one *shared* verification pass over B requests, request i
+    contributing n_i = tokens_per_request[i] in-flight tokens against its own
+    context_lens[i]-token KV cache.
+
+    The batch moves: dense weights ONCE (the whole point of batching), the
+    *union* of activated expert weights (the paper's data-movement driver,
+    now across requests), and each request's own KV rows. `unique_experts`
+    overrides the analytic union with a measured per-layer mean; at B=1 with
+    identical inputs this reduces exactly to `iteration_time`.
+
+    Per-request attribution ("marginal-bytes split", consumed by each
+    request's Cascade controller so per-request utility stays meaningful
+    under shared verification):
+      * KV bytes       -> owned outright by the request;
+      * expert bytes   -> split in proportion to each request's marginal
+                          expert contribution m_i = union(all) -
+                          union(all \\ i) (or to measured per-request unique
+                          counts when `per_request_unique` is given);
+      * dense weights + fixed overhead -> split evenly — every request needs
+                          the full read, the batch amortizes it.
+    sum_i(t_attr_i) == t_iter by construction.
+
+    Returns iteration_time's keys plus `per_request` (list of dicts with
+    t_attr / bytes_attr / marginal_experts) and `n_requests`."""
+    wb = 2
+    ns = [max(int(n), 0) for n in tokens_per_request]
+    cls = list(context_lens)
+    if len(ns) != len(cls):
+        raise ValueError(f"{len(ns)} token counts vs {len(cls)} contexts")
+    b_req = len(ns)
+    total_tokens = sum(ns)
+
+    est = expected_unique_experts_batch(
+        cfg.num_experts, cfg.experts_per_token, ns, affinity) \
+        if cfg.is_moe else {"union": 0.0, "marginal": [0.0] * b_req}
+    union = est["union"] if unique_experts is None else float(unique_experts)
+
+    weights = _weight_read_bytes(cfg, wb)
+    experts = _expert_read_bytes(cfg, union, wb)
+    kv_each = [_kv_read_bytes(cfg, c, window, wb) if n > 0 else 0.0
+               for n, c in zip(ns, cls)]
+    total_bytes = weights + experts + sum(kv_each)
+
+    flops = sum(iteration_flops(cfg, n, c, window)
+                for n, c in zip(ns, cls) if n > 0)
+    t_mem = total_bytes / hw.hbm_bw
+    t_compute = flops / hw.peak_flops
+    t = max(t_mem, t_compute) + fixed_overhead
+
+    # ---- marginal-bytes attribution -------------------------------------
+    live = [i for i, n in enumerate(ns) if n > 0]
+    n_live = max(len(live), 1)
+    if per_request_unique is not None:
+        mweights = [max(float(u), 0.0) for u in per_request_unique]
+    else:
+        mweights = est["marginal"]
+    msum = sum(mweights[i] for i in live)
+    per_request = []
+    for i, n in enumerate(ns):
+        if n <= 0:
+            per_request.append({"t_attr": 0.0, "bytes_attr": 0.0,
+                                "marginal_experts": 0.0})
+            continue
+        if len(live) == 1:
+            # sole live request owns the pass outright (bit-exact reduction
+            # to iteration_time — no float round-trip through the split)
+            per_request.append({"t_attr": t, "bytes_attr": total_bytes,
+                                "marginal_experts": est["marginal"][i]})
+            continue
+        frac_e = (mweights[i] / msum) if msum > 0 else 1.0 / n_live
+        bytes_i = weights / n_live + experts * frac_e + kv_each[i]
+        t_attr = ((t - fixed_overhead) * bytes_i / total_bytes
+                  if total_bytes > 0 else 0.0) + fixed_overhead / n_live
+        per_request.append({"t_attr": t_attr, "bytes_attr": bytes_i,
+                            "marginal_experts": est["marginal"][i]})
+
+    return {"t_iter": t, "t_mem": t_mem, "t_compute": t_compute,
+            "bytes": total_bytes, "expert_bytes": experts, "flops": flops,
+            "unique_experts": union, "n_requests": b_req,
+            "n_tokens": total_tokens, "per_request": per_request}
 
 
 def draft_time(hw: Hardware, k: int, drafter_active_params: int = 0,

@@ -26,8 +26,9 @@ class IterationRecord:
     tokens: int         # tokens emitted this iteration (>=1)
     t_iter: float       # iteration time (seconds, wall-clock or cost model)
     t_draft: float = 0.0
-    t_verify: float = 0.0
+    t_verify: float = 0.0   # under batching: this request's attributed share
     t_sample: float = 0.0
+    batch: int = 1      # requests sharing the verification pass
 
 
 @dataclass

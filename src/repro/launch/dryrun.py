@@ -90,6 +90,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     coll = collective_bytes(hlo_text)
     # trip-count-aware re-analysis: XLA's cost_analysis counts while (scan)

@@ -69,6 +69,27 @@ def unique_expert_count(cfg, idx):
     return jnp.sum(hits > 0)
 
 
+def unique_expert_stats(cfg, idx_btk, token_mask=None):
+    """Per-request AND batch-union distinct-expert counts — the two
+    quantities batch-aware cost accounting needs (union drives the shared
+    verification bytes; per-row counts drive the marginal split).
+
+    idx_btk: [B,T,k] routed expert ids; token_mask: [B,T] bool marking the
+    real (non-padding) tokens of the ragged [1+K_i] spans, or None for all
+    valid. Returns (union scalar, per_row [B])."""
+    b, t, k = idx_btk.shape
+    e = cfg.num_experts
+    if token_mask is not None:
+        # padding tokens scatter into a sentinel bucket that is never counted
+        idx_btk = jnp.where(token_mask[:, :, None], idx_btk, e)
+    flat = idx_btk.reshape(b, t * k)
+    rows = jnp.arange(b)[:, None]
+    hits = jnp.zeros((b, e + 1), jnp.int32).at[rows, flat].add(1)
+    per_row = jnp.sum(hits[:, :e] > 0, axis=-1)
+    union = jnp.sum(jnp.sum(hits[:, :e], axis=0) > 0)
+    return union, per_row
+
+
 CAPACITY_FACTORS = {"train": 1.25, "serve": 2.0}
 
 

@@ -101,15 +101,22 @@ def ring_size(cfg, max_len: int, window: int) -> int:
 
 
 def init_cache(cfg, batch: int, max_len: int, *, window: int = 0,
-               dtype=None):
+               dtype=None, per_row: bool = False):
     """Allocate an empty cache for `batch` sequences of up to `max_len`
     tokens. `window` (0=full) selects sliding-window attention and sizes the
-    ring buffer accordingly."""
+    ring buffer accordingly.
+
+    `per_row=True` adds a `lengths` [B] vector so every row keeps its own
+    sequence length — the continuous-batching layout where rows join, draft
+    different K_i, and roll back independently. The scalar `length` is kept
+    alongside (as the row maximum) for code that only needs an upper bound."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     kinds = cfg.layer_kinds()
     cache: Dict[str, Any] = {
         "length": jnp.zeros((), jnp.int32),
     }
+    if per_row:
+        cache["lengths"] = jnp.zeros((batch,), jnp.int32)
     n_attn = sum(1 for k in kinds if k in ("A", "X"))
     n_rec = sum(1 for k in kinds if k == "R")
     n_rwkv = sum(1 for k in kinds if k == "W")
@@ -151,19 +158,79 @@ def rollback_cache(cfg, cache, staged, n_accept, length_before):
     """Rewind the cache to `length_before + n_accept` after verification.
 
     Attention caches: metadata-only (invalidate pos of rejected slots).
-    Recurrent caches: select the staged state at index n_accept."""
+    Recurrent caches: select the staged state at index n_accept.
+
+    Scalar `n_accept`/`length_before` rewind every row uniformly (the legacy
+    single-request path). [B]-shaped arrays rewind each row to its own
+    accepted length — one vectorized truncation for the whole batch, the
+    continuous-batching equivalent of B independent rollbacks."""
+    n_accept = jnp.asarray(n_accept, jnp.int32)
+    length_before = jnp.asarray(length_before, jnp.int32)
     new_len = length_before + n_accept
     cache = dict(cache)
-    cache["length"] = jnp.asarray(new_len, jnp.int32)
+    if new_len.ndim == 0:
+        cache["length"] = new_len
+        if "lengths" in cache:
+            cache["lengths"] = jnp.broadcast_to(new_len,
+                                                cache["lengths"].shape)
+        row_len = new_len          # broadcasts over [B,R] pos
+        staged_idx = n_accept      # same staged index for every row
+    else:
+        cache["lengths"] = new_len
+        cache["length"] = jnp.max(new_len)
+        row_len = new_len[:, None]
+        staged_idx = None
     if "pos" in cache:
-        cache["pos"] = jnp.where(cache["pos"] >= new_len, -1, cache["pos"])
+        cache["pos"] = jnp.where(cache["pos"] >= row_len, -1, cache["pos"])
     if staged:
         for name in ("wkv", "sx_att", "sx_ffn", "h", "conv"):
             if name in staged and staged[name] is not None:
-                # staged[name]: [L, T+1, ...] -> pick index n_accept
-                cache[name] = jnp.take(staged[name], n_accept, axis=1).astype(
-                    cache[name].dtype)
+                st = staged[name]  # [L, T+1, B, ...]
+                if staged_idx is not None:
+                    sel = jnp.take(st, staged_idx, axis=1)
+                else:
+                    # per-row gather: row b keeps the state after consuming
+                    # its own n_accept[b] tokens
+                    sel = st[:, n_accept, jnp.arange(n_accept.shape[0])]
+                cache[name] = sel.astype(cache[name].dtype)
     return cache
+
+
+def write_cache_row(cache, slot: int, row_cache):
+    """Copy a batch-1 cache (e.g. a freshly prefilled request) into row
+    `slot` of a per-row batched cache — the join half of continuous
+    batching. Both caches must share ring size / layer layout."""
+    out = dict(cache)
+    for name, buf in cache.items():
+        if name in ("length", "lengths"):
+            continue
+        src = row_cache[name]
+        if name == "pos":                       # [B,R] <- [1,R]
+            out[name] = buf.at[slot].set(src[0])
+        else:                                   # [L,B,...] <- [L,1,...]
+            out[name] = buf.at[:, slot].set(src[:, 0].astype(buf.dtype))
+    row_len = (row_cache["lengths"][0] if "lengths" in row_cache
+               else row_cache["length"])
+    if "lengths" in cache:
+        lengths = cache["lengths"].at[slot].set(row_len)
+        out["lengths"] = lengths
+        out["length"] = jnp.max(lengths)
+    else:
+        out["length"] = jnp.maximum(cache["length"], row_len)
+    return out
+
+
+def clear_cache_row(cache, slot: int):
+    """Retire row `slot`: zero its length and invalidate its ring positions
+    (stale K/V content is masked out by pos == -1, no data wipe needed)."""
+    out = dict(cache)
+    if "pos" in cache:
+        out["pos"] = cache["pos"].at[slot].set(-1)
+    if "lengths" in cache:
+        lengths = cache["lengths"].at[slot].set(0)
+        out["lengths"] = lengths
+        out["length"] = jnp.max(lengths)
+    return out
 
 
 # ===================================================================== #
@@ -173,8 +240,11 @@ def rollback_cache(cfg, cache, staged, n_accept, length_before):
 def _write_ring(buf_l, vals, wctx):
     """Write T new entries into a cache buffer [B,R,...].
 
-    Two modes (wctx from _forward):
-      * slots scatter (baseline): buf.at[:, slots].set(vals)
+    Three modes (wctx from _forward):
+      * slots scatter (baseline): buf.at[:, slots].set(vals) — one slot
+        vector shared by every row
+      * per-row scatter (continuous batching): rows sit at different
+        lengths, so row b writes to its own slots_bt[b] ring positions
       * contiguous dynamic_update_slice (§Perf "dus-cache"): in-place, no
         SPMD resharding copy — the scatter path triggers XLA "involuntary
         full rematerialization" of the whole stacked cache per layer."""
@@ -183,6 +253,10 @@ def _write_ring(buf_l, vals, wctx):
         starts = (jnp.zeros((), jnp.int32), wctx["offset"]) + tuple(
             jnp.zeros((), jnp.int32) for _ in range(buf_l.ndim - 2))
         return jax.lax.dynamic_update_slice(buf_l, vals, starts)
+    if wctx.get("slots_bt") is not None:
+        slots_bt = wctx["slots_bt"]                       # [B,T]
+        rows = jnp.arange(slots_bt.shape[0])[:, None]     # [B,1]
+        return buf_l.at[rows, slots_bt].set(vals)
     return buf_l.at[:, wctx["slots"]].set(vals)
 
 
@@ -259,10 +333,22 @@ def _attn_block(cfg, p, x, lc, ctx, kind):
         x = x + y2d.reshape(b, t, d)
         aux["lb_loss"] = moe_aux["lb_loss"]
         aux["unique_experts"] = moe_aux["unique_experts"]
+        if mode == "decode" and "expert_idx" in moe_aux:
+            # batch-aware accounting: per-row counts always; the union
+            # replaces the raw all-token count when a padding mask marks
+            # ragged [1+K_i] spans (padding must not inflate the cost driver)
+            union, per_row = moe_mod.unique_expert_stats(
+                cfg, moe_aux["expert_idx"].reshape(b, t, -1),
+                ctx.get("token_mask"))
+            aux["unique_experts_row"] = per_row
+            if ctx.get("token_mask") is not None:
+                aux["unique_experts"] = union
     else:
         x = x + L.apply_mlp(cfg, p["ffn"], h2)
         aux["lb_loss"] = jnp.zeros((), jnp.float32)
         aux["unique_experts"] = jnp.zeros((), jnp.int32)
+        if mode == "decode":
+            aux["unique_experts_row"] = jnp.zeros((x.shape[0],), jnp.int32)
     return x, new_lc, aux
 
 
@@ -437,7 +523,7 @@ def _run_pattern(cfg, params, x, cache, ctx):
 
 
 def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
-             window, enc_out, moe_exact):
+             window, enc_out, moe_exact, token_mask=None):
     x = _embed_inputs(cfg, params, tokens, embeds, seq_pos)
     n_inflight = x.shape[0] * x.shape[1]
     if not moe_exact:
@@ -448,10 +534,14 @@ def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
         from repro.distributed.sharding import opt as _opt
         moe_policy = "serve" if _opt("serve-capacity") else "exact"
     from repro.distributed.sharding import opt as _perf_opt
+    # per-row layout: rows sit at independent lengths, so ring slots (and
+    # pos updates) are computed per row rather than shared across the batch
+    per_row = cache is not None and "lengths" in cache
     ctx = {"mode": mode, "seq_pos": seq_pos, "rope_pos": rope_pos,
            "window": window, "enc_out": enc_out, "moe_policy": moe_policy,
            "cache_pos": None if cache is None else cache.get("pos"),
-           "slots": None, "offset": None, "t_w": 0}
+           "slots": None, "slots_bt": None, "offset": None, "t_w": 0,
+           "token_mask": token_mask}
     if cache is not None and "pos" in cache:
         t = x.shape[1]
         r = cache["pos"].shape[1]
@@ -462,18 +552,24 @@ def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
         m_eff = (r - SPEC_PAD) if is_ring else r
         t_w = min(t, m_eff)
         ctx["t_w"] = t_w
-        write_pos = seq_pos[0, -t_w:]          # positions shared across batch
-        if _perf_opt("dus-cache") and mode == "decode":
-            ctx["offset"] = write_pos[0] % m_eff
+        if per_row:
+            # a contiguous DUS is impossible when offsets differ per row
+            ctx["slots_bt"] = seq_pos[:, -t_w:] % m_eff
+        elif _perf_opt("dus-cache") and mode == "decode":
+            ctx["offset"] = seq_pos[0, -t_w:][0] % m_eff
         else:
             # slot mapping uses the same modulus as the DUS path so mixed
             # prefill(scatter)/decode(DUS) runs agree on slot placement
-            ctx["slots"] = write_pos % m_eff
+            ctx["slots"] = seq_pos[0, -t_w:] % m_eff
         if mode in ("prefill", "decode"):
             if ctx["offset"] is not None:
                 new_pos = jax.lax.dynamic_update_slice(
                     cache["pos"], seq_pos[:, -t_w:],
                     (jnp.zeros((), jnp.int32), ctx["offset"]))
+            elif ctx["slots_bt"] is not None:
+                rows = jnp.arange(ctx["slots_bt"].shape[0])[:, None]
+                new_pos = cache["pos"].at[rows, ctx["slots_bt"]].set(
+                    seq_pos[:, -t_w:])
             else:
                 new_pos = cache["pos"].at[:, ctx["slots"]].set(
                     seq_pos[:, -t_w:])
@@ -488,6 +584,8 @@ def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
     if "aux" in ys:
         aux["lb_loss"] = jnp.mean(ys["aux"]["lb_loss"])
         aux["unique_experts"] = ys["aux"]["unique_experts"]  # [L]
+        if "unique_experts_row" in ys["aux"]:
+            aux["unique_experts_row"] = ys["aux"]["unique_experts_row"]  # [L,B]
     staged = ys.get("staged")
 
     new_cache = None
@@ -496,7 +594,11 @@ def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
         new_cache.update(ys.get("cache", {}))
         if "pos" in cache:
             new_cache["pos"] = ctx["cache_pos"]
-        new_cache["length"] = seq_pos[0, -1] + 1
+        if per_row:
+            new_cache["lengths"] = seq_pos[:, -1] + 1
+            new_cache["length"] = jnp.max(new_cache["lengths"])
+        else:
+            new_cache["length"] = seq_pos[0, -1] + 1
     return logits, new_cache, aux, staged
 
 
@@ -535,12 +637,21 @@ def prefill(cfg, params, tokens, cache, *, embeds=None, rope_pos=None,
 
 
 def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
-                window: int = 0, moe_exact: bool = True):
-    """Verify/decode T tokens starting at cache['length'].
+                window: int = 0, moe_exact: bool = True, token_mask=None):
+    """Verify/decode T tokens per row. Single-request caches start every row
+    at the scalar cache['length']; per-row caches (init_cache(per_row=True))
+    start row b at cache['lengths'][b], which is how a continuous batch
+    verifies ragged [1+K_i] spans padded to a common T in one pass.
+    `token_mask` [B,T] marks the real tokens of each span — padding tokens
+    still flow through the network (their writes are rolled back) but are
+    excluded from the expert-union accounting.
     Returns (logits [B,T,V], new_cache, aux, staged)."""
     b, t = tokens.shape[:2] if tokens is not None else embeds.shape[:2]
-    start = cache["length"]
-    seq_pos = start + jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    offs = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    if "lengths" in cache:
+        seq_pos = cache["lengths"][:, None] + offs
+    else:
+        seq_pos = cache["length"] + offs
     if rope_pos is None:
         rope_pos = seq_pos
     window = window or cfg.window
@@ -548,5 +659,6 @@ def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
                                           cache=cache, mode="decode",
                                           seq_pos=seq_pos, rope_pos=rope_pos,
                                           window=window, enc_out=None,
-                                          moe_exact=moe_exact)
+                                          moe_exact=moe_exact,
+                                          token_mask=token_mask)
     return logits, cache, aux, staged

@@ -1,7 +1,9 @@
-"""Serving substrate: engine, drafters, rejection sampler, scheduler."""
+"""Serving substrate: engines (single-request + continuous batching),
+drafters, rejection sampler, schedulers."""
 
 from .drafter import Drafter, DraftModelDrafter, NGramDrafter
-from .engine import GenerationResult, ServingEngine
+from .engine import BatchedEngine, GenerationResult, ServingEngine
 from .sampler import greedy_verify, rejection_sample
-from .scheduler import Request, Scheduler
-from .telemetry import IterationTelemetry, RequestTelemetry
+from .scheduler import ContinuousBatchingScheduler, Request, Scheduler
+from .telemetry import (EngineTelemetry, IterationTelemetry,
+                        RequestTelemetry, StepTelemetry)

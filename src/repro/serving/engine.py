@@ -1,13 +1,26 @@
-"""Serving engine: the vLLM-analogue decode loop with speculative decoding
+"""Serving engines: the vLLM-analogue decode loop with speculative decoding
 and Cascade in the loop.
 
-Per iteration (paper Fig. 14's spec-decode worker):
+Two engines share the verification math:
+
+`ServingEngine` — single-request-at-a-time (the paper's single-batch,
+latency-bound setting). Per iteration (paper Fig. 14's spec-decode worker):
     1. controller.next_k() -> K            (Cascade / static policy)
     2. drafter.propose(history, K)         (n-gram or draft model)
     3. decode_step over [last_token, d_0..d_{K-1}]   (verification)
     4. rejection sample -> accepted prefix + next token
     5. rollback cache to the accepted length
     6. controller.observe(tokens, t_iter, breakdown)
+
+`BatchedEngine` — continuous batching: a slot table of up to `max_batch`
+in-flight requests, each with its own Cascade controller, drafter, and
+cache row. One `step()` drafts per-request K_i, packs the ragged [1+K_i]
+spans into a single padded verification pass, rejection-samples per row,
+rolls every row back to its own accepted length, and attributes the shared
+verification cost back to requests through the cost model's marginal-bytes
+split (`cost_model.batch_iteration_time`). The batch-level cost driver is
+the *union* of experts the B spans activate — the paper's Fig. 2 effect
+compounding across requests.
 
 Timing source is pluggable: 'wall' uses the host clock (meaningful on real
 accelerators); 'model' uses the deterministic TPU-v5e data-movement cost
@@ -29,15 +42,26 @@ from repro.core import cost_model as cm
 from repro.core.controller import CascadeController, StaticKController
 from repro.models import transformer as T
 
-from .drafter import Drafter
+from .drafter import Drafter, NGramDrafter
 from .sampler import greedy_verify, logits_to_probs, rejection_sample, sample_token
-from .telemetry import IterationTelemetry, RequestTelemetry
+from .telemetry import (EngineTelemetry, IterationTelemetry,
+                        RequestTelemetry, StepTelemetry)
 
 
 @dataclass
 class GenerationResult:
     tokens: List[int]
     telemetry: RequestTelemetry
+
+
+def _sample_logits(rng: np.random.Generator, logits: np.ndarray,
+                   temperature: float) -> int:
+    """Temperature-gated sampling shared by both engines: argmax at
+    temperature <= 0, softmax sample otherwise."""
+    if temperature <= 0:
+        return int(np.argmax(logits))
+    probs = np.asarray(logits_to_probs(jnp.asarray(logits), temperature))
+    return sample_token(rng, probs)
 
 
 class ServingEngine:
@@ -177,8 +201,307 @@ class ServingEngine:
     # ------------------------------------------------------------------ #
 
     def _sample(self, logits: np.ndarray) -> int:
-        if self.temperature <= 0:
-            return int(np.argmax(logits))
-        probs = np.asarray(logits_to_probs(jnp.asarray(logits),
-                                           self.temperature))
-        return sample_token(self.rng, probs)
+        return _sample_logits(self.rng, logits, self.temperature)
+
+
+# ===================================================================== #
+# Continuous batching
+# ===================================================================== #
+
+@dataclass
+class _Slot:
+    """One in-flight request: its own controller, drafter, rng stream,
+    telemetry, and token state. The model-side state is row `index` of the
+    engine's per-row batched cache."""
+    index: int
+    request_id: str
+    task: str
+    max_new: int
+    stop_token: Optional[int]
+    controller: object
+    drafter: Drafter
+    rng: np.random.Generator
+    tel: RequestTelemetry
+    history: List[int]
+    out: List[int]
+    last_tok: int
+    done: bool = False
+    iteration: int = 0
+
+
+class BatchedEngine:
+    """Continuous-batching serving engine.
+
+    API:
+        join(prompt, ...) -> slot    admit + prefill a request into a free
+                                     cache row (raises when full)
+        step() -> {slot: emitted}    one shared draft/verify/rollback pass
+                                     over every live request
+        retire(slot) -> result       collect a finished request, free the row
+        generate(prompt, ...)        batch=1 compatibility wrapper: at
+                                     max_batch=1 this reproduces the legacy
+                                     `ServingEngine` token stream bit-exactly
+                                     on the same seed (greedy and sampled).
+
+    Each request keeps its own Cascade controller; the shared verification
+    cost is attributed back per request via the cost model's marginal-bytes
+    split, so per-request utility stays meaningful under batching."""
+
+    def __init__(self, cfg, params, drafter_factory: Callable = None, *,
+                 max_batch: int = 8,
+                 controller_factory: Callable = None,
+                 clock: str = "model",
+                 hw: cm.Hardware = cm.TPU_V5E,
+                 affinity: float = 0.0,
+                 window: int = 0,
+                 max_len: int = 2048,
+                 temperature: float = 1.0,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.drafter_factory = drafter_factory or (lambda: NGramDrafter())
+        self.controller_factory = controller_factory or (
+            lambda: CascadeController())
+        self.max_batch = max_batch
+        self.clock = clock
+        self.hw = hw
+        self.affinity = affinity
+        self.window = window
+        self.max_len = max_len
+        self.temperature = temperature
+        self.seed = seed
+
+        self.slots: List[Optional[_Slot]] = [None] * max_batch
+        self.cache = T.init_cache(cfg, max_batch, max_len, window=window,
+                                  per_row=True)
+        self.telemetry = EngineTelemetry()
+        self._prefill = jax.jit(
+            lambda p, t, c, e: T.prefill(cfg, p, t, c, window=window,
+                                         enc_out=e))
+        self._decode = jax.jit(
+            lambda p, c, t, m: T.decode_step(cfg, p, c, t, window=window,
+                                             token_mask=m))
+        self._step_idx = 0
+        self._req_counter = 0
+        self._joined_since_step = 0
+
+    # -- admission ------------------------------------------------------ #
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and not s.done]
+
+    @property
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def join(self, prompt: List[int], max_new: int = 128, *,
+             controller=None, request_id: str = "", task: str = "",
+             stop_token: Optional[int] = None, enc_out=None) -> int:
+        """Prefill `prompt` into a free cache row; returns the slot index."""
+        free = self.free_slots
+        if not free:
+            raise RuntimeError("no free slot — retire a request first")
+        idx = free[0]
+        controller = controller or self.controller_factory()
+        drafter = self.drafter_factory()
+        drafter.reset()
+        # the first request consumes exactly the legacy engine's rng stream
+        # (bit-identical batch=1 behaviour); later requests get their own
+        n = self._req_counter
+        rng = (np.random.default_rng(self.seed) if n == 0
+               else np.random.default_rng([self.seed, n]))
+        self._req_counter += 1
+
+        tel = RequestTelemetry(request_id=request_id, task=task,
+                               prompt_len=len(prompt))
+        row = T.init_cache(self.cfg, 1, self.max_len, window=self.window)
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        t0 = time.perf_counter()
+        logits, row, _ = self._prefill(self.params, toks, row, enc_out)
+        logits = np.asarray(logits[0, -1], np.float32)
+        tel.t_prefill = time.perf_counter() - t0
+        self.cache = T.write_cache_row(self.cache, idx, row)
+
+        first = _sample_logits(rng, logits, self.temperature)
+        self.slots[idx] = _Slot(
+            index=idx, request_id=request_id, task=task, max_new=max_new,
+            stop_token=stop_token, controller=controller, drafter=drafter,
+            rng=rng, tel=tel, history=list(prompt) + [first], out=[first],
+            last_tok=first)
+        self._joined_since_step += 1
+        return idx
+
+    def retire(self, idx: int) -> GenerationResult:
+        """Free the slot and return the finished request's result."""
+        s = self.slots[idx] if 0 <= idx < self.max_batch else None
+        if s is None:
+            raise KeyError(f"slot {idx} is empty (table size "
+                           f"{self.max_batch})")
+        self.cache = T.clear_cache_row(self.cache, idx)
+        self.slots[idx] = None
+        return GenerationResult(s.out[:s.max_new], s.tel)
+
+    # -- the shared iteration ------------------------------------------- #
+
+    def step(self) -> dict:
+        """One continuous-batching iteration over every live request:
+        per-request drafting, one padded shared verification pass, per-row
+        rejection sampling and rollback, marginal cost attribution.
+        Returns {slot: emitted tokens}; empty when nothing is live."""
+        active = self.active_slots
+        if not active:
+            return {}
+        b = self.max_batch
+        lengths_before = np.asarray(self.cache["lengths"])
+
+        # 1. per-request drafting (each request's own controller decides K_i)
+        k_req, drafts, draft_probs, wall_draft = {}, {}, {}, {}
+        for i in active:
+            s = self.slots[i]
+            k_req[i] = s.controller.next_k()
+            t0 = time.perf_counter()
+            drafts[i], draft_probs[i] = s.drafter.propose(
+                s.history, k_req[i], rng=s.rng)
+            wall_draft[i] = time.perf_counter() - t0
+
+        # 2. pack ragged [1 + K_i] spans into one padded batch
+        t_max = max(1 + len(drafts[i]) for i in active)
+        toks = np.zeros((b, t_max), np.int32)
+        mask = np.zeros((b, t_max), bool)
+        for i in active:
+            s = self.slots[i]
+            span = [s.last_tok] + drafts[i]
+            toks[i, :len(span)] = span
+            mask[i, :len(span)] = True
+
+        # 3. shared verification pass
+        t1 = time.perf_counter()
+        lo, new_cache, aux, staged = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(mask))
+        lo = np.asarray(lo, np.float32)            # [B, T_max, V]
+        wall_verify = time.perf_counter() - t1
+
+        # 4. per-row rejection sampling
+        results, wall_sample = {}, {}
+        for i in active:
+            s = self.slots[i]
+            n_i = 1 + len(drafts[i])
+            t2 = time.perf_counter()
+            if self.temperature <= 0:
+                results[i] = greedy_verify(lo[i, :n_i], drafts[i])
+            else:
+                probs = np.asarray(logits_to_probs(
+                    jnp.asarray(lo[i, :n_i]), self.temperature))
+                results[i] = rejection_sample(s.rng, probs, drafts[i],
+                                              draft_probs[i])
+            wall_sample[i] = time.perf_counter() - t2
+
+        # 5. vectorized per-row rollback (idle rows keep length unchanged)
+        n_keep = np.zeros((b,), np.int32)
+        for i in active:
+            n_keep[i] = 1 + results[i].n_accepted
+        self.cache = T.rollback_cache(self.cfg, new_cache, staged,
+                                      jnp.asarray(n_keep),
+                                      jnp.asarray(lengths_before))
+
+        # 6. batch-aware cost accounting + marginal attribution
+        union = per_row = None
+        if self.cfg.is_moe and "unique_experts" in aux:
+            union = float(np.mean(np.asarray(aux["unique_experts"])))
+        if self.cfg.is_moe and "unique_experts_row" in aux:
+            per_row = np.mean(np.asarray(aux["unique_experts_row"],
+                                         np.float64), axis=0)   # [B]
+        tokens_per_row = [int(mask[i].sum()) for i in range(b)]
+        cost = cm.batch_iteration_time(
+            self.cfg, self.hw, tokens_per_row, list(lengths_before),
+            unique_experts=union,
+            per_request_unique=(None if per_row is None else
+                                [per_row[i] if i in active else 0.0
+                                 for i in range(b)]),
+            affinity=self.affinity, window=self.window)
+        t_verify_shared = (wall_verify if self.clock == "wall"
+                           else cost["t_iter"])
+
+        # 7. feed back per request; advance token state
+        emitted_by_slot = {}
+        occupancy = len(active)
+        n_tokens = sum(tokens_per_row)
+        padded = occupancy * t_max - n_tokens
+        t_overhead = 0.0
+        for i in active:
+            s = self.slots[i]
+            res = results[i]
+            k_eff = len(drafts[i])
+            emitted = res.accepted + [res.next_token]
+            s.out.extend(emitted)
+            s.history.extend(emitted)
+            s.last_tok = res.next_token
+
+            attr = cost["per_request"][i]
+            frac = (attr["bytes_attr"] / cost["bytes"]
+                    if cost["bytes"] else 1.0 / occupancy)
+            t_verify = (wall_verify * frac if self.clock == "wall"
+                        else attr["t_attr"])
+            t_draft = (wall_draft[i] if self.clock == "wall"
+                       else cm.draft_time(self.hw, k_eff,
+                                          s.drafter.active_params))
+            t_sample = (wall_sample[i] if self.clock == "wall"
+                        else cm.sample_time(k_eff))
+            t_iter = t_draft + t_verify + t_sample
+            t_overhead = max(t_overhead, t_draft + t_sample)
+
+            s.controller.observe(len(emitted), t_iter, t_draft=t_draft,
+                                 t_verify=t_verify, t_sample=t_sample,
+                                 k=k_eff if k_req[i] > 0 else 0,
+                                 batch=occupancy)
+            s.tel.iterations.append(IterationTelemetry(
+                iteration=s.iteration, k_requested=k_req[i],
+                k_drafted=k_eff, tokens_emitted=len(emitted),
+                t_iter=t_iter, t_draft=t_draft, t_verify=t_verify,
+                t_sample=t_sample,
+                unique_experts=(float(per_row[i]) if per_row is not None
+                                else 0.0),
+                context_len=int(lengths_before[i]),
+                phase=getattr(s.controller, "phase", ""),
+                utility=s.controller.utility(),
+                batch_occupancy=occupancy,
+                union_experts=union or 0.0,
+                padding_frac=padded / (n_tokens + padded) if n_tokens else 0.0))
+            s.iteration += 1
+            emitted_by_slot[i] = emitted
+
+            if len(s.out) >= s.max_new:
+                s.done = True
+            if s.stop_token is not None and res.next_token == s.stop_token:
+                s.done = True
+            if len(s.history) + 16 >= self.max_len:
+                s.done = True
+
+        self.telemetry.steps.append(StepTelemetry(
+            step=self._step_idx, occupancy=occupancy,
+            tokens_in_flight=n_tokens, padded_tokens=padded,
+            union_experts=union or 0.0,
+            t_step=t_verify_shared, t_overhead=t_overhead,
+            joined=self._joined_since_step,
+            retired=sum(1 for i in active if self.slots[i].done)))
+        self._joined_since_step = 0
+        self._step_idx += 1
+        return emitted_by_slot
+
+    # -- batch=1 compatibility ------------------------------------------ #
+
+    def generate(self, prompt: List[int], max_new: int = 128, *,
+                 controller=None, request_id: str = "", task: str = "",
+                 stop_token: Optional[int] = None,
+                 enc_out=None) -> GenerationResult:
+        """Drive a single request to completion (other live slots advance
+        alongside it). At max_batch=1 this is the legacy `ServingEngine`
+        loop, token for token."""
+        idx = self.join(prompt, max_new, controller=controller,
+                        request_id=request_id, task=task,
+                        stop_token=stop_token, enc_out=enc_out)
+        while not self.slots[idx].done:
+            self.step()
+        return self.retire(idx)

@@ -13,14 +13,47 @@ class IterationTelemetry:
     k_requested: int           # controller's K
     k_drafted: int             # tokens the drafter actually proposed
     tokens_emitted: int        # accepted + 1
-    t_iter: float              # total iteration seconds (virtual or wall)
+    t_iter: float              # total iteration seconds (virtual or wall);
+                               # under batching, this request's attributed share
     t_draft: float
     t_verify: float
     t_sample: float
-    unique_experts: float = 0.0   # mean per layer (MoE only)
+    unique_experts: float = 0.0   # mean per layer (MoE only); under batching,
+                                  # this request's own tokens only
     context_len: int = 0
     phase: str = ""            # cascade phase when the iteration ran
     utility: float = 0.0       # analyzer's running utility after observe
+    # -- continuous-batching fields (defaults = legacy single-request) ---- #
+    batch_occupancy: int = 1   # requests sharing this verification pass
+    union_experts: float = 0.0  # batch-union unique experts (mean per layer)
+    padding_frac: float = 0.0  # padded fraction of the [B, T_max] step
+
+
+@dataclass
+class StepTelemetry:
+    """One continuous-batching engine step (the batch-level view the
+    per-request records can't show: occupancy, expert-union inflation, and
+    how much of the padded verification batch was wasted)."""
+    step: int
+    occupancy: int             # live requests in the pass
+    tokens_in_flight: int      # sum of (1 + K_i)
+    padded_tokens: int         # occupancy * T_max - tokens_in_flight
+    union_experts: float = 0.0  # batch-union unique experts (mean per layer)
+    t_step: float = 0.0        # shared verification seconds
+    t_overhead: float = 0.0    # serial non-verify cost: max_i(draft+sample)
+    joined: int = 0            # requests admitted before this step
+    retired: int = 0           # requests finished by this step
+
+    @property
+    def t_total(self) -> float:
+        """Wall time of the step: shared verify + the slowest request's
+        draft/sample work (drafting runs per-request, concurrently)."""
+        return self.t_step + self.t_overhead
+
+    @property
+    def padding_frac(self) -> float:
+        tot = self.tokens_in_flight + self.padded_tokens
+        return self.padded_tokens / tot if tot else 0.0
 
 
 @dataclass
@@ -62,3 +95,28 @@ class RequestTelemetry:
             "sample": sum(i.t_sample for i in its),
             "total": self.decode_time,
         }
+
+
+@dataclass
+class EngineTelemetry:
+    """Per-step telemetry of a continuous-batching engine run."""
+    steps: List[StepTelemetry] = field(default_factory=list)
+
+    @property
+    def mean_occupancy(self) -> float:
+        s = self.steps
+        return sum(t.occupancy for t in s) / len(s) if s else 0.0
+
+    @property
+    def mean_union_experts(self) -> float:
+        s = self.steps
+        return sum(t.union_experts for t in s) / len(s) if s else 0.0
+
+    @property
+    def mean_padding_frac(self) -> float:
+        s = self.steps
+        return sum(t.padding_frac for t in s) / len(s) if s else 0.0
+
+    @property
+    def total_time(self) -> float:
+        return sum(t.t_total for t in self.steps)

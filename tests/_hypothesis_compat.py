@@ -1,0 +1,92 @@
+"""Minimal in-repo fallback for `hypothesis` so the tier-1 suite collects
+and runs on machines without it (the real library is in requirements-dev.txt
+and is used whenever importable).
+
+Provides just the surface the tests use — `given`, `settings`, and the
+`integers` / `floats` / `lists` strategies — running each property test on a
+deterministic pseudo-random sample of examples (seeded per test name, so
+failures reproduce). No shrinking, no database; a red test here is a plain
+assertion error with the generated arguments in the traceback.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, sample_fn):
+        self._sample = sample_fn
+
+    def example(self, rng):
+        return self._sample(rng)
+
+
+class strategies:  # noqa: N801 — mirrors `hypothesis.strategies` module use
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def sample(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(sample)
+
+
+st = strategies
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator: records max_examples on the (given-wrapped) function."""
+    def deco(fn):
+        fn._max_examples = min(max_examples, 100)
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters.values())
+        # hypothesis semantics: positional strategies fill the RIGHTMOST
+        # parameters; keyword strategies fill their named parameters. What
+        # remains are pytest fixtures and must stay visible to pytest.
+        pos_names = ([p.name for p in params[-len(arg_strategies):]]
+                     if arg_strategies else [])
+        fixture_params = [p for p in params
+                          if p.name not in kw_strategies
+                          and p.name not in pos_names]
+
+        @functools.wraps(fn)
+        def wrapper(**fixture_kwargs):
+            n = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__name__.encode()) & 0xFFFFFFFF)
+            for _ in range(n):
+                # everything by name, so generated values land on their own
+                # parameters even when fixtures precede them in the signature
+                kwargs = dict(zip(pos_names,
+                                  (s.example(rng) for s in arg_strategies)))
+                kwargs.update((k, s.example(rng))
+                              for k, s in kw_strategies.items())
+                fn(**fixture_kwargs, **kwargs)
+
+        # pytest must only see the fixture parameters, not generated ones
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(fixture_params)
+        return wrapper
+    return deco

@@ -6,7 +6,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic in-repo fallback (requirements-dev.txt)
+    from tests._hypothesis_compat import given, settings, st
 
 from repro.core import (CascadeConfig, CascadeController, IterationRecord,
                         SpeculationManager, UtilityAnalyzer, TPU_V5E,

@@ -22,10 +22,10 @@ from repro.models import transformer as T
 @pytest.fixture(scope="module")
 def mesh44():
     # 4 "devices" arranged logically; on 1 real device jax.make_mesh fails,
-    # so build an abstract mesh over repeated device entries is not allowed.
-    # Use AbstractMesh for rule checks.
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((4, 4), ("data", "model"))
+    # and an abstract mesh needs no devices at all. make_abstract_mesh
+    # absorbs the AbstractMesh constructor change across jax versions.
+    from repro.launch.mesh import make_abstract_mesh
+    return make_abstract_mesh((4, 4), ("data", "model"))
 
 
 def test_param_rules_divisibility_fallback(mesh44):

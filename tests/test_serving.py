@@ -4,7 +4,11 @@ output, token for token, regardless of K policy."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic in-repo fallback (requirements-dev.txt)
+    from tests._hypothesis_compat import given, settings, st
 
 import jax
 
