@@ -150,11 +150,104 @@ def batch_sweep(fast: bool = False, batches=(1, 2, 4, 8)):
     return rows
 
 
+# --------------------------------------------------------------------- #
+# Chunked-prefill sweep (model clock): queue depth x chunk -> TTFT / TPOT
+# --------------------------------------------------------------------- #
+
+def _prefill_requests(cfg, n_requests: int, prompt_len: int, max_new: int):
+    """Long draftable prompts with staggered output lengths — the
+    steady-state admission regime, where retirements interleave with
+    admissions and a new request's prefill can ride in-flight decode
+    passes."""
+    rng = np.random.default_rng(23)
+    reqs = []
+    for i in range(n_requests):
+        period = 6 + 2 * (i % 3)
+        pat = [int(x) for x in rng.integers(3, cfg.vocab_size, period)]
+        prompt = (pat * (prompt_len // period + 1))[:prompt_len]
+        reqs.append(Request(request_id=f"r{i}", prompt=prompt,
+                            max_new=max_new + 2 * max_new * (i % 3),
+                            task=f"p{period}"))
+    return reqs
+
+
+def prefill_sweep(fast: bool = False, depths=(2, 8), chunks=None):
+    """Queue depth x chunk size grid on the deterministic model clock.
+
+    chunk=0 is the legacy blocking admission: every join stalls all
+    in-flight decodes for the full prefill, and B queued prompts pay B
+    serial weight reads. chunk>0 co-schedules prefill chunks into the
+    shared verification pass: concurrent admissions share one weight read
+    and ride decode passes that happen anyway. Small chunks trade TTFT for
+    decode interference (more steps, each with its fixed overhead — the
+    Sarathi-style trade); large chunks amortize it, so under a deep queue
+    the best chunked point must come out with LOWER mean TTFT than blocking
+    (checked, like the batch-sweep drift gate)."""
+    cfg = get_config("mixtral-8x7b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompt_len = 96 if fast else 192
+    max_new = 8 if fast else 12
+    if chunks is None:
+        chunks = (0, prompt_len // 3, 2 * prompt_len // 3, prompt_len)
+
+    rows = []
+    for depth in depths:
+        for chunk in chunks:
+            eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                                max_batch=4, max_len=512, temperature=0.0,
+                                clock="model", seed=0, chunk=chunk)
+            sched = ContinuousBatchingScheduler(
+                eng, controller_factory=lambda: CascadeController())
+            sched.run(_prefill_requests(cfg, depth, prompt_len, max_new))
+            tel = eng.telemetry
+            row = {
+                "depth": depth,
+                "chunk": chunk,
+                "mean_ttft": sched.mean_ttft(),
+                "mean_queue_delay": sched.mean_queue_delay(),
+                "mean_tpot": sched.mean_tpot(),
+                "tokens_per_s": sched.tokens_per_second(),
+                "prefill_token_frac": tel.prefill_token_frac,
+                "steps": len(tel.steps),
+            }
+            rows.append(row)
+            emit(f"serving_micro/prefill_d{depth}_c{chunk}_mean_ttft",
+                 row["mean_ttft"],
+                 f"queue={row['mean_queue_delay']:.4f}s")
+            emit(f"serving_micro/prefill_d{depth}_c{chunk}_tokens_per_s",
+                 row["tokens_per_s"],
+                 f"prefill_frac={row['prefill_token_frac']:.3f}")
+
+    deep = max(depths)
+    blocking = [r for r in rows if r["depth"] == deep and r["chunk"] == 0]
+    chunked = [r for r in rows if r["depth"] == deep and r["chunk"] > 0]
+    if not blocking or not chunked:
+        raise ValueError("prefill sweep needs chunk=0 and a chunked point "
+                         "at the deepest queue for the admission gate")
+    best = min(chunked, key=lambda r: r["mean_ttft"])
+    gain = blocking[0]["mean_ttft"] / best["mean_ttft"] \
+        if best["mean_ttft"] else 0.0
+    emit("serving_micro/prefill_deep_queue_ttft_gain", gain,
+         f"blocking/chunk{best['chunk']};must-be>1")
+    save_json("serving_micro_prefill_sweep",
+              {"prompt_len": prompt_len, "max_new": max_new,
+               "max_batch": 4, "rows": rows,
+               "deep_queue_ttft_gain": gain,
+               "best_chunk": best["chunk"]})
+    if gain <= 1.0:
+        raise SystemExit(
+            f"chunked admission did not beat blocking TTFT at depth {deep} "
+            f"(gain {gain:.3f})")
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--batch-sweep", action="store_true",
                     help="continuous-batching sweep over B in {1,2,4,8}")
+    ap.add_argument("--prefill-sweep", action="store_true",
+                    help="queue depth x chunk size -> TTFT/TPOT sweep")
     ap.add_argument("--no-micro", action="store_true",
                     help="skip the single-call microbenchmarks")
     args = ap.parse_args()
@@ -162,3 +255,5 @@ if __name__ == "__main__":
         main(fast=args.fast)
     if args.batch_sweep:
         batch_sweep(fast=args.fast)
+    if args.prefill_sweep:
+        prefill_sweep(fast=args.fast)

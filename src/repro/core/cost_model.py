@@ -223,8 +223,8 @@ def iteration_time(cfg, hw: Hardware, n_tokens: int, context_len: int,
 def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
                          context_lens, *, unique_experts: float = None,
                          per_request_unique=None, affinity: float = 0.0,
-                         window: int = 0, fixed_overhead: float = 2e-4
-                         ) -> dict:
+                         window: int = 0, fixed_overhead: float = 2e-4,
+                         prefill_tokens=None) -> dict:
     """Seconds for one *shared* verification pass over B requests, request i
     contributing n_i = tokens_per_request[i] in-flight tokens against its own
     context_lens[i]-token KV cache.
@@ -247,6 +247,14 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
                           the full read, the batch amortizes it.
     sum_i(t_attr_i) == t_iter by construction.
 
+    `prefill_tokens` ([B] ints, default all-zero) marks how many of each
+    request's in-flight tokens are co-scheduled prompt-chunk tokens. They
+    add the same terms `prefill_time` prices for blocking admission — the
+    chunk's KV *writes*, its embedding-row reads, and causal attention over
+    itself — so chunked and blocking prefill tick the model clock on
+    commensurable units (a decode span's single-span KV append stays
+    negligible and unpriced, as before).
+
     Returns iteration_time's keys plus `per_request` (list of dicts with
     t_attr / bytes_attr / marginal_experts) and `n_requests`."""
     wb = 2
@@ -256,6 +264,10 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
         raise ValueError(f"{len(ns)} token counts vs {len(cls)} contexts")
     b_req = len(ns)
     total_tokens = sum(ns)
+    ps = ([0] * b_req if prefill_tokens is None else
+          [max(int(p), 0) for p in prefill_tokens])
+    if len(ps) != b_req:
+        raise ValueError(f"{len(ps)} prefill counts vs {b_req} requests")
 
     est = expected_unique_experts_batch(
         cfg.num_experts, cfg.experts_per_token, ns, affinity) \
@@ -264,12 +276,16 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
 
     weights = _weight_read_bytes(cfg, wb)
     experts = _expert_read_bytes(cfg, union, wb)
-    kv_each = [_kv_read_bytes(cfg, c, window, wb) if n > 0 else 0.0
-               for n, c in zip(ns, cls)]
+    n_attn = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
+    prefill_bytes_per_tok = (kv_bytes_per_token(cfg, wb) * n_attn
+                             + cfg.d_model * wb)   # KV write + embed row
+    kv_each = [_kv_read_bytes(cfg, c, window, wb)
+               + p * prefill_bytes_per_tok if n > 0 else 0.0
+               for n, c, p in zip(ns, cls, ps)]
     total_bytes = weights + experts + sum(kv_each)
 
-    flops = sum(iteration_flops(cfg, n, c, window)
-                for n, c in zip(ns, cls) if n > 0)
+    flops = sum(iteration_flops(cfg, n, c + p, window)
+                for n, c, p in zip(ns, cls, ps) if n > 0)
     t_mem = total_bytes / hw.hbm_bw
     t_compute = flops / hw.peak_flops
     t = max(t_mem, t_compute) + fixed_overhead
@@ -305,6 +321,77 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
             "bytes": total_bytes, "expert_bytes": experts, "flops": flops,
             "unique_experts": union, "n_requests": b_req,
             "n_tokens": total_tokens, "per_request": per_request}
+
+
+# --------------------------------------------------------------------- #
+# Prefill pricing (chunked admission — the compute-bound regime)
+# --------------------------------------------------------------------- #
+
+def prefill_chunk_bytes(cfg, n_tokens: int, context_len: int = 0,
+                        unique_experts: float = None, affinity: float = 0.0,
+                        window: int = 0, wb: int = None) -> dict:
+    """HBM bytes moved by one prefill chunk of `n_tokens` prompt tokens
+    entering a cache that already holds `context_len` tokens.
+
+    Differs from decode `iteration_bytes` in two ways that matter for TTFT:
+    the chunk *writes* its own KV rows (decode's single-token append is
+    negligible; a 128-token chunk's is not), and the expert union is driven
+    by the chunk's full token count, which saturates toward `num_experts`
+    far faster than a [1+K] decode span."""
+    wb = wb or 2
+    n_tokens = max(int(n_tokens), 0)
+    if cfg.is_moe and unique_experts is None:
+        unique_experts = expected_unique_experts(
+            cfg.num_experts, cfg.experts_per_token, n_tokens, affinity)
+    weights = _weight_read_bytes(cfg, wb)
+    experts = _expert_read_bytes(cfg, unique_experts or 0.0, wb)
+    kv_read = _kv_read_bytes(cfg, context_len, window, wb)
+    n_attn = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
+    kv_write = n_tokens * kv_bytes_per_token(cfg, wb) * n_attn
+    embed = n_tokens * cfg.d_model * wb  # embedding-row reads per token
+    total = weights + experts + kv_read + kv_write + embed
+    return {"weights": weights, "experts": experts, "kv": kv_read,
+            "kv_write": kv_write, "embed": embed, "total": total,
+            "unique_experts": unique_experts or 0.0}
+
+
+def prefill_time(cfg, hw: Hardware, n_tokens: int, context_len: int = 0,
+                 unique_experts: float = None, affinity: float = 0.0,
+                 window: int = 0, fixed_overhead: float = 2e-4) -> dict:
+    """Seconds for one prefill pass/chunk under the model clock. Unlike
+    decode, prefill crosses the roofline: FLOPs grow linearly (and the
+    attention term quadratically) with the chunk while the dominant weight
+    read stays constant, so large chunks are compute-bound — max(memory,
+    compute) switches sides, which is exactly why the model clock must price
+    prefill separately for TTFT to mean anything."""
+    n_tokens = max(int(n_tokens), 1)
+    b = prefill_chunk_bytes(cfg, n_tokens, context_len, unique_experts,
+                            affinity, window)
+    # the chunk attends causally to the cached context plus itself
+    f = iteration_flops(cfg, n_tokens, context_len + n_tokens, window)
+    t_mem = b["total"] / hw.hbm_bw
+    t_compute = f / hw.peak_flops
+    t = max(t_mem, t_compute) + fixed_overhead
+    return {"t_iter": t, "t_mem": t_mem, "t_compute": t_compute,
+            "bytes": b["total"], "expert_bytes": b["experts"],
+            "flops": f, "unique_experts": b["unique_experts"],
+            "compute_bound": t_compute >= t_mem}
+
+
+def prefill_crossover_tokens(cfg, hw: Hardware, context_len: int = 0,
+                             affinity: float = 0.0, window: int = 0,
+                             max_chunk: int = 65536) -> int:
+    """Smallest chunk size at which prefill becomes compute-bound (crosses
+    the roofline) — the natural upper bound for a chunked-admission `chunk`:
+    beyond it, bigger chunks stop amortizing the weight read and only add
+    head-of-line latency for the decodes sharing the pass."""
+    n = 1
+    while n <= max_chunk:
+        if prefill_time(cfg, hw, n, context_len, affinity=affinity,
+                        window=window)["compute_bound"]:
+            return n
+        n *= 2
+    return max_chunk
 
 
 def draft_time(hw: Hardware, k: int, drafter_active_params: int = 0,

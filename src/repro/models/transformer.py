@@ -148,6 +148,16 @@ def init_cache(cfg, batch: int, max_len: int, *, window: int = 0,
     return cache
 
 
+def bucket_length(t: int, minimum: int = 1) -> int:
+    """Round a span length up to the next power of two. Chunked prefill pads
+    every [B, T] pass to a bucketed T so the jitted pass is traced once per
+    bucket instead of once per distinct prompt/chunk length — the blocking
+    prefill's retrace-per-prompt-length pathology does not come back through
+    the chunked path."""
+    t = max(int(t), int(minimum), 1)
+    return 1 << (t - 1).bit_length()
+
+
 def cache_slots(cache, positions_1d):
     """Map absolute positions [T] to ring slots [T]."""
     r = cache["pos"].shape[1]
@@ -662,3 +672,27 @@ def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
                                           moe_exact=moe_exact,
                                           token_mask=token_mask)
     return logits, cache, aux, staged
+
+
+def prefill_chunk(cfg, params, cache, tokens, *, token_mask=None,
+                  rope_pos=None, window: int = 0, moe_exact: bool = True):
+    """Advance cache rows by their masked prompt-chunk tokens — the chunked
+    half of non-blocking admission.
+
+    Chunked prefill is verification-shaped compute: row b's chunk enters at
+    positions lengths[b]..lengths[b]+T-1, attends causally to its own cached
+    context plus the in-chunk prefix, and writes its KV exactly like a
+    decode span. It is therefore the decode pass with `token_mask` doing the
+    ragged-chunk bookkeeping, which is what lets a serving engine pack
+    prefill chunks and speculative [1+K_i] decode spans into ONE padded
+    batched pass (prefill tokens then count toward the expert union — the
+    paper's Fig. 2 cost driver now includes admission pressure). Callers
+    roll each row back to its real chunk length, exactly like rejected
+    drafts, and should pad T with `bucket_length` so jit traces are reused
+    across prompt lengths.
+
+    Returns (logits [B,T,V], new_cache, aux, staged); a row's last real
+    position holds the next-token distribution once its prompt is done."""
+    return decode_step(cfg, params, cache, tokens, rope_pos=rope_pos,
+                       window=window, moe_exact=moe_exact,
+                       token_mask=token_mask)

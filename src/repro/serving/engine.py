@@ -64,6 +64,46 @@ def _sample_logits(rng: np.random.Generator, logits: np.ndarray,
     return sample_token(rng, probs)
 
 
+def _spec_room(controller, drafter=None) -> int:
+    """Worst-case tokens one speculative iteration may append: 1 (the
+    committed token) + the controller's K ceiling. This is the KV-ring
+    guard's safety margin — it used to be a hardcoded 16, which overflows
+    the cache for any controller with k_max > 15. Fallback chain:
+    controller config k_max -> static controller k -> drafter proposal cap
+    -> the legacy 15."""
+    cfg = getattr(controller, "config", None)
+    k_cap = getattr(cfg, "k_max", None) if cfg is not None else None
+    if k_cap is None:
+        k_cap = getattr(controller, "k", None)
+    if k_cap is None:
+        k_cap = getattr(drafter, "max_propose", None)
+    if k_cap is None:
+        k_cap = 15
+    return 1 + int(k_cap)
+
+
+def _truncate_at_stop(emitted: List[int], stop_token: Optional[int]
+                      ) -> tuple:
+    """Cut an iteration's emitted tokens at the first stop token
+    (inclusive). A stop token accepted mid-draft must terminate the request
+    — the old engines only tested the final `next_token`, silently emitting
+    tokens past a stop accepted from the drafts."""
+    if stop_token is None or stop_token not in emitted:
+        return emitted, False
+    return emitted[:emitted.index(stop_token) + 1], True
+
+
+def _prefill_clock(cfg, hw, clock: str, n_tokens: int, wall: float, *,
+                   affinity: float, window: int) -> float:
+    """Prefill seconds on the engine's clock: wall seconds under
+    clock="wall", cm.prefill_time under the virtual model clock (wall time
+    of a jitted CPU trace must never mix into the virtual clock)."""
+    if clock == "wall":
+        return wall
+    return cm.prefill_time(cfg, hw, n_tokens, affinity=affinity,
+                           window=window)["t_iter"]
+
+
 class ServingEngine:
     """Single-request-at-a-time serving (the paper's single-batch,
     latency-bound setting)."""
@@ -118,6 +158,11 @@ class ServingEngine:
                  stop_token: Optional[int] = None,
                  enc_out=None) -> GenerationResult:
         cfg = self.cfg
+        if not prompt:
+            raise ValueError("empty prompt — nothing to prefill")
+        if len(prompt) >= self.max_len:
+            raise ValueError(f"prompt of {len(prompt)} tokens cannot fit a "
+                             f"max_len={self.max_len} cache")
         controller = controller or self.controller_factory()
         self.drafter.reset()
         tel = RequestTelemetry(request_id=request_id, task=task,
@@ -128,21 +173,42 @@ class ServingEngine:
         t0 = time.perf_counter()
         logits, cache, _ = self._prefill(self.params, toks, cache, enc_out)
         logits = np.asarray(logits[0, -1], np.float32)
-        tel.t_prefill = time.perf_counter() - t0
+        wall_prefill = time.perf_counter() - t0
+        tel.t_prefill = _prefill_clock(cfg, self.hw, self.clock,
+                                       len(prompt), wall_prefill,
+                                       affinity=self.affinity,
+                                       window=self.window)
+        tel.ttft = tel.t_prefill  # serial engine: no admission queue
 
         history = list(prompt)
         # first output token comes from the prefill logits
         last_tok = self._sample(logits)
         out: List[int] = [last_tok]
         history.append(last_tok)
+        if stop_token is not None and last_tok == stop_token:
+            return GenerationResult(out[:max_new], tel)
 
+        margin = _spec_room(controller, self.drafter)
         it = 0
         while len(out) < max_new:
+            if len(history) + margin > self.max_len:
+                break  # next span of up to 1+k_max tokens would overflow
             k_req = controller.next_k()
             t0 = time.perf_counter()
             drafts, draft_probs = self.drafter.propose(history, k_req,
                                                        rng=self.rng)
             wall_draft = time.perf_counter() - t0
+            # belt-and-braces: never let a span write past the cache even if
+            # a drafter over-proposes beyond the controller's cap; windowed
+            # ring caches additionally bound spans to their SPEC_PAD spill
+            # slots so speculative writes cannot clobber the live window
+            room = self.max_len - len(history)
+            if self.window:
+                room = min(room, T.SPEC_PAD - 1)
+            if len(drafts) > room:
+                drafts = drafts[:max(room, 0)]
+                if draft_probs is not None:
+                    draft_probs = draft_probs[:len(drafts)]
             k_eff = len(drafts)
 
             step_toks = jnp.asarray([ [last_tok] + drafts ], jnp.int32)
@@ -165,10 +231,11 @@ class ServingEngine:
             n_keep = 1 + res.n_accepted           # last_tok + accepted drafts
             cache = T.rollback_cache(cfg, new_cache, staged, n_keep,
                                      len_before)
-            emitted = res.accepted + [res.next_token]
+            emitted, stopped = _truncate_at_stop(
+                res.accepted + [res.next_token], stop_token)
             out.extend(emitted)
             history.extend(emitted)
-            last_tok = res.next_token
+            last_tok = emitted[-1]
 
             uniq = None
             if "unique_experts" in aux and cfg.is_moe:
@@ -192,9 +259,7 @@ class ServingEngine:
                 phase=getattr(controller, "phase", ""),
                 utility=controller.utility()))
             it += 1
-            if stop_token is not None and res.next_token == stop_token:
-                break
-            if len(history) + 16 >= self.max_len:
+            if stopped:
                 break
         return GenerationResult(out[:max_new], tel)
 
@@ -212,7 +277,10 @@ class ServingEngine:
 class _Slot:
     """One in-flight request: its own controller, drafter, rng stream,
     telemetry, and token state. The model-side state is row `index` of the
-    engine's per-row batched cache."""
+    engine's per-row batched cache. A chunk-admitted slot starts in
+    phase="prefill" with its prompt pending; step() feeds it chunk by chunk
+    until the prompt is consumed, samples the first output token, and flips
+    it to phase="decode"."""
     index: int
     request_id: str
     task: str
@@ -227,25 +295,38 @@ class _Slot:
     last_tok: int
     done: bool = False
     iteration: int = 0
+    phase: str = "decode"            # "prefill" -> "decode"
+    prompt: Optional[List[int]] = None   # pending prompt (chunked admission)
+    prefill_pos: int = 0             # prompt tokens already in the cache
+    t_submit: float = 0.0            # engine-clock time of submission
+    queue_seen: bool = False         # t_queue recorded yet?
+    seq: int = 0                     # admission order (FIFO prefill packing)
 
 
 class BatchedEngine:
     """Continuous-batching serving engine.
 
     API:
-        join(prompt, ...) -> slot    admit + prefill a request into a free
-                                     cache row (raises when full)
-        step() -> {slot: emitted}    one shared draft/verify/rollback pass
-                                     over every live request
+        join(prompt, ...) -> slot    admit a request into a free cache row
+                                     (raises when full). chunk=0: blocking
+                                     prefill here; chunk>0: non-blocking —
+                                     prefill runs chunked inside step()
+        step() -> {slot: emitted}    one shared pass packing speculative
+                                     decode spans AND pending prefill chunks
+                                     (budgeted by max_prefill_tokens_per_step)
         retire(slot) -> result       collect a finished request, free the row
         generate(prompt, ...)        batch=1 compatibility wrapper: at
-                                     max_batch=1 this reproduces the legacy
-                                     `ServingEngine` token stream bit-exactly
-                                     on the same seed (greedy and sampled).
+                                     max_batch=1, chunk=0 this reproduces the
+                                     legacy `ServingEngine` token stream
+                                     bit-exactly on the same seed (greedy and
+                                     sampled).
 
     Each request keeps its own Cascade controller; the shared verification
     cost is attributed back per request via the cost model's marginal-bytes
-    split, so per-request utility stays meaningful under batching."""
+    split, so per-request utility stays meaningful under batching. The
+    engine clock `now` (virtual under clock="model") prices admission too:
+    queue delay, chunked/blocking prefill, and TTFT are all on one clock
+    (see docs/prefill.md)."""
 
     def __init__(self, cfg, params, drafter_factory: Callable = None, *,
                  max_batch: int = 8,
@@ -256,7 +337,9 @@ class BatchedEngine:
                  window: int = 0,
                  max_len: int = 2048,
                  temperature: float = 1.0,
-                 seed: int = 0):
+                 seed: int = 0,
+                 chunk: int = 0,
+                 max_prefill_tokens_per_step: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.drafter_factory = drafter_factory or (lambda: NGramDrafter())
@@ -270,6 +353,19 @@ class BatchedEngine:
         self.max_len = max_len
         self.temperature = temperature
         self.seed = seed
+        # chunk=0: legacy blocking prefill inside join() (bit-exact with the
+        # single-request engine at max_batch=1). chunk>0: join() only
+        # enqueues; step() co-schedules up to `chunk` prompt tokens per
+        # request into the shared verification pass, bounded by the
+        # admission budget below.
+        self.chunk = int(chunk)
+        if max_prefill_tokens_per_step is None:
+            max_prefill_tokens_per_step = self.chunk * max_batch
+        self.max_prefill_tokens_per_step = int(max_prefill_tokens_per_step)
+        #: engine clock: virtual seconds under clock="model" (cost-model
+        #: priced steps + blocking prefills), wall seconds under "wall".
+        #: Queue-delay and TTFT telemetry are measured on this clock.
+        self.now = 0.0
 
         self.slots: List[Optional[_Slot]] = [None] * max_batch
         self.cache = T.init_cache(cfg, max_batch, max_len, window=window,
@@ -298,8 +394,25 @@ class BatchedEngine:
 
     def join(self, prompt: List[int], max_new: int = 128, *,
              controller=None, request_id: str = "", task: str = "",
-             stop_token: Optional[int] = None, enc_out=None) -> int:
-        """Prefill `prompt` into a free cache row; returns the slot index."""
+             stop_token: Optional[int] = None, enc_out=None,
+             submit_time: Optional[float] = None) -> int:
+        """Admit `prompt` into a free cache row; returns the slot index.
+
+        chunk=0: blocking — runs the full prefill here, stalling every
+        in-flight decode for its duration (the legacy path).
+        chunk>0: non-blocking — only enqueues the prompt; step() feeds it
+        into the shared pass chunk by chunk under the admission budget.
+        Encoder-decoder requests (enc_out) fall back to the blocking path:
+        their cross-attention KV is only populated by a prefill-mode pass,
+        which the chunked decode-shaped pass cannot do.
+        `submit_time` (engine-clock seconds, e.g. recorded by a scheduler at
+        enqueue) anchors the request's queue-delay/TTFT telemetry; default
+        is "submitted now"."""
+        if not prompt:
+            raise ValueError("empty prompt — nothing to prefill")
+        if len(prompt) >= self.max_len:
+            raise ValueError(f"prompt of {len(prompt)} tokens cannot fit a "
+                             f"max_len={self.max_len} cache row")
         free = self.free_slots
         if not free:
             raise RuntimeError("no free slot — retire a request first")
@@ -314,24 +427,76 @@ class BatchedEngine:
                else np.random.default_rng([self.seed, n]))
         self._req_counter += 1
 
+        t_submit = self.now if submit_time is None else float(submit_time)
         tel = RequestTelemetry(request_id=request_id, task=task,
                                prompt_len=len(prompt))
+
+        if self.chunk > 0 and enc_out is None:
+            # non-blocking admission: no forward pass here; the row's cache
+            # is empty (lengths[idx] == 0) and fills chunk by chunk
+            self.slots[idx] = _Slot(
+                index=idx, request_id=request_id, task=task,
+                max_new=max_new, stop_token=stop_token,
+                controller=controller, drafter=drafter, rng=rng, tel=tel,
+                history=list(prompt), out=[], last_tok=-1,
+                phase="prefill", prompt=list(prompt),
+                t_submit=t_submit, seq=n)
+            self._joined_since_step += 1
+            return idx
+
         row = T.init_cache(self.cfg, 1, self.max_len, window=self.window)
         toks = jnp.asarray(prompt, jnp.int32)[None, :]
         t0 = time.perf_counter()
         logits, row, _ = self._prefill(self.params, toks, row, enc_out)
         logits = np.asarray(logits[0, -1], np.float32)
-        tel.t_prefill = time.perf_counter() - t0
+        wall_prefill = time.perf_counter() - t0
+        tel.t_prefill = _prefill_clock(self.cfg, self.hw, self.clock,
+                                       len(prompt), wall_prefill,
+                                       affinity=self.affinity,
+                                       window=self.window)
+        tel.t_queue = max(self.now - t_submit, 0.0)
+        tel.ttft = tel.t_queue + tel.t_prefill
+        self.now += tel.t_prefill  # blocking: everyone waits out the prefill
         self.cache = T.write_cache_row(self.cache, idx, row)
 
         first = _sample_logits(rng, logits, self.temperature)
-        self.slots[idx] = _Slot(
+        slot = _Slot(
             index=idx, request_id=request_id, task=task, max_new=max_new,
             stop_token=stop_token, controller=controller, drafter=drafter,
             rng=rng, tel=tel, history=list(prompt) + [first], out=[first],
-            last_tok=first)
+            last_tok=first, t_submit=t_submit, seq=n)
+        self._maybe_finish(slot,
+                           stopped=stop_token is not None
+                           and first == stop_token)
+        self.slots[idx] = slot
         self._joined_since_step += 1
         return idx
+
+    def _attr_share(self, cost: dict, i: int, wall_verify: float,
+                    occupancy: int) -> float:
+        """Request i's attributed share of the shared pass, on the engine's
+        clock: marginal-bytes fraction of the wall time under clock="wall",
+        the cost model's t_attr under the virtual clock. One rule for both
+        the decode feedback and the chunked-prefill TTFT clock."""
+        attr = cost["per_request"][i]
+        if self.clock != "wall":
+            return attr["t_attr"]
+        frac = (attr["bytes_attr"] / cost["bytes"]
+                if cost["bytes"] else 1.0 / occupancy)
+        return wall_verify * frac
+
+    def _maybe_finish(self, s: _Slot, *, stopped: bool = False) -> None:
+        """The one termination rule, shared by every path that advances a
+        request (blocking join, decode feedback, chunked-prefill finish):
+        output budget reached, stop token emitted, or no worst-case
+        speculative span left before the cache end."""
+        if len(s.out) >= s.max_new:
+            s.done = True
+        if stopped:
+            s.done = True
+        if len(s.history) + _spec_room(s.controller, s.drafter) \
+                > self.max_len:
+            s.done = True
 
     def retire(self, idx: int) -> GenerationResult:
         """Free the slot and return the finished request's result."""
@@ -347,32 +512,89 @@ class BatchedEngine:
 
     def step(self) -> dict:
         """One continuous-batching iteration over every live request:
-        per-request drafting, one padded shared verification pass, per-row
-        rejection sampling and rollback, marginal cost attribution.
-        Returns {slot: emitted tokens}; empty when nothing is live."""
+        per-request drafting, one padded shared pass over speculative decode
+        spans AND co-scheduled prefill chunks, per-row rejection sampling
+        and rollback, marginal cost attribution. Prefill tokens count toward
+        the expert union, so admission pressure raises verification cost for
+        every request sharing the pass — the paper's Fig. 2 effect now
+        includes admission. Returns {slot: emitted tokens}; empty when
+        nothing is live."""
         active = self.active_slots
         if not active:
             return {}
         b = self.max_batch
+        slots = self.slots
         lengths_before = np.asarray(self.cache["lengths"])
+        decode_rows = [i for i in active if slots[i].phase == "decode"]
+        prefill_rows = sorted(
+            (i for i in active if slots[i].phase == "prefill"),
+            key=lambda i: slots[i].seq)
+
+        # EVERY non-done row of the padded pass gets T_max ring-slot writes
+        # starting at its own length (padding writes are rolled back, but
+        # they land first) — including rows whose prefill was NOT admitted
+        # this step. Cap this step's span lengths so no such row's padded
+        # writes can wrap past its cache end, and so a windowed ring's
+        # contiguous write stays inside its SPEC_PAD spill slots. Under
+        # chunked admission the cap is floored to a power of two, keeping
+        # the bucketed [B, T] trace shapes a small fixed set even when a
+        # long-running row squeezes the room step by step.
+        room_min = min(self.max_len - int(lengths_before[i])
+                       for i in active)
+        if self.window:
+            room_min = min(room_min, T.SPEC_PAD)
+        if self.chunk > 0 and room_min > 0:
+            room_min = 1 << (room_min.bit_length() - 1)
+
+        # 0. admission policy: pack pending prefill chunks FIFO under the
+        # per-step token budget. The head-of-queue chunk always runs (no
+        # starvation under a tiny budget); later chunks wait their turn.
+        # The capacity cap applies before the budget debit, so a capped
+        # head chunk does not eat budget it cannot use.
+        chunk_plan: dict = {}
+        budget = self.max_prefill_tokens_per_step
+        for i in prefill_rows:
+            s = slots[i]
+            n = min(self.chunk, len(s.prompt) - s.prefill_pos, room_min)
+            if n <= 0:
+                continue
+            if chunk_plan and n > budget:
+                break
+            chunk_plan[i] = n
+            budget -= n
+            if not s.queue_seen:
+                s.tel.t_queue = max(self.now - s.t_submit, 0.0)
+                s.queue_seen = True
+        if not decode_rows and not chunk_plan:
+            return {}
 
         # 1. per-request drafting (each request's own controller decides K_i)
         k_req, drafts, draft_probs, wall_draft = {}, {}, {}, {}
-        for i in active:
-            s = self.slots[i]
+        for i in decode_rows:
+            s = slots[i]
             k_req[i] = s.controller.next_k()
             t0 = time.perf_counter()
             drafts[i], draft_probs[i] = s.drafter.propose(
                 s.history, k_req[i], rng=s.rng)
             wall_draft[i] = time.perf_counter() - t0
+            if len(drafts[i]) > room_min - 1:  # span = 1 + drafts
+                drafts[i] = drafts[i][:max(room_min - 1, 0)]
+                if draft_probs[i] is not None:
+                    draft_probs[i] = draft_probs[i][:len(drafts[i])]
 
-        # 2. pack ragged [1 + K_i] spans into one padded batch
-        t_max = max(1 + len(drafts[i]) for i in active)
+        # 2. pack ragged [1 + K_i] decode spans and prefill chunks into one
+        # padded batch; bucket T to a power of two under chunked admission
+        # so jit traces are reused across prompt/chunk lengths
+        spans = {i: [slots[i].last_tok] + drafts[i] for i in decode_rows}
+        for i, n in chunk_plan.items():
+            s = slots[i]
+            spans[i] = s.prompt[s.prefill_pos:s.prefill_pos + n]
+        t_max = max(len(sp) for sp in spans.values())
+        if self.chunk > 0:
+            t_max = min(T.bucket_length(t_max), room_min)
         toks = np.zeros((b, t_max), np.int32)
         mask = np.zeros((b, t_max), bool)
-        for i in active:
-            s = self.slots[i]
-            span = [s.last_tok] + drafts[i]
+        for i, span in spans.items():
             toks[i, :len(span)] = span
             mask[i, :len(span)] = True
 
@@ -383,10 +605,11 @@ class BatchedEngine:
         lo = np.asarray(lo, np.float32)            # [B, T_max, V]
         wall_verify = time.perf_counter() - t1
 
-        # 4. per-row rejection sampling
+        # 4. per-row rejection sampling (decode rows only — prefill chunks
+        # commit all their real tokens, nothing to verify)
         results, wall_sample = {}, {}
-        for i in active:
-            s = self.slots[i]
+        for i in decode_rows:
+            s = slots[i]
             n_i = 1 + len(drafts[i])
             t2 = time.perf_counter()
             if self.temperature <= 0:
@@ -398,10 +621,13 @@ class BatchedEngine:
                                               draft_probs[i])
             wall_sample[i] = time.perf_counter() - t2
 
-        # 5. vectorized per-row rollback (idle rows keep length unchanged)
+        # 5. vectorized per-row rollback (idle rows keep length unchanged;
+        # prefill rows keep their whole real chunk, dropping the padding)
         n_keep = np.zeros((b,), np.int32)
-        for i in active:
+        for i in decode_rows:
             n_keep[i] = 1 + results[i].n_accepted
+        for i, n in chunk_plan.items():
+            n_keep[i] = n
         self.cache = T.rollback_cache(self.cfg, new_cache, staged,
                                       jnp.asarray(n_keep),
                                       jnp.asarray(lengths_before))
@@ -418,32 +644,30 @@ class BatchedEngine:
             self.cfg, self.hw, tokens_per_row, list(lengths_before),
             unique_experts=union,
             per_request_unique=(None if per_row is None else
-                                [per_row[i] if i in active else 0.0
+                                [per_row[i] if i in spans else 0.0
                                  for i in range(b)]),
-            affinity=self.affinity, window=self.window)
+            affinity=self.affinity, window=self.window,
+            prefill_tokens=[chunk_plan.get(i, 0) for i in range(b)])
         t_verify_shared = (wall_verify if self.clock == "wall"
                            else cost["t_iter"])
 
         # 7. feed back per request; advance token state
         emitted_by_slot = {}
-        occupancy = len(active)
+        occupancy = len(spans)
         n_tokens = sum(tokens_per_row)
         padded = occupancy * t_max - n_tokens
         t_overhead = 0.0
-        for i in active:
-            s = self.slots[i]
+        for i in decode_rows:
+            s = slots[i]
             res = results[i]
             k_eff = len(drafts[i])
-            emitted = res.accepted + [res.next_token]
+            emitted, stopped = _truncate_at_stop(
+                res.accepted + [res.next_token], s.stop_token)
             s.out.extend(emitted)
             s.history.extend(emitted)
-            s.last_tok = res.next_token
+            s.last_tok = emitted[-1]
 
-            attr = cost["per_request"][i]
-            frac = (attr["bytes_attr"] / cost["bytes"]
-                    if cost["bytes"] else 1.0 / occupancy)
-            t_verify = (wall_verify * frac if self.clock == "wall"
-                        else attr["t_attr"])
+            t_verify = self._attr_share(cost, i, wall_verify, occupancy)
             t_draft = (wall_draft[i] if self.clock == "wall"
                        else cm.draft_time(self.hw, k_eff,
                                           s.drafter.active_params))
@@ -471,21 +695,45 @@ class BatchedEngine:
                 padding_frac=padded / (n_tokens + padded) if n_tokens else 0.0))
             s.iteration += 1
             emitted_by_slot[i] = emitted
+            self._maybe_finish(s, stopped=stopped)
 
-            if len(s.out) >= s.max_new:
-                s.done = True
-            if s.stop_token is not None and res.next_token == s.stop_token:
-                s.done = True
-            if len(s.history) + 16 >= self.max_len:
-                s.done = True
+        # 8. prefill bookkeeping: attribute this chunk's share of the pass
+        # to the request's TTFT clock; on the final chunk, sample the first
+        # output token and flip the slot to decode
+        finished_prefill = []
+        for i, n in chunk_plan.items():
+            s = slots[i]
+            s.tel.t_prefill += self._attr_share(cost, i, wall_verify,
+                                                occupancy)
+            s.tel.prefill_chunks += 1
+            s.prefill_pos += n
+            if s.prefill_pos >= len(s.prompt):
+                first = _sample_logits(s.rng, lo[i, n - 1],
+                                       self.temperature)
+                s.history.append(first)
+                s.out = [first]
+                s.last_tok = first
+                s.phase = "decode"
+                finished_prefill.append(i)
+                emitted_by_slot[i] = [first]
+                self._maybe_finish(s,
+                                   stopped=s.stop_token is not None
+                                   and first == s.stop_token)
 
-        self.telemetry.steps.append(StepTelemetry(
+        step_tel = StepTelemetry(
             step=self._step_idx, occupancy=occupancy,
             tokens_in_flight=n_tokens, padded_tokens=padded,
             union_experts=union or 0.0,
             t_step=t_verify_shared, t_overhead=t_overhead,
             joined=self._joined_since_step,
-            retired=sum(1 for i in active if self.slots[i].done)))
+            retired=sum(1 for i in spans if slots[i].done),
+            prefill_tokens=sum(chunk_plan.values()),
+            decode_tokens=sum(len(spans[i]) for i in decode_rows))
+        self.telemetry.steps.append(step_tel)
+        self.now += step_tel.t_total
+        for i in finished_prefill:  # first token exists as of end-of-step
+            s = slots[i]
+            s.tel.ttft = max(self.now - s.t_submit, 0.0)
         self._joined_since_step = 0
         self._step_idx += 1
         return emitted_by_slot

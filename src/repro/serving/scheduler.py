@@ -89,6 +89,7 @@ class ContinuousBatchingScheduler:
     _order: List[str] = field(default_factory=list)
     _by_id: Dict[str, GenerationResult] = field(default_factory=dict)
     _slot_req: Dict[int, str] = field(default_factory=dict)
+    _submit_time: Dict[str, float] = field(default_factory=dict)
     _steps_start: int = 0
 
     def __post_init__(self):
@@ -101,6 +102,9 @@ class ContinuousBatchingScheduler:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
         self._order.append(req.request_id)
+        # stamp the engine clock at enqueue so queue-delay/TTFT telemetry
+        # covers the scheduler's own queue, not just the slot table
+        self._submit_time[req.request_id] = getattr(self.engine, "now", 0.0)
 
     def _admit(self) -> None:
         while self.queue and self.engine.free_slots:
@@ -110,7 +114,9 @@ class ContinuousBatchingScheduler:
             idx = self.engine.join(req.prompt, req.max_new, controller=ctl,
                                    request_id=req.request_id, task=req.task,
                                    stop_token=req.stop_token,
-                                   enc_out=req.enc_out)
+                                   enc_out=req.enc_out,
+                                   submit_time=self._submit_time.get(
+                                       req.request_id))
             self._slot_req[idx] = req.request_id
 
     def _retire_finished(self) -> None:
@@ -141,13 +147,20 @@ class ContinuousBatchingScheduler:
     # -- aggregate figures of merit ------------------------------------- #
 
     def tokens_per_second(self) -> float:
-        """Batch throughput: emitted tokens over *shared* step wall time
+        """Decode throughput: emitted tokens over *shared* step wall time
         (not the sum of per-request attributed times — that would count the
-        shared verification pass B times)."""
-        toks = sum(r.telemetry.output_tokens for r in self.results)
+        shared verification pass B times). Blocking (chunk=0) prefill runs
+        inside join() and never enters the steps, so the chunked prefill
+        work co-scheduled *into* steps is subtracted via its attributed
+        share — both admission modes then measure the same decode-only
+        quantity."""
+        rs = self.results
+        toks = sum(r.telemetry.output_tokens for r in rs)
         t = sum(s.t_total
                 for s in self.engine.telemetry.steps[self._steps_start:])
-        return toks / t if t else 0.0
+        t -= sum(r.telemetry.t_prefill for r in rs
+                 if r.telemetry.prefill_chunks)
+        return toks / t if t > 0 else 0.0
 
     def mean_tpot(self) -> float:
         tps = self.tokens_per_second()
@@ -160,3 +173,13 @@ class ContinuousBatchingScheduler:
         finals = [r.telemetry.iterations[-1].utility
                   for r in rs if r.telemetry.iterations]
         return sum(finals) / len(finals) if finals else 0.0
+
+    def mean_ttft(self) -> float:
+        """Mean submit -> first-token latency on the engine clock — the
+        admission-side figure of merit chunked prefill exists to improve."""
+        rs = self.results
+        return sum(r.telemetry.ttft for r in rs) / len(rs) if rs else 0.0
+
+    def mean_queue_delay(self) -> float:
+        rs = self.results
+        return sum(r.telemetry.t_queue for r in rs) / len(rs) if rs else 0.0

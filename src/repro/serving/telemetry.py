@@ -36,13 +36,16 @@ class StepTelemetry:
     how much of the padded verification batch was wasted)."""
     step: int
     occupancy: int             # live requests in the pass
-    tokens_in_flight: int      # sum of (1 + K_i)
+    tokens_in_flight: int      # sum of (1 + K_i) plus prefill-chunk tokens
     padded_tokens: int         # occupancy * T_max - tokens_in_flight
     union_experts: float = 0.0  # batch-union unique experts (mean per layer)
     t_step: float = 0.0        # shared verification seconds
     t_overhead: float = 0.0    # serial non-verify cost: max_i(draft+sample)
     joined: int = 0            # requests admitted before this step
     retired: int = 0           # requests finished by this step
+    # -- chunked-prefill split (both 0 on a pure legacy decode step) ------ #
+    prefill_tokens: int = 0    # prompt tokens co-scheduled into this pass
+    decode_tokens: int = 0     # speculative span tokens in this pass
 
     @property
     def t_total(self) -> float:
@@ -62,7 +65,13 @@ class RequestTelemetry:
     task: str = ""
     prompt_len: int = 0
     iterations: List[IterationTelemetry] = field(default_factory=list)
-    t_prefill: float = 0.0
+    t_prefill: float = 0.0     # prefill seconds on the engine's clock
+                               # (cm.prefill_time under clock="model" — never
+                               # wall-clock mixed into the virtual clock)
+    t_queue: float = 0.0       # admission wait: submit -> first prefill work
+    ttft: float = 0.0          # submit -> first output token, engine clock
+    prefill_chunks: int = 0    # chunks the prompt was admitted in (0 =
+                               # legacy single-shot blocking prefill)
 
     # ------------------------------------------------------------------ #
 
@@ -120,3 +129,11 @@ class EngineTelemetry:
     @property
     def total_time(self) -> float:
         return sum(t.t_total for t in self.steps)
+
+    @property
+    def prefill_token_frac(self) -> float:
+        """Fraction of scheduled (unpadded) tokens that were prefill — how
+        much of the serving capacity admission pressure consumed."""
+        pre = sum(t.prefill_tokens for t in self.steps)
+        tot = sum(t.tokens_in_flight for t in self.steps)
+        return pre / tot if tot else 0.0

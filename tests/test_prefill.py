@@ -1,0 +1,412 @@
+"""Chunked, cost-priced prefill + speculative-decode-loop bugfix
+regressions: prefill_chunk vs one-shot prefill, mixed prefill+decode steps
+vs sequential references, chunk=0 legacy bit-exactness, TTFT/queue
+telemetry, the admission budget, stop-token-mid-draft truncation, the
+controller-derived KV-ring guard, and the bounded n-gram scan."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import StaticKController, TPU_V5E
+from repro.core import cost_model as cm
+from repro.models import transformer as T
+from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
+                           NGramDrafter, Request, ServingEngine)
+from repro.serving.drafter import Drafter
+
+VARIED_PROMPT = list(range(3, 35))  # greedy stream has distinct tokens
+
+
+class ScriptedDrafter(Drafter):
+    """Oracle drafter: proposes the known future of the token stream, so
+    greedy verification accepts every draft — the deterministic way to land
+    a stop token mid-draft."""
+
+    def __init__(self, script):
+        self.script = list(script)
+
+    def propose(self, history, k, rng=None):
+        n = len(history)
+        return self.script[n:n + k], None
+
+
+# ===================================================================== #
+# Cost model: prefill crosses the roofline
+# ===================================================================== #
+
+def test_prefill_time_crosses_roofline():
+    cfg = get_config("mixtral-8x7b")
+    one = cm.prefill_time(cfg, TPU_V5E, 1)
+    assert not one["compute_bound"]          # single token: decode regime
+    big = cm.prefill_time(cfg, TPU_V5E, 8192)
+    assert big["compute_bound"]              # long chunk: compute-bound
+    cross = cm.prefill_crossover_tokens(cfg, TPU_V5E)
+    assert 1 < cross < 8192
+    assert cm.prefill_time(cfg, TPU_V5E, cross)["compute_bound"]
+    assert not cm.prefill_time(cfg, TPU_V5E, cross // 2)["compute_bound"]
+    # monotone in chunk size; chunk writes make it dearer than a decode
+    # iteration of the same token count
+    ts = [cm.prefill_time(cfg, TPU_V5E, n)["t_iter"] for n in (1, 64, 4096)]
+    assert ts[0] <= ts[1] <= ts[2]
+    assert (cm.prefill_time(cfg, TPU_V5E, 64)["bytes"]
+            > cm.iteration_time(cfg, TPU_V5E, 64, 0)["bytes"])
+
+
+def test_bucket_length_powers_of_two():
+    assert [T.bucket_length(n) for n in (1, 2, 3, 5, 8, 9, 33)] == \
+        [1, 2, 4, 8, 8, 16, 64]
+
+
+# ===================================================================== #
+# prefill_chunk == one-shot prefill (model level)
+# ===================================================================== #
+
+def test_prefill_chunk_matches_full_prefill(tiny_moe):
+    cfg, params = tiny_moe
+    prompt = VARIED_PROMPT
+    ref_cache = T.init_cache(cfg, 1, 128)
+    ref_lo, ref_cache, _ = T.prefill(
+        cfg, params, jnp.asarray([prompt], jnp.int32), ref_cache)
+
+    cache = T.init_cache(cfg, 1, 128)
+    chunk = 8
+    lo = None
+    for start in range(0, len(prompt), chunk):
+        span = prompt[start:start + chunk]
+        t_pad = T.bucket_length(len(span))
+        toks = np.zeros((1, t_pad), np.int32)
+        msk = np.zeros((1, t_pad), bool)
+        toks[0, :len(span)] = span
+        msk[0, :len(span)] = True
+        lo, cache, _, st = T.prefill_chunk(cfg, params, cache,
+                                           jnp.asarray(toks),
+                                           token_mask=jnp.asarray(msk))
+        cache = T.rollback_cache(cfg, cache, st, len(span),
+                                 int(cache["length"]) - t_pad)
+    assert int(cache["length"]) == len(prompt) == int(ref_cache["length"])
+    last = len(prompt) % chunk or chunk
+    np.testing.assert_allclose(np.asarray(lo[0, last - 1], np.float32),
+                               np.asarray(ref_lo[0, -1], np.float32),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_array_equal(np.asarray(cache["pos"]),
+                                  np.asarray(ref_cache["pos"]))
+
+
+def test_mixed_prefill_decode_step_matches_references(tiny_moe):
+    """One pass packing a decode span (row 0) and a prefill chunk (row 1)
+    must reproduce each row's standalone logits."""
+    cfg, params = tiny_moe
+    p0 = list(range(3, 23))
+    p1 = [9, 40, 17, 88, 5, 61] * 4
+    bc = T.init_cache(cfg, 2, 128, per_row=True)
+    c0 = T.init_cache(cfg, 1, 128)
+    _, c0, _ = T.prefill(cfg, params, jnp.asarray([p0], jnp.int32), c0)
+    bc = T.write_cache_row(bc, 0, c0)
+
+    span0 = [7, 9, 11]
+    chunk1 = p1[:8]
+    t_max = 8
+    toks = np.zeros((2, t_max), np.int32)
+    msk = np.zeros((2, t_max), bool)
+    toks[0, :len(span0)] = span0
+    msk[0, :len(span0)] = True
+    toks[1, :len(chunk1)] = chunk1
+    msk[1, :len(chunk1)] = True
+    lo, _, _, _ = T.prefill_chunk(cfg, params, bc, jnp.asarray(toks),
+                                  token_mask=jnp.asarray(msk))
+
+    lo0, _, _, _ = T.decode_step(cfg, params, c0,
+                                 jnp.asarray([span0], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lo[0, :len(span0)], np.float32),
+                               np.asarray(lo0[0], np.float32),
+                               atol=2e-4, rtol=2e-4)
+
+    c1 = T.init_cache(cfg, 1, 128)
+    lo1, _, _ = T.prefill(cfg, params, jnp.asarray([chunk1], jnp.int32), c1)
+    np.testing.assert_allclose(np.asarray(lo[1, :len(chunk1)], np.float32),
+                               np.asarray(lo1[0], np.float32),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ===================================================================== #
+# Engine: chunked admission
+# ===================================================================== #
+
+def test_chunked_stream_matches_blocking_greedy(tiny_moe):
+    cfg, params = tiny_moe
+    blocking = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                             max_batch=2, max_len=256, temperature=0.0,
+                             clock="model", seed=0)
+    chunked = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=2, max_len=256, temperature=0.0,
+                            clock="model", seed=0, chunk=8)
+    ctl = lambda: StaticKController(3)
+    r_b = blocking.generate(VARIED_PROMPT, max_new=16, controller=ctl())
+    r_c = chunked.generate(VARIED_PROMPT, max_new=16, controller=ctl())
+    assert r_b.tokens == r_c.tokens
+    assert r_c.telemetry.prefill_chunks == 4       # 32 tokens / chunk=8
+    assert r_b.telemetry.prefill_chunks == 0       # blocking one-shot
+    assert r_c.telemetry.t_prefill > 0
+    assert r_c.telemetry.ttft > 0
+
+
+def test_model_clock_prefill_is_cost_model_not_wall(tiny_moe):
+    """tel.t_prefill under clock='model' must come from cm.prefill_time —
+    wall seconds of a jitted CPU trace would mix units with the virtual
+    decode clock (the old bug made TTFT meaningless)."""
+    cfg, params = tiny_moe
+    expect = cm.prefill_time(cfg, TPU_V5E, len(VARIED_PROMPT))["t_iter"]
+    leg = ServingEngine(cfg, params, NGramDrafter(), max_len=256,
+                        temperature=0.0, clock="model")
+    r = leg.generate(VARIED_PROMPT, max_new=4,
+                     controller=StaticKController(2))
+    assert r.telemetry.t_prefill == expect
+    assert r.telemetry.ttft == expect
+    bat = BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=1,
+                        max_len=256, temperature=0.0, clock="model")
+    r2 = bat.generate(VARIED_PROMPT, max_new=4,
+                      controller=StaticKController(2))
+    assert r2.telemetry.t_prefill == expect
+    # deterministic: a rerun sees the identical virtual prefill time
+    bat2 = BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=1,
+                         max_len=256, temperature=0.0, clock="model")
+    r3 = bat2.generate(VARIED_PROMPT, max_new=4,
+                       controller=StaticKController(2))
+    assert r3.telemetry.t_prefill == r2.telemetry.t_prefill
+
+
+def _queue_run(cfg, params, depth, chunk, max_new=6):
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=2,
+                        max_len=256, temperature=0.0, clock="model",
+                        seed=0, chunk=chunk)
+    sched = ContinuousBatchingScheduler(
+        eng, controller_factory=lambda: StaticKController(2))
+    reqs = [Request(request_id=f"r{i}", prompt=[3 + i, 4 + i, 5 + i] * 8,
+                    max_new=max_new) for i in range(depth)]
+    sched.run(reqs)
+    return eng, sched
+
+
+def test_ttft_monotone_in_queue_depth(tiny_moe):
+    cfg, params = tiny_moe
+    means = [_queue_run(cfg, params, d, chunk=8)[1].mean_ttft()
+             for d in (1, 3, 6)]
+    assert means[0] <= means[1] <= means[2]
+    assert means[2] > means[0]  # a deep queue really does wait
+
+
+def test_prefill_budget_respected(tiny_moe):
+    cfg, params = tiny_moe
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=2,
+                        max_len=256, temperature=0.0, clock="model",
+                        seed=0, chunk=8, max_prefill_tokens_per_step=8)
+    sched = ContinuousBatchingScheduler(
+        eng, controller_factory=lambda: StaticKController(2))
+    reqs = [Request(request_id=f"r{i}", prompt=[3 + i, 4 + i] * 10,
+                    max_new=4) for i in range(3)]
+    res = sched.run(reqs)
+    assert len(res) == 3 and all(len(r.tokens) == 4 for r in res)
+    steps = eng.telemetry.steps
+    assert all(s.prefill_tokens <= 8 for s in steps)
+    assert any(s.prefill_tokens for s in steps)
+    assert any(s.decode_tokens for s in steps)
+    # the split is telemetered coherently
+    assert all(s.prefill_tokens + s.decode_tokens == s.tokens_in_flight
+               for s in steps)
+
+
+def test_queue_delay_recorded_under_load(tiny_moe):
+    cfg, params = tiny_moe
+    _, sched = _queue_run(cfg, params, depth=5, chunk=8)
+    delays = [r.telemetry.t_queue for r in sched.results]
+    assert delays[0] == 0.0               # head of queue starts immediately
+    assert max(delays) > 0.0              # someone had to wait
+    assert all(r.telemetry.ttft >= r.telemetry.t_queue
+               for r in sched.results)
+
+
+def test_degenerate_prompts_raise(tiny_moe):
+    """Empty prompts (which would hang chunked admission forever) and
+    prompts that cannot fit the cache fail loudly in both engines."""
+    cfg, params = tiny_moe
+    leg = ServingEngine(cfg, params, NGramDrafter(), max_len=64,
+                        temperature=0.0, clock="model")
+    for bad in ([], list(range(3, 70))):
+        with pytest.raises(ValueError):
+            leg.generate(bad, max_new=4, controller=StaticKController(2))
+        for chunk in (0, 8):
+            eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                                max_batch=1, max_len=64, temperature=0.0,
+                                clock="model", chunk=chunk)
+            with pytest.raises(ValueError):
+                eng.join(bad, max_new=4, controller=StaticKController(2))
+
+
+def test_chunked_padded_writes_never_wrap(tiny_moe):
+    """Every row of the padded pass writes T_max slots from its own length,
+    so a near-capacity decode row sharing a step with a large prefill chunk
+    must cap the step's T — otherwise the padded writes wrap onto the row's
+    own early cache slots and destroy its context."""
+    cfg, params = tiny_moe
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=2,
+                        max_len=40, temperature=0.0, clock="model",
+                        seed=0, chunk=32)
+    a = eng.join([5, 6, 7, 8] * 8, max_new=4,
+                 controller=StaticKController(4))
+    eng.step()                      # a's 32-token prompt lands in one chunk
+    b = eng.join(list(range(3, 37)), max_new=4,
+                 controller=StaticKController(4))
+    for _ in range(64):
+        if eng.slots[a].done and eng.slots[b].done:
+            break
+        eng.step()
+        pos = np.asarray(eng.cache["pos"])
+        assert pos.max() < 40        # never a wrapped (clobbering) write
+    assert eng.slots[a].done and eng.slots[b].done
+    # b's 34-token prompt was throttled into sub-chunk pieces by a's
+    # proximity to the cache end, but still completed
+    assert eng.slots[b].tel.prefill_chunks > 2
+    assert len(eng.retire(b).tokens) >= 1
+
+
+# ===================================================================== #
+# Bugfix: stop token accepted mid-draft
+# ===================================================================== #
+
+@pytest.mark.parametrize("engine_kind", ["legacy", "batched"])
+def test_stop_token_mid_draft_greedy(tiny_moe, engine_kind):
+    cfg, params = tiny_moe
+    ref = ServingEngine(cfg, params, NGramDrafter(), max_len=512,
+                        temperature=0.0, clock="model", seed=0)
+    stream = ref.generate(VARIED_PROMPT, max_new=20,
+                          controller=StaticKController(4)).tokens
+    assert len(set(stream[:5])) == 5     # varied: mid-draft stop possible
+    script = VARIED_PROMPT + stream
+    stop = stream[2]                     # accepted-draft (non-bonus) slot
+    assert stream.index(stop) == 2
+
+    if engine_kind == "legacy":
+        eng = ServingEngine(cfg, params, ScriptedDrafter(script),
+                            max_len=512, temperature=0.0, clock="model",
+                            seed=0)
+        res = eng.generate(VARIED_PROMPT, max_new=20, stop_token=stop,
+                           controller=StaticKController(4))
+    else:
+        eng = BatchedEngine(cfg, params, lambda: ScriptedDrafter(script),
+                            max_batch=1, max_len=512, temperature=0.0,
+                            clock="model", seed=0)
+        res = eng.generate(VARIED_PROMPT, max_new=20, stop_token=stop,
+                           controller=StaticKController(4))
+    # the oracle drafter makes iteration 0 emit 5 tokens; the stop sits at
+    # accepted-draft position 1, so the old == next_token check missed it
+    assert res.tokens == stream[:3]
+    assert res.tokens[-1] == stop
+
+
+@pytest.mark.parametrize("engine_kind", ["legacy", "batched"])
+def test_stop_token_truncates_sampled(tiny_moe, engine_kind):
+    cfg, params = tiny_moe
+
+    def make(stop=None):
+        if engine_kind == "legacy":
+            eng = ServingEngine(cfg, params, NGramDrafter(), max_len=512,
+                                temperature=1.0, clock="model", seed=3)
+            return eng.generate(VARIED_PROMPT, max_new=24, stop_token=stop,
+                                controller=StaticKController(4))
+        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=1, max_len=512, temperature=1.0,
+                            clock="model", seed=3)
+        return eng.generate(VARIED_PROMPT, max_new=24, stop_token=stop,
+                            controller=StaticKController(4))
+
+    stream = make().tokens
+    # pick a token whose first occurrence is past the first position
+    idx = next(i for i in range(1, len(stream))
+               if stream[i] not in stream[:i])
+    stop = stream[idx]
+    res = make(stop=stop).tokens
+    assert res == stream[:idx + 1]       # identical prefix, nothing after
+    assert res.count(stop) == 1 and res[-1] == stop
+
+
+# ===================================================================== #
+# Bugfix: KV-ring guard derived from the controller's k_max
+# ===================================================================== #
+
+def test_ring_guard_derived_from_controller(tiny_moe):
+    """max_len=48, prompt=28: after the first token the history is 29 long.
+    A k_max=20 controller's next span (up to 21 tokens) would write to
+    position 49 — past the cache — which the old hardcoded `+16` guard
+    allowed (29+16 < 48). The derived guard stops first; a k_max=7
+    controller still gets to speculate."""
+    cfg, params = tiny_moe
+    prompt = VARIED_PROMPT[:28]
+    for make_engine in (
+        lambda: ServingEngine(cfg, params, NGramDrafter(), max_len=48,
+                              temperature=0.0, clock="model", seed=0),
+        lambda: BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                              max_batch=1, max_len=48, temperature=0.0,
+                              clock="model", seed=0),
+    ):
+        wide = make_engine().generate(prompt, max_new=16,
+                                      controller=StaticKController(20))
+        assert len(wide.tokens) == 1     # no room for a 21-token span
+        narrow = make_engine().generate(prompt, max_new=16,
+                                        controller=StaticKController(7))
+        assert len(narrow.tokens) > 1    # an 8-token span still fits
+
+
+def test_ring_guard_never_overflows_cache(tiny_moe):
+    """Regression: with a k_max>15 controller near max_len, every cache
+    write must stay inside the ring — the old guard let spans wrap around
+    and silently clobber live positions."""
+    cfg, params = tiny_moe
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=1,
+                        max_len=64, temperature=0.0, clock="model", seed=0)
+    idx = eng.join([5, 6, 7, 8] * 7, max_new=48,
+                   controller=StaticKController(20))
+    while not eng.slots[idx].done:
+        eng.step()
+        pos = np.asarray(eng.cache["pos"][0])
+        assert pos.max() < 64            # never a wrapped (clobbering) write
+        valid = pos[pos >= 0]
+        assert len(np.unique(valid)) == len(valid)
+    res = eng.retire(idx)
+    assert len(res.tokens) >= 1
+    # terminated because the next worst-case span would not fit
+    assert 28 + len(res.tokens) + 21 > 64
+
+
+# ===================================================================== #
+# Bugfix/perf: bounded n-gram scan
+# ===================================================================== #
+
+def test_ngram_bounded_scan_exact_on_short_histories():
+    rng = np.random.default_rng(0)
+    bounded = NGramDrafter(max_scan=512)
+    unbounded = NGramDrafter(max_scan=0)
+    for _ in range(20):
+        n = int(rng.integers(4, 500))
+        hist = list(rng.integers(0, 8, n))   # small vocab => matches exist
+        for k in (1, 4, 8):
+            assert bounded.propose(hist, k) == unbounded.propose(hist, k)
+
+
+def test_ngram_bounded_scan_long_history():
+    # most recent occurrence inside the window: bounded == unbounded
+    pat = [7, 8, 9, 10, 11]
+    noise = list(np.random.default_rng(1).integers(20, 400, 1500))
+    hist = noise[:1400] + pat + noise[1400:] + pat  # match ~100 tokens back
+    bounded = NGramDrafter(max_scan=512)
+    unbounded = NGramDrafter(max_scan=0)
+    assert bounded.propose(hist, 4) == unbounded.propose(hist, 4)
+    assert bounded.propose(hist, 4)[0]       # and it actually found it
+    # match only outside the window: bounded proposes nothing, by design
+    hist2 = pat + list(np.random.default_rng(2).integers(20, 400, 1500)) \
+        + pat[:3]
+    b_prop, _ = NGramDrafter(max_scan=256).propose(hist2, 4)
+    u_prop, _ = unbounded.propose(hist2, 4)
+    assert u_prop and not b_prop
