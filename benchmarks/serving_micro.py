@@ -9,7 +9,14 @@ unique experts per iteration, tokens/s, and mean per-request utility — the
 paper's Fig. 2 expert-union inflation, now compounding across requests
 (speculation utility degrades as the batch grows because the union term is
 shared). The B=1 row is cross-checked against the legacy single-request
-engine (must agree within 1%)."""
+engine (must agree within 1%).
+
+`--planner-sweep` compares the batch-level speculation planner
+(policy="joint", docs/planner.md) against independent per-request control
+over the same grid, with two gates: joint tokens/s must be >= independent
+at B=8 (where the expert union saturates and uncoordinated trials tax the
+shared pass), and at B=1 the two policies must agree *exactly* (the
+planner bypass must be invisible, bit for bit)."""
 
 from __future__ import annotations
 
@@ -109,9 +116,13 @@ def batch_sweep(fast: bool = False, batches=(1, 2, 4, 8)):
 
     rows = []
     for b in batches:
+        # pinned to the uncoordinated per-request baseline: this sweep IS
+        # the measurement of what independent Cascade control does to
+        # utility as the union saturates (the batch planner's motivation —
+        # --planner-sweep measures the coordinated engine against it)
         eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
                             max_batch=b, max_len=512, temperature=0.0,
-                            clock="model", seed=0)
+                            clock="model", seed=0, policy="independent")
         sched = ContinuousBatchingScheduler(
             eng, controller_factory=lambda: CascadeController())
         sched.run(_sweep_requests(cfg, n_requests, max_new))
@@ -147,6 +158,93 @@ def batch_sweep(fast: bool = False, batches=(1, 2, 4, 8)):
     if drift >= 0.01:
         raise SystemExit(
             f"B=1 tokens/s drifted {drift:.2%} from the legacy engine")
+    return rows
+
+
+# --------------------------------------------------------------------- #
+# Batch-planner sweep (model clock): joint vs independent K allocation
+# --------------------------------------------------------------------- #
+
+# On full-size TPU-v5e numbers the reduced CPU model's whole pass collapses
+# into the fixed per-step overhead and every allocation policy ties. This
+# point scales the hardware down so the reduced model's shared pass sits
+# where full-size large-batch serving does: memory-bound at the
+# no-speculation allocation, crossing the roofline once B=8 draft spans
+# stack up (~11 in-flight tokens for the reduced Mixtral) — the regime
+# where one request's aggressive K costs every request real time and joint
+# planning has teeth. A regime choice, not a physical device.
+def _planner_hw():
+    from repro.core import Hardware
+    return Hardware("tpu-v5e-flops-scaled", hbm_bw=1e9, peak_flops=6e9)
+
+
+def planner_sweep(fast: bool = False, batches=(1, 2, 4, 8)):
+    """Joint-vs-independent allocation over B in {1,2,4,8} on the model
+    clock (same draftable workload as `batch_sweep`, PLANNER_SWEEP_HW
+    regime). Reports tokens/s, mean per-request utility, grant ratio,
+    preemptions, staggered (held) TEST trials, and the planner's
+    predicted-vs-measured step-time error. Gates (committed artifact +
+    CI smoke): joint >= independent tokens/s at max(batches); B=1 drift
+    between the policies exactly 0."""
+    cfg = get_config("mixtral-8x7b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    hw = _planner_hw()
+    n_requests = max(batches)
+    max_new = 16 if fast else 32
+
+    rows = []
+    tps = {}
+    for policy in ("independent", "joint"):
+        for b in batches:
+            eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                                max_batch=b, max_len=512, temperature=0.0,
+                                clock="model", seed=0, hw=hw, policy=policy)
+            sched = ContinuousBatchingScheduler(
+                eng, controller_factory=lambda: CascadeController())
+            sched.run(_sweep_requests(cfg, n_requests, max_new))
+            tel = eng.telemetry
+            stats = sched.planner_stats()
+            row = {
+                "policy": policy,
+                "B": b,
+                "tokens_per_s": sched.tokens_per_second(),
+                "mean_request_utility": sched.mean_request_utility(),
+                "union_experts_per_iter": tel.mean_union_experts,
+                "grant_ratio": stats["grant_ratio"],
+                "preemptions": stats["preemptions"],
+                "held_tests": stats["held_tests"],
+                "plan_time_error": stats["plan_time_error"],
+                "steps": len(tel.steps),
+            }
+            rows.append(row)
+            tps[(policy, b)] = row["tokens_per_s"]
+            emit(f"serving_micro/planner_{policy}_B{b}_tokens_per_s",
+                 row["tokens_per_s"],
+                 f"grant={row['grant_ratio']:.3f};"
+                 f"held={row['held_tests']};err={row['plan_time_error']:.3f}")
+
+    deep = max(batches)
+    gain = (tps[("joint", deep)] / tps[("independent", deep)]
+            if tps[("independent", deep)] else 0.0)
+    drift = abs(tps[("joint", 1)] - tps[("independent", 1)])
+    emit(f"serving_micro/planner_B{deep}_joint_over_independent", gain,
+         "must-be>=1")
+    emit("serving_micro/planner_B1_policy_drift", drift, "must-be-exactly-0")
+    save_json("serving_micro_planner_sweep",
+              {"hw": {"name": hw.name, "hbm_bw": hw.hbm_bw,
+                      "peak_flops": hw.peak_flops},
+               "max_new": max_new, "rows": rows,
+               "deep_B": deep, "joint_over_independent": gain,
+               "b1_policy_drift": drift})
+    if drift != 0.0:
+        raise SystemExit(
+            f"B=1 joint policy drifted {drift!r} tokens/s from the "
+            "independent controller path (must be exactly 0)")
+    if gain < 1.0:
+        raise SystemExit(
+            f"joint allocation lost to independent control at B={deep}: "
+            f"{tps[('joint', deep)]:.2f} vs "
+            f"{tps[('independent', deep)]:.2f} tokens/s (x{gain:.4f})")
     return rows
 
 
@@ -246,6 +344,8 @@ if __name__ == "__main__":
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--batch-sweep", action="store_true",
                     help="continuous-batching sweep over B in {1,2,4,8}")
+    ap.add_argument("--planner-sweep", action="store_true",
+                    help="joint vs independent K allocation sweep")
     ap.add_argument("--prefill-sweep", action="store_true",
                     help="queue depth x chunk size -> TTFT/TPOT sweep")
     ap.add_argument("--no-micro", action="store_true",
@@ -255,5 +355,7 @@ if __name__ == "__main__":
         main(fast=args.fast)
     if args.batch_sweep:
         batch_sweep(fast=args.fast)
+    if args.planner_sweep:
+        planner_sweep(fast=args.fast)
     if args.prefill_sweep:
         prefill_sweep(fast=args.fast)

@@ -8,7 +8,10 @@ from .cost_model import (Hardware, TPU_V5E, RTX_6000_ADA,
                          expected_unique_experts_batch, iteration_bytes,
                          iteration_flops, iteration_time, draft_time,
                          sample_time, kv_bytes_per_token)
+from .cost_model import BatchCostOracle, expected_emitted
 from .manager import BASELINE, TEST, SET, CascadeConfig, SpeculationManager
+from .planner import (BatchPlan, BatchSpecPlanner, PlanDecision,
+                      PlannerConfig, greedy_allocate)
 from .utility import IterationRecord, UtilityAnalyzer
 
 __all__ = [
@@ -16,7 +19,9 @@ __all__ = [
     "SpeculationManager", "UtilityAnalyzer", "IterationRecord",
     "Hardware", "TPU_V5E", "RTX_6000_ADA", "expected_unique_experts",
     "expected_unique_experts_batch", "batch_iteration_time",
-    "iteration_bytes", "iteration_flops", "iteration_time", "draft_time",
-    "sample_time", "kv_bytes_per_token", "BASELINE", "TEST", "SET",
-    "cascade_for_model",
+    "BatchCostOracle", "iteration_bytes", "iteration_flops",
+    "iteration_time", "draft_time", "sample_time", "kv_bytes_per_token",
+    "BASELINE", "TEST", "SET", "cascade_for_model",
+    "BatchSpecPlanner", "BatchPlan", "PlanDecision", "PlannerConfig",
+    "expected_emitted", "greedy_allocate",
 ]

@@ -49,6 +49,13 @@ class CascadeController:
         self._last_k = self.manager.next_k()
         return self._last_k
 
+    def hold(self) -> int:
+        """Batch-planner phase hook: postpone a TEST-phase trial by one
+        iteration and run the steady-state K instead (see
+        `SpeculationManager.hold`). A no-op `next_k()` outside TEST."""
+        self._last_k = self.manager.hold()
+        return self._last_k
+
     def observe(self, tokens: int, t_iter: float, *, t_draft: float = 0.0,
                 t_verify: float = 0.0, t_sample: float = 0.0,
                 k: Optional[int] = None, batch: int = 1) -> None:
@@ -69,7 +76,14 @@ class CascadeController:
 
 class StaticKController:
     """Baseline controller: fixed speculation length (the paper's static-K
-    comparison points, with K=0 being the no-speculation baseline)."""
+    comparison points, with K=0 being the no-speculation baseline).
+
+    Under `BatchedEngine`'s default policy="joint" the batch planner may
+    cap or preempt these fixed asks at B>1 like any other request's (there
+    is no TEST phase to protect — 'static' is the ask, not a grant
+    guarantee). A faithful static-K *measurement* therefore needs
+    `BatchedEngine(policy="independent")` (as `--batch-sweep` pins) or the
+    single-request `ServingEngine`."""
 
     def __init__(self, k: int):
         self.k = k

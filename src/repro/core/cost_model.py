@@ -323,6 +323,66 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
             "n_tokens": total_tokens, "per_request": per_request}
 
 
+class BatchCostOracle:
+    """Repeated `batch_iteration_time` total-time queries over candidate
+    token allocations, with everything except `tokens_per_request` held
+    fixed (contexts, prefill chunks, hardware, affinity).
+
+    The batch planner's water-filling evaluates O(B * k_max) candidate
+    allocations per engine step; re-running the full attribution split for
+    each would be wasteful, so this caches the allocation-independent terms
+    (dense weight read, per-row KV/prefill bytes) at construction.
+    `t_batch(ns)` returns exactly `batch_iteration_time(...)["t_iter"]` for
+    the same inputs — same expressions, same float-op order — which a
+    tier-1 property test pins down."""
+
+    def __init__(self, cfg, hw: Hardware, context_lens, *,
+                 affinity: float = 0.0, window: int = 0,
+                 fixed_overhead: float = 2e-4, prefill_tokens=None):
+        wb = 2
+        self.cfg = cfg
+        self.hw = hw
+        self.affinity = affinity
+        self.window = window
+        self.fixed_overhead = fixed_overhead
+        self.cls = list(context_lens)
+        b = len(self.cls)
+        self.ps = ([0] * b if prefill_tokens is None else
+                   [max(int(p), 0) for p in prefill_tokens])
+        if len(self.ps) != b:
+            raise ValueError(f"{len(self.ps)} prefill counts vs {b} contexts")
+        self._weights = _weight_read_bytes(cfg, wb)
+        n_attn = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
+        prefill_bytes_per_tok = (kv_bytes_per_token(cfg, wb) * n_attn
+                                 + cfg.d_model * wb)
+        # per-row bytes IF the row is live (n_i > 0); dead rows cost nothing
+        self._kv_live = [_kv_read_bytes(cfg, c, window, wb)
+                         + p * prefill_bytes_per_tok
+                         for c, p in zip(self.cls, self.ps)]
+
+    def t_batch(self, tokens_per_request) -> float:
+        """Seconds for one shared pass at this token allocation (scalar —
+        no attribution; use `batch_iteration_time` for the full split)."""
+        ns = [max(int(n), 0) for n in tokens_per_request]
+        if len(ns) != len(self.cls):
+            raise ValueError(f"{len(ns)} token counts vs "
+                             f"{len(self.cls)} contexts")
+        cfg, hw = self.cfg, self.hw
+        total = sum(ns)
+        union = (expected_unique_experts(cfg.num_experts,
+                                         cfg.experts_per_token, total,
+                                         self.affinity)
+                 if cfg.is_moe and total > 0 else 0.0)
+        experts = _expert_read_bytes(cfg, union, 2)
+        total_bytes = self._weights + experts + sum(
+            kv if n > 0 else 0.0 for n, kv in zip(ns, self._kv_live))
+        flops = sum(iteration_flops(cfg, n, c + p, self.window)
+                    for n, c, p in zip(ns, self.cls, self.ps) if n > 0)
+        t_mem = total_bytes / hw.hbm_bw
+        t_compute = flops / hw.peak_flops
+        return max(t_mem, t_compute) + self.fixed_overhead
+
+
 # --------------------------------------------------------------------- #
 # Prefill pricing (chunked admission — the compute-bound regime)
 # --------------------------------------------------------------------- #
@@ -409,6 +469,16 @@ def sample_time(k: int, per_token: float = 1.5e-5) -> float:
     return (k + 1) * per_token
 
 
+def expected_emitted(accept_rate: float, k: int) -> float:
+    """Expected tokens emitted by a [1+k] speculative span when each draft
+    is accepted i.i.d. with probability `accept_rate` — the truncated
+    geometric series of paper Def. 4.1's ETR (k=0 -> exactly 1). The one
+    implementation shared by the analytic K prior below and the batch
+    planner's yield predictions."""
+    a = min(max(accept_rate, 0.0), 0.999)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
 # --------------------------------------------------------------------- #
 # Analytic K prior (beyond-paper): warm-start Cascade's hill-climb
 # --------------------------------------------------------------------- #
@@ -421,8 +491,7 @@ def expected_utility(cfg, hw: Hardware, k: int, accept_rate: float,
     cost from the data-movement model."""
     if k <= 0:
         return 1.0
-    a = min(max(accept_rate, 0.0), 0.999)
-    etr = (1.0 - a ** (k + 1)) / (1.0 - a)
+    etr = expected_emitted(accept_rate, k)
     base = iteration_time(cfg, hw, 1, context_len, affinity=affinity)
     spec = iteration_time(cfg, hw, k + 1, context_len, affinity=affinity)
     t_spec = spec["t_iter"] + draft_time(hw, k, drafter_params) + \

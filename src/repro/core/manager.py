@@ -71,6 +71,10 @@ class SpeculationManager:
     # set-phase bookkeeping
     _set_len_now: int = 0
     _last_set_k: Optional[int] = None
+    # batch-planner phase hook: when True the upcoming iteration is an
+    # off-schedule filler (a postponed TEST trial) — observe() feeds the
+    # analyzer but freezes the FSM for that iteration
+    _held: bool = False
     # history of (k, utility) across whole request, for K_start selection
     history: List[Tuple[int, float]] = field(default_factory=list)
 
@@ -93,9 +97,31 @@ class SpeculationManager:
             return 0 if self.phase == BASELINE else self.cfg.k_start
         return self._k_now
 
+    def hold(self) -> int:
+        """Batch-planner phase hook: postpone the upcoming TEST-phase trial
+        iteration by one step (the planner staggers trials so at most one
+        request runs an off-policy K per shared pass — a concurrent trial
+        would pollute every other request's attributed-cost signal).
+
+        The postponed iteration runs at the steady-state K instead — the
+        last set-phase K, or 0 before one exists — and its record feeds the
+        analyzer (k-tagged, so windowed stats stay honest) but does NOT
+        count toward the trial: the FSM is frozen for exactly one observe().
+        Outside TEST this is just `next_k()` — there is nothing to stagger.
+        """
+        if not self.cfg.enable_disable or self.phase != TEST:
+            return self.next_k()
+        self._held = True
+        k = self._last_set_k if self._last_set_k is not None else 0
+        return max(0, min(k, self.cfg.k_max))
+
     def observe(self, rec: IterationRecord) -> None:
-        """Feed back the completed iteration; advances the FSM."""
+        """Feed back the completed iteration; advances the FSM (unless this
+        iteration was a planner-held filler — see `hold`)."""
         self.analyzer.observe(rec)
+        if self._held:
+            self._held = False
+            return
         if not self.cfg.enable_disable:
             # static mode: only track the initial baseline measurement
             if self.phase == BASELINE:

@@ -1,0 +1,261 @@
+"""Batch-level speculation planner (beyond-paper; the batching analogue of
+the paper's per-request utility rule, §4-§5).
+
+Under continuous batching the verification cost is *shared*: B requests'
+draft spans activate a union of experts, so one request's aggressive K
+taxes everyone sharing the pass — miscoordination the per-request Cascade
+controllers cannot see (each one only observes its own attributed share).
+`BatchSpecPlanner` closes the loop at the batch level. Each step it takes
+every live request's controller *ask* (the Cascade FSM still drives
+exploration and per-request disable), then jointly decides the *grants*
+{K_i} by greedy marginal-utility water-filling:
+
+  * price candidate allocations through the data-movement cost model
+    (`cost_model.BatchCostOracle` — union expert bytes, per-row KV,
+    shared-pass FLOPs, the memory/compute roofline crossover);
+  * predict each request's marginal token yield from its windowed draft
+    acceptance (`UtilityAnalyzer.accept_rate`): granting the (k+1)-th
+    draft token to a request with acceptance a is worth a^(k+1) expected
+    extra emissions;
+  * repeatedly grant +1 draft token to the request with the highest
+    predicted Δtokens/Δt_batch, and stop when the best marginal utility —
+    that rate over the batch's no-speculation rate B/t_base — drops below
+    `util_floor` (= 1: the paper's "disable speculation" rule, now per
+    grant instead of per request, which also preempts speculation when
+    prefill chunks or high occupancy have pushed the shared pass past the
+    roofline crossover where every extra token costs real time).
+
+Trial hygiene: the planner staggers Cascade TEST phases so at most one
+request trials an off-policy K per shared pass (`SpeculationManager.hold`)
+— a concurrent trial shifts the expert union under every other request's
+attributed-cost measurement. The one trialing request is granted its probe
+K in full, so the FSM measures exactly what it asked to measure.
+
+Degradation: at B=1 (a single span in the pass) the planner is bypassed —
+grants equal asks bit for bit, reproducing the legacy per-request
+controller path exactly — and `policy="independent"` is the escape hatch
+that bypasses it at every batch size.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from . import cost_model as cm
+from .cost_model import expected_emitted
+from .manager import TEST
+
+
+@dataclass(frozen=True)
+class PlannerConfig:
+    #: "joint" — batch-level water-filling; "independent" — escape hatch,
+    #: every grant equals its controller's ask (the pre-planner engine)
+    policy: str = "joint"
+    #: stop granting when the best marginal utility drops below this
+    #: (1.0 = the paper's break-even rule at batch level)
+    util_floor: float = 1.0
+    #: acceptance prior for requests with no speculative history yet
+    default_accept: float = 0.5
+    #: analyzer window for the acceptance estimate
+    accept_window: int = 16
+    #: stagger Cascade TEST phases to one trial per shared pass
+    stagger_tests: bool = True
+
+
+@dataclass
+class PlanDecision:
+    """One request's slice of the step plan."""
+    slot: int
+    requested: int          # the controller's ask (next_k / hold)
+    granted: int            # the planner's joint allocation
+    accept_rate: float      # windowed estimate used for the prediction
+    phase: str              # controller phase when planned
+    held: bool = False      # TEST trial postponed by staggering
+
+    @property
+    def preempted(self) -> bool:
+        """Speculation denied outright despite the controller asking."""
+        return self.requested > 0 and self.granted == 0
+
+
+@dataclass
+class BatchPlan:
+    """The joint allocation for one engine step, plus the predictions the
+    telemetry compares against the measured pass (predicted vs measured Δt
+    is the planner's own calibration signal)."""
+    decisions: Dict[int, PlanDecision] = field(default_factory=dict)
+    t_base: float = 0.0        # predicted no-speculation pass seconds
+    t_predicted: float = 0.0   # predicted pass seconds at the grants
+    tokens_predicted: float = 0.0  # predicted emissions (decode rows)
+    held: int = 0              # TEST trials postponed this step
+    preempted: int = 0         # requests granted 0 while asking > 0
+
+    @property
+    def requested_total(self) -> int:
+        return sum(d.requested for d in self.decisions.values())
+
+    @property
+    def granted_total(self) -> int:
+        return sum(d.granted for d in self.decisions.values())
+
+    @property
+    def utility_predicted(self) -> float:
+        """Predicted batch utility of the allocation: predicted throughput
+        over the batch's predicted no-speculation throughput."""
+        n = len(self.decisions)
+        if not n or self.t_predicted <= 0 or self.t_base <= 0:
+            return 1.0
+        return (self.tokens_predicted / self.t_predicted) / (n / self.t_base)
+
+
+def greedy_allocate(oracle: cm.BatchCostOracle, base_ns, decode, caps,
+                    accepts, *, fixed=frozenset(), util_floor: float = 1.0):
+    """Greedy marginal-utility water-filling.
+
+    Starting from `base_ns` (every decode row at its committed token, plus
+    any co-scheduled prefill chunks), repeatedly grant +1 draft token to
+    the decode row with the highest predicted Δtokens/Δt_batch, where
+    Δtokens = accepts[i]^(k_i+1) (the next draft's expected yield) and
+    Δt_batch comes from the cost oracle at the *current* allocation — so
+    union saturation cheapens later grants and roofline crossover taxes
+    them, exactly as the shared pass will. Stops when the best marginal
+    rate falls below `util_floor * len(decode) / t_base`, the batch's
+    no-speculation token rate: a grant below that water level would lower
+    batch throughput (util_floor=1 is the paper's break-even rule).
+
+    `fixed` rows are pinned at caps[i] before water-filling begins — the
+    staggered TEST trial whose probe K must run unmodified. Ties break on
+    the lowest row index, keeping the allocation deterministic.
+
+    Returns (alloc, info) with alloc = {row: drafts granted} and info
+    carrying t_base / t_alloc / r_floor for telemetry."""
+    ns = list(base_ns)
+    alloc = {i: 0 for i in decode}
+    t_base = oracle.t_batch(ns)
+    r_floor = (util_floor * len(decode) / t_base) if decode else 0.0
+    for i in fixed:
+        alloc[i] = caps[i]
+        ns[i] += caps[i]
+    t_cur = oracle.t_batch(ns)
+    while True:
+        best, best_rate = None, 0.0
+        for i in decode:
+            if i in fixed or alloc[i] >= caps[i]:
+                continue
+            d_tok = accepts[i] ** (alloc[i] + 1)
+            ns[i] += 1
+            d_t = oracle.t_batch(ns) - t_cur
+            ns[i] -= 1
+            rate = (d_tok / d_t) if d_t > 0 else float("inf")
+            if best is None or rate > best_rate:
+                best, best_rate = i, rate
+        if best is None or best_rate < r_floor:
+            break
+        alloc[best] += 1
+        ns[best] += 1
+        t_cur = oracle.t_batch(ns)
+    return alloc, {"t_base": t_base, "t_alloc": t_cur, "r_floor": r_floor}
+
+
+class BatchSpecPlanner:
+    """Joint {K_i} allocator for one `BatchedEngine` (see module docstring).
+
+    Stateless across steps except the staggering round-robin pointer, so a
+    planner can be shared by the engine for the whole serving run."""
+
+    def __init__(self, cfg, hw: cm.Hardware = None, *, affinity: float = 0.0,
+                 window: int = 0, config: Optional[PlannerConfig] = None):
+        self.cfg = cfg
+        self.hw = hw or cm.TPU_V5E
+        self.affinity = affinity
+        self.window = window
+        self.config = config or PlannerConfig()
+        self._stagger_tick = 0   # round-robin fairness across trialing rows
+
+    # ------------------------------------------------------------------ #
+
+    def _accept_rate(self, controller) -> Optional[float]:
+        analyzer = getattr(controller, "analyzer", None)
+        if analyzer is None or not hasattr(analyzer, "accept_rate"):
+            return None
+        return analyzer.accept_rate(self.config.accept_window)
+
+    def plan(self, controllers: Dict[int, object], context_lens, *,
+             prefill_tokens: Optional[Dict[int, int]] = None) -> BatchPlan:
+        """Plan one step. `controllers` maps decode row -> its controller
+        (asks are collected here: `next_k()`, or `hold()` for staggered
+        TEST rows); `context_lens` is the full [B] row table's cache
+        lengths; `prefill_tokens` maps prefill rows to their co-scheduled
+        chunk sizes (they share the pass and its expert union, so the
+        water-filling prices them in)."""
+        cfgp = self.config
+        b = len(context_lens)
+        pre = {i: max(int(p), 0)
+               for i, p in (prefill_tokens or {}).items() if p > 0}
+        decode = sorted(controllers)
+        joint = cfgp.policy == "joint"
+
+        # -- phase staggering: at most one TEST trial per shared pass ----
+        held = frozenset()
+        if joint and cfgp.stagger_tests and len(decode) > 1:
+            testers = [i for i in decode
+                       if getattr(controllers[i], "phase", "") == TEST
+                       and hasattr(controllers[i], "hold")]
+            if len(testers) > 1:
+                keep = testers[self._stagger_tick % len(testers)]
+                held = frozenset(t for t in testers if t != keep)
+                self._stagger_tick += 1
+
+        requested, phases, accepts = {}, {}, {}
+        for i in decode:
+            ctl = controllers[i]
+            phases[i] = getattr(ctl, "phase", "")
+            requested[i] = int(ctl.hold() if i in held else ctl.next_k())
+            a = self._accept_rate(ctl)
+            accepts[i] = cfgp.default_accept if a is None else a
+
+        base_ns = [0] * b
+        for i in decode:
+            base_ns[i] = 1
+        for i, p in pre.items():
+            base_ns[i] = p
+        oracle = cm.BatchCostOracle(
+            self.cfg, self.hw, context_lens, affinity=self.affinity,
+            window=self.window,
+            prefill_tokens=[pre.get(i, 0) for i in range(b)])
+
+        # -- allocate ----------------------------------------------------
+        # bypass: independent policy, or a single-span pass (B=1 — the
+        # paper's regime, where Cascade alone is the policy and the
+        # planner must be invisible, bit for bit)
+        singleton = len(decode) == 1 and not pre
+        if not joint or singleton:
+            alloc = dict(requested)
+        else:
+            # the (single) surviving trial runs its probe K unmodified
+            fixed = frozenset(
+                i for i in decode
+                if phases[i] == TEST and i not in held and requested[i] > 0)
+            alloc, _ = greedy_allocate(oracle, base_ns, decode, requested,
+                                       accepts, fixed=fixed,
+                                       util_floor=cfgp.util_floor)
+
+        # -- predictions + decisions ------------------------------------
+        ns = list(base_ns)
+        for i in decode:
+            ns[i] += alloc[i]
+        any_tokens = bool(decode or pre)
+        t_base = oracle.t_batch(base_ns) if any_tokens else 0.0
+        t_pred = oracle.t_batch(ns) if any_tokens else 0.0
+        decisions = {
+            i: PlanDecision(slot=i, requested=requested[i],
+                            granted=alloc[i], accept_rate=accepts[i],
+                            phase=phases[i], held=i in held)
+            for i in decode}
+        return BatchPlan(
+            decisions=decisions, t_base=t_base, t_predicted=t_pred,
+            tokens_predicted=sum(
+                expected_emitted(accepts[i], alloc[i]) for i in decode),
+            held=len(held),
+            preempted=sum(1 for d in decisions.values() if d.preempted))

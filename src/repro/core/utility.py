@@ -98,6 +98,24 @@ class UtilityAnalyzer:
         c = self.cost(n, k)
         return self.etr(n, k) / max(c, 1e-9)
 
+    def accept_rate(self, n: Optional[int] = None) -> Optional[float]:
+        """Windowed per-draft acceptance estimate: accepted draft tokens /
+        drafted tokens over the last `n` records that speculated (k > 0) —
+        filtered *before* windowing, so a run of K=0 iterations (a
+        backed-off set phase, planner preemptions) does not blank out the
+        estimate while real speculative history exists. None until a
+        speculative record exists — callers fall back to their prior.
+        `tokens` counts the bonus token, so accepted = tokens - 1; a
+        stop-token-truncated iteration undercounts, deliberately: the
+        planner should not bank on tokens past a stop. Capped below 1 so
+        geometric-series consumers stay finite."""
+        recs = [r for r in self._records if r.k > 0][-(n or self.window):]
+        drafted = sum(r.k for r in recs)
+        if drafted <= 0:
+            return None
+        accepted = sum(min(max(r.tokens - 1, 0), r.k) for r in recs)
+        return min(accepted / drafted, 0.999)
+
     def trial_utility(self, trial_records) -> float:
         """Utility of an explicit list of records (one test-phase trial)."""
         base = self.baseline_time

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 
 from repro.core import cost_model as cm
 from repro.core.controller import CascadeController, StaticKController
+from repro.core.planner import BatchSpecPlanner, PlannerConfig
 from repro.models import transformer as T
 
 from .drafter import Drafter, NGramDrafter
@@ -326,7 +327,13 @@ class BatchedEngine:
     split, so per-request utility stays meaningful under batching. The
     engine clock `now` (virtual under clock="model") prices admission too:
     queue delay, chunked/blocking prefill, and TTFT are all on one clock
-    (see docs/prefill.md)."""
+    (see docs/prefill.md).
+
+    `policy` selects how the per-request controller asks become per-step
+    draft allocations: "joint" (default) runs the `BatchSpecPlanner`'s
+    marginal-utility water-filling over the shared pass (docs/planner.md);
+    "independent" is the escape hatch where every grant equals its ask —
+    the pre-planner engine. At B=1 the two are bit-identical."""
 
     def __init__(self, cfg, params, drafter_factory: Callable = None, *,
                  max_batch: int = 8,
@@ -339,7 +346,9 @@ class BatchedEngine:
                  temperature: float = 1.0,
                  seed: int = 0,
                  chunk: int = 0,
-                 max_prefill_tokens_per_step: Optional[int] = None):
+                 max_prefill_tokens_per_step: Optional[int] = None,
+                 policy: Optional[str] = None,
+                 planner: Optional[BatchSpecPlanner] = None):
         self.cfg = cfg
         self.params = params
         self.drafter_factory = drafter_factory or (lambda: NGramDrafter())
@@ -362,6 +371,23 @@ class BatchedEngine:
         if max_prefill_tokens_per_step is None:
             max_prefill_tokens_per_step = self.chunk * max_batch
         self.max_prefill_tokens_per_step = int(max_prefill_tokens_per_step)
+        # a supplied planner's own config is the source of truth for the
+        # policy; an explicit `policy` argument must agree with it (a
+        # silently-ignored escape hatch would be worse than an error)
+        if planner is not None:
+            if policy is not None and policy != planner.config.policy:
+                raise ValueError(
+                    f"policy={policy!r} contradicts the supplied planner's "
+                    f"policy={planner.config.policy!r}")
+            policy = planner.config.policy
+        policy = policy or "joint"
+        if policy not in ("joint", "independent"):
+            raise ValueError(f"unknown planner policy {policy!r} "
+                             "(expected 'joint' or 'independent')")
+        self.policy = policy
+        self.planner = planner or BatchSpecPlanner(
+            cfg, hw, affinity=affinity, window=window,
+            config=PlannerConfig(policy=policy))
         #: engine clock: virtual seconds under clock="model" (cost-model
         #: priced steps + blocking prefills), wall seconds under "wall".
         #: Queue-delay and TTFT telemetry are measured on this clock.
@@ -568,14 +594,23 @@ class BatchedEngine:
         if not decode_rows and not chunk_plan:
             return {}
 
-        # 1. per-request drafting (each request's own controller decides K_i)
+        # 1. joint speculation planning + per-request drafting: each
+        # request's controller asks (the Cascade FSM still explores and
+        # disables per request), the planner grants {K_i} jointly — greedy
+        # marginal-utility water-filling over the shared pass, with TEST
+        # phases staggered to one trial per step (docs/planner.md). Under
+        # policy="independent", and always at B=1, grants == asks exactly.
+        plan = self.planner.plan(
+            {i: slots[i].controller for i in decode_rows},
+            [int(n) for n in lengths_before],
+            prefill_tokens=chunk_plan)
         k_req, drafts, draft_probs, wall_draft = {}, {}, {}, {}
         for i in decode_rows:
             s = slots[i]
-            k_req[i] = s.controller.next_k()
+            k_req[i] = plan.decisions[i].requested
             t0 = time.perf_counter()
             drafts[i], draft_probs[i] = s.drafter.propose(
-                s.history, k_req[i], rng=s.rng)
+                s.history, plan.decisions[i].granted, rng=s.rng)
             wall_draft[i] = time.perf_counter() - t0
             if len(drafts[i]) > room_min - 1:  # span = 1 + drafts
                 drafts[i] = drafts[i][:max(room_min - 1, 0)]
@@ -692,7 +727,9 @@ class BatchedEngine:
                 utility=s.controller.utility(),
                 batch_occupancy=occupancy,
                 union_experts=union or 0.0,
-                padding_frac=padded / (n_tokens + padded) if n_tokens else 0.0))
+                padding_frac=padded / (n_tokens + padded) if n_tokens else 0.0,
+                k_granted=plan.decisions[i].granted,
+                plan_held=plan.decisions[i].held))
             s.iteration += 1
             emitted_by_slot[i] = emitted
             self._maybe_finish(s, stopped=stopped)
@@ -728,7 +765,14 @@ class BatchedEngine:
             joined=self._joined_since_step,
             retired=sum(1 for i in spans if slots[i].done),
             prefill_tokens=sum(chunk_plan.values()),
-            decode_tokens=sum(len(spans[i]) for i in decode_rows))
+            decode_tokens=sum(len(spans[i]) for i in decode_rows),
+            k_requested=plan.requested_total,
+            k_granted=plan.granted_total,
+            preempted=plan.preempted,
+            held_tests=plan.held,
+            t_step_predicted=plan.t_predicted,
+            t_base_predicted=plan.t_base,
+            tokens_predicted=plan.tokens_predicted)
         self.telemetry.steps.append(step_tel)
         self.now += step_tel.t_total
         for i in finished_prefill:  # first token exists as of end-of-step

@@ -21,6 +21,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, Iterable, List, Optional
 
 from .engine import BatchedEngine, GenerationResult, ServingEngine
+from .telemetry import planner_aggregates
 
 
 @dataclass
@@ -183,3 +184,13 @@ class ContinuousBatchingScheduler:
     def mean_queue_delay(self) -> float:
         rs = self.results
         return sum(r.telemetry.t_queue for r in rs) / len(rs) if rs else 0.0
+
+    def planner_stats(self) -> dict:
+        """Batch-planner figures over this scheduler's steps (sliced from
+        `_steps_start` so a reused engine's earlier runs don't leak in):
+        grant ratio (granted/requested drafts — 1.0 under
+        policy="independent" by construction), outright preemptions, TEST
+        trials postponed by phase staggering, and the planner's
+        predicted-vs-measured step-time calibration error."""
+        return planner_aggregates(
+            self.engine.telemetry.steps[self._steps_start:])

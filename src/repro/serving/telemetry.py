@@ -27,6 +27,9 @@ class IterationTelemetry:
     batch_occupancy: int = 1   # requests sharing this verification pass
     union_experts: float = 0.0  # batch-union unique experts (mean per layer)
     padding_frac: float = 0.0  # padded fraction of the [B, T_max] step
+    # -- batch-planner fields (k_granted == k_requested off-planner) ------ #
+    k_granted: int = 0         # planner's joint allocation for this request
+    plan_held: bool = False    # TEST trial postponed by phase staggering
 
 
 @dataclass
@@ -46,6 +49,14 @@ class StepTelemetry:
     # -- chunked-prefill split (both 0 on a pure legacy decode step) ------ #
     prefill_tokens: int = 0    # prompt tokens co-scheduled into this pass
     decode_tokens: int = 0     # speculative span tokens in this pass
+    # -- batch-planner decisions (requested == granted off-planner) ------- #
+    k_requested: int = 0       # sum of controller asks across decode rows
+    k_granted: int = 0         # sum of planner grants across decode rows
+    preempted: int = 0         # decode rows granted 0 while asking > 0
+    held_tests: int = 0        # TEST trials postponed by phase staggering
+    t_step_predicted: float = 0.0  # planner's predicted pass seconds
+    t_base_predicted: float = 0.0  # predicted no-speculation pass seconds
+    tokens_predicted: float = 0.0  # planner's predicted decode emissions
 
     @property
     def t_total(self) -> float:
@@ -137,3 +148,46 @@ class EngineTelemetry:
         pre = sum(t.prefill_tokens for t in self.steps)
         tot = sum(t.tokens_in_flight for t in self.steps)
         return pre / tot if tot else 0.0
+
+    # -- batch-planner aggregates ---------------------------------------- #
+
+    @property
+    def grant_ratio(self) -> float:
+        """Granted / requested draft tokens across the run — how much of
+        the controllers' asks the joint planner actually admitted (1.0
+        under policy="independent" by construction)."""
+        return planner_aggregates(self.steps)["grant_ratio"]
+
+    @property
+    def preemptions(self) -> int:
+        """Decode iterations whose speculation the planner denied outright."""
+        return planner_aggregates(self.steps)["preemptions"]
+
+    @property
+    def held_tests(self) -> int:
+        """Cascade TEST trials postponed by phase staggering."""
+        return planner_aggregates(self.steps)["held_tests"]
+
+    @property
+    def plan_time_error(self) -> float:
+        """Mean relative |predicted - measured| step time — the planner's
+        calibration against the measured pass (analytic union + acceptance
+        prior vs the model's actual routing)."""
+        return planner_aggregates(self.steps)["plan_time_error"]
+
+
+def planner_aggregates(steps) -> dict:
+    """Batch-planner decision aggregates over a step-telemetry list — the
+    one implementation behind `EngineTelemetry`'s planner properties and
+    `ContinuousBatchingScheduler.planner_stats` (which slices the steps to
+    its own run before aggregating)."""
+    req = sum(s.k_requested for s in steps)
+    gr = sum(s.k_granted for s in steps)
+    errs = [abs(s.t_step_predicted - s.t_step) / s.t_step
+            for s in steps if s.t_step > 0 and s.t_step_predicted]
+    return {
+        "grant_ratio": gr / req if req else 1.0,
+        "preemptions": sum(s.preempted for s in steps),
+        "held_tests": sum(s.held_tests for s in steps),
+        "plan_time_error": sum(errs) / len(errs) if errs else 0.0,
+    }

@@ -143,6 +143,69 @@ def test_batched_b1_bit_identical_to_legacy(tiny_moe, temperature,
     assert r1.telemetry.decode_time == r2.telemetry.decode_time
 
 
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_joint_policy_b1_bit_identical_to_independent(tiny_moe, temperature):
+    """The planner bypass at B=1: BatchedEngine(policy="joint") must emit a
+    bit-identical token stream AND identical telemetry to the per-request
+    controller path (policy="independent") on fixed seeds — the planner is
+    invisible in the paper's single-batch regime."""
+    cfg, params = tiny_moe
+    prompt = [5, 6, 7, 8, 9] * 8
+
+    def run(policy):
+        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=1, max_len=512,
+                            temperature=temperature, clock="model",
+                            seed=7, policy=policy)
+        return eng.generate(prompt, max_new=32,
+                            controller=CascadeController()), eng
+
+    r_joint, e_joint = run("joint")
+    r_ind, e_ind = run("independent")
+    assert r_joint.tokens == r_ind.tokens
+    assert r_joint.telemetry.decode_time == r_ind.telemetry.decode_time
+    its_j, its_i = r_joint.telemetry.iterations, r_ind.telemetry.iterations
+    assert len(its_j) == len(its_i)
+    for a, b in zip(its_j, its_i):
+        assert (a.k_requested, a.k_granted, a.k_drafted) == \
+            (b.k_requested, b.k_granted, b.k_drafted)
+        assert a.k_granted == a.k_requested      # bypass: grant == ask
+        assert not a.plan_held
+        assert (a.t_iter, a.t_draft, a.t_verify, a.t_sample) == \
+            (b.t_iter, b.t_draft, b.t_verify, b.t_sample)
+    # step telemetry identical too, planner fields included
+    for sa, sb in zip(e_joint.telemetry.steps, e_ind.telemetry.steps):
+        assert (sa.k_requested, sa.k_granted, sa.preempted,
+                sa.held_tests) == (sb.k_requested, sb.k_granted,
+                                   sb.preempted, sb.held_tests)
+        assert sa.t_step == sb.t_step
+        assert sa.t_step_predicted == sb.t_step_predicted
+    # and both match the legacy single-request engine's stream
+    leg = ServingEngine(cfg, params, NGramDrafter(), max_len=512,
+                        temperature=temperature, clock="model", seed=7)
+    assert r_joint.tokens == leg.generate(
+        prompt, max_new=32, controller=CascadeController()).tokens
+
+
+def test_engine_policy_planner_consistency(tiny_moe):
+    """A supplied planner's config is the policy source of truth: an
+    explicit contradicting `policy` argument raises instead of being
+    silently ignored, and the engine's `policy` attribute reflects the
+    planner actually in use."""
+    from repro.core import BatchSpecPlanner, PlannerConfig
+    cfg, params = tiny_moe
+    pl = BatchSpecPlanner(cfg, config=PlannerConfig(policy="independent"))
+    with pytest.raises(ValueError):
+        BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=1,
+                      max_len=128, policy="joint", planner=pl)
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=1,
+                        max_len=128, planner=pl)
+    assert eng.policy == "independent"
+    with pytest.raises(ValueError):
+        BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=1,
+                      max_len=128, policy="bogus")
+
+
 def test_legacy_scheduler_works_over_batched_engine(tiny_moe):
     """The legacy FIFO Scheduler is a thin wrapper over batch=1."""
     cfg, params = tiny_moe

@@ -14,8 +14,8 @@ except ImportError:  # deterministic in-repo fallback (requirements-dev.txt)
 
 from repro.core import (CascadeConfig, CascadeController, IterationRecord,
                         SpeculationManager, UtilityAnalyzer, TPU_V5E,
-                        expected_unique_experts, iteration_bytes,
-                        iteration_time)
+                        batch_iteration_time, expected_unique_experts,
+                        iteration_bytes, iteration_time)
 from repro.core.manager import BASELINE, SET, TEST
 from repro.configs import get_config
 
@@ -51,6 +51,39 @@ def test_analyzer_utility_equals_measured_speedup(tokens, cost):
     u = an.utility(n=len(tokens), k=3)
     tpot_spec = (t_base * cost) / etr
     assert math.isclose(u, t_base / tpot_spec, rel_tol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ks=st.lists(st.integers(1, 6), min_size=2, max_size=4),
+       m=st.integers(6, 20), aff=st.floats(0.0, 0.9))
+def test_theorem_4_2_under_batching(ks, m, aff):
+    """Theorem 4.2 survives continuous batching per request: when a
+    request's iteration time is its *attributed share* of the shared pass
+    (the cost model's marginal-bytes split), its measured TPOT still
+    equals its attributed baseline TPOT divided by its windowed utility —
+    the invariant that makes per-request Cascade control meaningful at
+    B>1, and that the batch planner's water level is calibrated against."""
+    cfg = get_config("mixtral-8x7b")
+    b = len(ks)
+    ctxs = [128 * (i + 1) for i in range(b)]
+    base = batch_iteration_time(cfg, TPU_V5E, [1] * b, ctxs, affinity=aff)
+    spec = batch_iteration_time(cfg, TPU_V5E, [k + 1 for k in ks], ctxs,
+                                affinity=aff)
+    for i in range(b):
+        t_base_i = base["per_request"][i]["t_attr"]
+        t_spec_i = spec["per_request"][i]["t_attr"]
+        tokens_i = 1 + (ks[i] + i) % (ks[i] + 1)   # 1..k_i+1 emissions
+        an = UtilityAnalyzer(window=m + 8)
+        for _ in range(4):
+            an.observe(IterationRecord(k=0, tokens=1, t_iter=t_base_i,
+                                       batch=b))
+        for _ in range(m):
+            an.observe(IterationRecord(k=ks[i], tokens=tokens_i,
+                                       t_iter=t_spec_i, t_verify=t_spec_i,
+                                       batch=b))
+        u = an.utility(n=m, k=ks[i])
+        tpot_spec = t_spec_i / tokens_i
+        assert math.isclose(tpot_spec, t_base_i / u, rel_tol=1e-6)
 
 
 # ===================================================================== #
