@@ -249,6 +249,196 @@ def planner_sweep(fast: bool = False, batches=(1, 2, 4, 8)):
 
 
 # --------------------------------------------------------------------- #
+# EP-shard sweep (model clock): shards x placement skew x B,
+# shard-aware vs global-union planning on a sharded deployment
+# --------------------------------------------------------------------- #
+
+def _ep_model():
+    """The reduced Mixtral widened back to 8 experts (a 4-expert reduction
+    cannot express a skewed 4-shard placement — every shard would hold one
+    expert — and 8 is the real Mixtral's count), trained ~200 steps on the
+    periodic-copy task so greedy generations are genuinely n-gram-draftable
+    (the conftest `trained_tiny_moe` recipe — real acceptance, real
+    routing). Untrained reduced models emit non-repeating pseudo-random
+    streams the drafter never matches, which would reduce every allocation
+    policy to a tie of zero-yield grants."""
+    import dataclasses
+    from repro.training import make_train_step
+    from repro.training.optimizer import adamw
+    cfg = dataclasses.replace(get_config("mixtral-8x7b").reduced(),
+                              num_experts=8, vocab_size=128, num_layers=2)
+    init_state, step = make_train_step(cfg, optimizer=adamw(3e-3))
+    state = init_state(jax.random.PRNGKey(1))
+    step = jax.jit(step)
+    rng = np.random.default_rng(3)
+
+    def copy_batch(bs=16, period=32, seq=96):
+        p = rng.integers(3, cfg.vocab_size, (bs, period))
+        reps = seq // period + 2
+        full = np.concatenate([np.ones((bs, 1), int)] + [p] * reps,
+                              axis=1)[:, :seq + 1]
+        mask = np.zeros((seq,), np.float32)
+        mask[period:] = 1.0
+        return {"tokens": jnp.asarray(full[:, :seq].astype(np.int32)),
+                "labels": jnp.asarray(full[:, 1:seq + 1].astype(np.int32)),
+                "mask": jnp.broadcast_to(jnp.asarray(mask), (bs, seq))}
+
+    for _ in range(200):
+        state, m = step(state, copy_batch())
+    emit("serving_micro/ep_model_train_ce", float(m["ce"]), "200-steps")
+    return cfg, state[0]
+
+
+def _ep_hw():
+    """Regime choice, not a physical device (cf. `_planner_hw`): bandwidth
+    scaled so the trained reduced model's shared pass is memory-bound at
+    the no-speculation allocation, with the compute roofline close enough
+    that the global-union model's *under-counted* expert bytes place the
+    crossover before the granted allocations while the true max-over-shards
+    bytes keep the pass memory-bound — exactly the window where balanced
+    accounting denies speculation a sharded deployment could afford."""
+    from repro.core import Hardware
+    return Hardware("tpu-v5e-ep-scaled", hbm_bw=1e9, peak_flops=1e10,
+                    ici_bw=5e8)
+
+
+def _ep_requests(cfg, n_requests: int, max_new: int):
+    """Draftable periodic prompts over the trained vocab (the copy task the
+    model learned), varying period so requests route differently."""
+    rng = np.random.default_rng(11)
+    out = []
+    for i in range(n_requests):
+        period = 4 + 2 * (i % 4)
+        pat = [int(x) for x in rng.integers(3, cfg.vocab_size, period)]
+        out.append(Request(request_id=f"r{i}", prompt=pat * (32 // period),
+                           max_new=max_new, task=f"p{period}"))
+    return out
+
+
+def ep_sweep(fast: bool = False, shards=(1, 2, 4),
+             skews=("uniform", "zipf"), batches=(1, 4, 8)):
+    """EP-sharded serving grid on the deterministic model clock
+    (docs/expert_parallel.md). For each shard count and placement skew
+    (`uniform` = contiguous equal blocks, `zipf` = zipf(2)-sized blocks —
+    co-located popular experts concentrating the routed load on shard 0),
+    the continuous-batching engine runs with measured per-shard activation
+    accounting and either the shard-aware planner (max-over-shards
+    pricing) or the global-union comparator (`shard_aware=False`: the
+    union spread evenly over shards — the model that misprices the gating
+    shard). Controllers use a fast-converging Cascade config with planner
+    staggering off: synchronized joins at B=8 would otherwise stretch the
+    trial phases past the request lifetimes and leave the water-filling
+    nothing but pinned probes to allocate — the sweep measures
+    steady-state allocation, not FSM exploration.
+
+    `--fast` shrinks the grid to the gated corners (shards {1, max},
+    B {1, max}), never the regime — the gates must mean the same thing in
+    CI as in the committed artifact.
+
+    Gates (committed artifact + CI smoke):
+      * shards=1 tokens/s must equal the placement-free engine *exactly*
+        (the sharded stack degrades bit-for-bit, per-batch-size);
+      * the shard-aware planner must not lose to the global-union planner
+        on the skewed placement at the deepest point (shards=4, zipf,
+        B=max)."""
+    from repro.core import (BatchSpecPlanner, CascadeConfig,
+                            ExpertPlacement, PlannerConfig)
+    cfg, params = _ep_model()
+    hw = _ep_hw()
+    if fast:
+        shards = tuple(s for s in shards if s in (1, max(shards)))
+        batches = tuple(b for b in batches if b in (1, max(batches)))
+    n_requests = 2 * max(batches)
+    max_new = 48
+
+    def controller():
+        return CascadeController(CascadeConfig(
+            trial_len=2, max_trials=2, baseline_iters=2, set_len=64))
+
+    def run(placement, shard_aware, b):
+        planner = BatchSpecPlanner(
+            cfg, hw, config=PlannerConfig(policy="joint",
+                                          shard_aware=shard_aware,
+                                          stagger_tests=False),
+            placement=placement)
+        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=b, max_len=512, temperature=0.0,
+                            clock="model", seed=0, hw=hw,
+                            placement=placement, planner=planner)
+        sched = ContinuousBatchingScheduler(
+            eng, controller_factory=controller)
+        sched.run(_ep_requests(cfg, n_requests, max_new))
+        return eng, sched
+
+    rows = []
+    tps = {}
+
+    def record(planner_kind, skew, n_s, b, eng, sched):
+        stats = sched.planner_stats()
+        row = {
+            "planner": planner_kind, "skew": skew, "shards": n_s, "B": b,
+            "tokens_per_s": sched.tokens_per_second(),
+            "mean_request_utility": sched.mean_request_utility(),
+            "union_experts_per_iter": eng.telemetry.mean_union_experts,
+            "grant_ratio": stats["grant_ratio"],
+            "preemptions": stats["preemptions"],
+            "mean_shard_imbalance": stats["mean_shard_imbalance"],
+            "hot_shard_frac": stats["hot_shard_frac"],
+            "plan_time_error": stats["plan_time_error"],
+            "steps": len(eng.telemetry.steps),
+        }
+        rows.append(row)
+        tps[(planner_kind, skew, n_s, b)] = row["tokens_per_s"]
+        emit(f"serving_micro/ep_{planner_kind}_{skew}_s{n_s}_B{b}"
+             f"_tokens_per_s", row["tokens_per_s"],
+             f"imb={row['mean_shard_imbalance']:.2f};"
+             f"grant={row['grant_ratio']:.3f};err={row['plan_time_error']:.3f}")
+        return row
+
+    e = cfg.num_experts
+    for b in batches:
+        eng, sched = run(None, True, b)
+        record("none", "uniform", 0, b, eng, sched)       # shards=0: no EP
+        eng, sched = run(ExpertPlacement.contiguous(e, 1), True, b)
+        record("aware", "uniform", 1, b, eng, sched)
+    for n_s in [s for s in shards if s > 1]:
+        for skew in skews:
+            pl = (ExpertPlacement.contiguous(e, n_s) if skew == "uniform"
+                  else ExpertPlacement.zipf(e, n_s, alpha=2.0))
+            for b in batches:
+                for kind, aware in (("aware", True), ("global", False)):
+                    eng, sched = run(pl, aware, b)
+                    record(kind, skew, n_s, b, eng, sched)
+
+    # gate 1: n_shards=1 degradation is exactly the placement-free engine
+    drift = max(abs(tps[("aware", "uniform", 1, b)]
+                    - tps[("none", "uniform", 0, b)]) for b in batches)
+    emit("serving_micro/ep_s1_drift", drift, "must-be-exactly-0")
+    # gate 2: shard-aware >= global-union where the placement is skewed
+    deep_s, deep_b = max(s for s in shards if s > 1), max(batches)
+    gain = (tps[("aware", "zipf", deep_s, deep_b)]
+            / tps[("global", "zipf", deep_s, deep_b)]
+            if tps.get(("global", "zipf", deep_s, deep_b)) else 0.0)
+    emit(f"serving_micro/ep_s{deep_s}_zipf_B{deep_b}_aware_over_global",
+         gain, "must-be>=1")
+    save_json("serving_micro_ep_sweep",
+              {"hw": {"name": hw.name, "hbm_bw": hw.hbm_bw,
+                      "peak_flops": hw.peak_flops, "ici_bw": hw.ici_bw},
+               "num_experts": e, "max_new": max_new, "rows": rows,
+               "s1_drift": drift, "deep_shards": deep_s, "deep_B": deep_b,
+               "aware_over_global": gain})
+    if drift != 0.0:
+        raise SystemExit(
+            f"shards=1 tokens/s drifted {drift!r} from the placement-free "
+            "engine (must be exactly 0)")
+    if gain < 1.0:
+        raise SystemExit(
+            f"shard-aware planning lost to the global-union planner on the "
+            f"zipf placement at shards={deep_s}, B={deep_b}: x{gain:.4f}")
+    return rows
+
+
+# --------------------------------------------------------------------- #
 # Chunked-prefill sweep (model clock): queue depth x chunk -> TTFT / TPOT
 # --------------------------------------------------------------------- #
 
@@ -346,6 +536,9 @@ if __name__ == "__main__":
                     help="continuous-batching sweep over B in {1,2,4,8}")
     ap.add_argument("--planner-sweep", action="store_true",
                     help="joint vs independent K allocation sweep")
+    ap.add_argument("--ep-sweep", action="store_true",
+                    help="EP shards x placement skew x B: shard-aware vs "
+                         "global-union planning")
     ap.add_argument("--prefill-sweep", action="store_true",
                     help="queue depth x chunk size -> TTFT/TPOT sweep")
     ap.add_argument("--no-micro", action="store_true",
@@ -357,5 +550,7 @@ if __name__ == "__main__":
         batch_sweep(fast=args.fast)
     if args.planner_sweep:
         planner_sweep(fast=args.fast)
+    if args.ep_sweep:
+        ep_sweep(fast=args.fast)
     if args.prefill_sweep:
         prefill_sweep(fast=args.fast)

@@ -8,7 +8,8 @@ from .cost_model import (Hardware, TPU_V5E, RTX_6000_ADA,
                          expected_unique_experts_batch, iteration_bytes,
                          iteration_flops, iteration_time, draft_time,
                          sample_time, kv_bytes_per_token)
-from .cost_model import BatchCostOracle, expected_emitted
+from .cost_model import (BatchCostOracle, ExpertPlacement, a2a_bytes,
+                         expected_emitted, expected_unique_experts_sharded)
 from .manager import BASELINE, TEST, SET, CascadeConfig, SpeculationManager
 from .planner import (BatchPlan, BatchSpecPlanner, PlanDecision,
                       PlannerConfig, greedy_allocate)
@@ -24,4 +25,5 @@ __all__ = [
     "BASELINE", "TEST", "SET", "cascade_for_model",
     "BatchSpecPlanner", "BatchPlan", "PlanDecision", "PlannerConfig",
     "expected_emitted", "greedy_allocate",
+    "ExpertPlacement", "expected_unique_experts_sharded", "a2a_bytes",
 ]

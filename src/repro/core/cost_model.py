@@ -15,6 +15,7 @@ active-expert correction for MoE decode."""
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -84,6 +85,217 @@ def expected_unique_experts_batch(num_experts: int, top_k: int,
             marginal.append(union - expected_unique_experts(
                 num_experts, top_k, total - n, affinity))
     return {"union": union, "marginal": marginal}
+
+
+# --------------------------------------------------------------------- #
+# Expert-parallel placement + per-shard activation statistics
+# (docs/expert_parallel.md — under EP the activated-expert union is *per
+# shard*: the pass completes only when the hottest shard has streamed its
+# local experts, so global-union accounting under-prices skewed routing)
+# --------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class ExpertPlacement:
+    """Experts -> EP-shard map: the pricing contract every shard-aware
+    consumer (cost model, planner, engine telemetry) shares.
+
+    `shard_of[e]` is the shard holding expert e's weights; every expert
+    lives on exactly one shard (no replication), and every shard id in
+    0..n_shards-1 holds at least one expert. `contiguous` matches
+    `distributed/expert_parallel.py`'s layout (expert e on shard
+    e // (E / n_shards)); `from_sizes` builds contiguous blocks of
+    arbitrary sizes, and `zipf` the skew-study placement that co-locates
+    zipf-proportional expert populations on shard 0 downward."""
+    shard_of: Tuple[int, ...]
+
+    def __post_init__(self):
+        if not self.shard_of:
+            raise ValueError("empty placement (no experts)")
+        s = max(self.shard_of) + 1
+        if min(self.shard_of) < 0 or len(set(self.shard_of)) != s:
+            raise ValueError("shard ids must cover 0..n_shards-1 with every "
+                             f"shard non-empty, got {self.shard_of}")
+
+    @property
+    def num_experts(self) -> int:
+        return len(self.shard_of)
+
+    @property
+    def n_shards(self) -> int:
+        return max(self.shard_of) + 1
+
+    @property
+    def counts(self) -> Tuple[int, ...]:
+        """Experts resident per shard."""
+        c = [0] * self.n_shards
+        for s in self.shard_of:
+            c[s] += 1
+        return tuple(c)
+
+    def validate_experts(self, num_experts: int) -> None:
+        """The one consistency check every consumer of the pricing
+        contract applies (cost model, planner, engine): this placement
+        must map exactly the model's experts."""
+        if self.num_experts != num_experts:
+            raise ValueError(f"placement maps {self.num_experts} experts, "
+                             f"model has {num_experts}")
+
+    @classmethod
+    def contiguous(cls, num_experts: int, n_shards: int) -> "ExpertPlacement":
+        if n_shards <= 0 or num_experts % n_shards:
+            raise ValueError(f"{num_experts} experts do not divide evenly "
+                             f"over {n_shards} shards")
+        e_loc = num_experts // n_shards
+        return cls(tuple(e // e_loc for e in range(num_experts)))
+
+    @classmethod
+    def from_sizes(cls, sizes: Sequence[int]) -> "ExpertPlacement":
+        ids = []
+        for s, n in enumerate(sizes):
+            if n <= 0:
+                raise ValueError(f"shard {s} holds {n} experts")
+            ids.extend([s] * int(n))
+        return cls(tuple(ids))
+
+    @classmethod
+    def zipf(cls, num_experts: int, n_shards: int,
+             alpha: float = 2.0) -> "ExpertPlacement":
+        """Contiguous blocks with zipf(alpha)-proportional sizes (shard 0
+        largest), every shard holding >= 1 expert — a deliberately skewed
+        placement that concentrates the routed load on shard 0 even under
+        uniform routing (the --ep-sweep skew axis)."""
+        if n_shards <= 0 or n_shards > num_experts:
+            raise ValueError(f"{n_shards} shards for {num_experts} experts")
+        w = [1.0 / (s + 1) ** alpha for s in range(n_shards)]
+        tot = sum(w)
+        rem = num_experts - n_shards
+        quota = [rem * x / tot for x in w]
+        base = [int(q) for q in quota]
+        left = rem - sum(base)
+        order = sorted(range(n_shards), key=lambda s: (quota[s] - base[s], -s),
+                       reverse=True)
+        for s in order[:left]:
+            base[s] += 1
+        return cls.from_sizes([1 + b for b in base])
+
+
+def _hot_shard(per_shard) -> int:
+    """The gating shard: argmax activated experts, ties broken on the
+    lowest shard id — the ONE tie-break rule shared by the analytic and
+    measured paths (they must never disagree on which shard gates)."""
+    return max(range(len(per_shard)), key=lambda s: (per_shard[s], -s))
+
+
+def _normalized_shard_weights(counts, n_requests: int, shard_weights):
+    """Per-request routing profiles normalized to unit mass; None entries
+    (and all-zero profiles) fall back to placement-proportional mass
+    E_s/E — allocation-independent, so oracles cache the result."""
+    e = float(sum(counts))
+    base_w = [c / e for c in counts]
+    ws = []
+    for i in range(n_requests):
+        w = None if shard_weights is None else shard_weights[i]
+        if w is None:
+            ws.append(base_w)
+            continue
+        w = [max(float(x), 0.0) for x in w]
+        if len(w) != len(counts):
+            raise ValueError(f"profile of {len(w)} shards vs {len(counts)}")
+        tot = sum(w)
+        ws.append([x / tot for x in w] if tot > 0 else base_w)
+    return ws
+
+
+def _sharded_union(num_experts: int, top_k: int, ns, counts, norm_ws,
+                   affinity: float) -> dict:
+    """Core per-shard curve over pre-normalized profiles (see
+    `expected_unique_experts_sharded` for the derivation and the public
+    normalizing entry point)."""
+    s_n = len(counts)
+    total = sum(ns)
+    if num_experts == 0 or total == 0:
+        return {"per_shard": [0.0] * s_n, "union": 0.0, "max_shard": 0.0,
+                "hot_shard": 0, "n_shards": s_n}
+    k = float(min(top_k, num_experts))
+    per_shard = []
+    for s in range(s_n):
+        e_s = float(counts[s])
+        untouched, mass = 1.0, 0.0
+        for i, n in enumerate(ns):
+            if n <= 0:
+                continue
+            q = min(k * norm_ws[i][s] / e_s, 1.0)
+            untouched *= (1.0 - q) ** n
+            mass += n * norm_ws[i][s]
+        rand = e_s * (1.0 - untouched)
+        floor = min(k * (mass / total), e_s)
+        val = floor + (rand - floor) * (1.0 - affinity)
+        per_shard.append(min(max(val, 0.0), e_s))
+    hot = _hot_shard(per_shard)
+    return {"per_shard": per_shard, "union": sum(per_shard),
+            "max_shard": per_shard[hot], "hot_shard": hot, "n_shards": s_n}
+
+
+def expected_unique_experts_sharded(num_experts: int, top_k: int,
+                                    tokens_per_request,
+                                    placement: Optional[ExpertPlacement],
+                                    affinity: float = 0.0,
+                                    shard_weights=None) -> dict:
+    """Per-EP-shard expected distinct-expert activations for B requests
+    jointly verifying sum(n_i) tokens in one shared pass.
+
+    Per-expert occupancy with per-request shard profiles: request i routes a
+    fraction `shard_weights[i][s]` of its expert picks to shard s (default:
+    proportional to the shard's resident population E_s/E — uniform
+    routing), spread uniformly over the shard's E_s local experts, so one of
+    its tokens leaves a given expert on s untouched with probability
+    (1 - k*w_is/E_s). Shard s's random-routing union is then
+        rand_s = E_s * (1 - prod_i (1 - k*w_is/E_s)^{n_i}),
+    damped toward the affinity floor k * (s's share of the routed mass)
+    exactly as `expected_unique_experts` damps the global curve. Under
+    uniform profiles the shards partition the global curve
+    (sum_s rand_s == E*(1-(1-k/E)^T)); skewed profiles concentrate it — the
+    hottest shard's count grows while the total shrinks, which is the whole
+    point: the *max* over shards gates a sharded verification pass.
+
+    Returns per_shard [S], union (= sum over shards, the placement-
+    consistent global union), max_shard, hot_shard, n_shards. Degrades
+    float-exactly to `expected_unique_experts_batch` at n_shards=1 /
+    placement=None (delegation, not re-derivation)."""
+    ns = [max(int(n), 0) for n in tokens_per_request]
+    if placement is not None:
+        placement.validate_experts(num_experts)
+    if placement is None or placement.n_shards == 1:
+        u = expected_unique_experts_batch(num_experts, top_k, ns,
+                                          affinity)["union"]
+        return {"per_shard": [u], "union": u, "max_shard": u,
+                "hot_shard": 0, "n_shards": 1}
+    counts = placement.counts
+    norm_ws = _normalized_shard_weights(counts, len(ns), shard_weights)
+    return _sharded_union(num_experts, top_k, ns, counts, norm_ws, affinity)
+
+
+def a2a_bytes(cfg, n_tokens: int, n_shards: int, wb: int = 2) -> float:
+    """All-to-all dispatch volume of one EP-sharded pass: each in-flight
+    token's k expert inputs cross shards with probability (S-1)/S, once out
+    and once back, per MoE layer (the Switch/GShard pattern
+    `distributed/expert_parallel.py` implements)."""
+    if not cfg.is_moe or n_shards <= 1 or n_tokens <= 0:
+        return 0.0
+    n_moe = sum(1 for kk in cfg.layer_kinds() if kk in ("A", "X"))
+    return (2.0 * n_tokens * cfg.experts_per_token * cfg.d_model * wb
+            * (n_shards - 1) / n_shards * n_moe)
+
+
+def _a2a_time(cfg, hw: "Hardware", n_tokens: int, n_shards: int,
+              wb: int = 2) -> float:
+    """Seconds the collective adds to the pass: per-shard egress (the total
+    volume spreads across S links) over the interconnect bandwidth (HBM
+    bandwidth when the hardware has no ici figure)."""
+    if n_shards <= 1:
+        return 0.0
+    link_bw = hw.ici_bw if hw.ici_bw > 0 else hw.hbm_bw
+    return a2a_bytes(cfg, n_tokens, n_shards, wb) / (link_bw * n_shards)
 
 
 # --------------------------------------------------------------------- #
@@ -224,7 +436,10 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
                          context_lens, *, unique_experts: float = None,
                          per_request_unique=None, affinity: float = 0.0,
                          window: int = 0, fixed_overhead: float = 2e-4,
-                         prefill_tokens=None) -> dict:
+                         prefill_tokens=None,
+                         placement: Optional[ExpertPlacement] = None,
+                         shard_weights=None, per_shard_unique=None,
+                         assume_balanced: bool = False) -> dict:
     """Seconds for one *shared* verification pass over B requests, request i
     contributing n_i = tokens_per_request[i] in-flight tokens against its own
     context_lens[i]-token KV cache.
@@ -255,8 +470,24 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
     commensurable units (a decode span's single-span KV append stays
     negligible and unpriced, as before).
 
+    Expert parallelism (`placement` with n_shards > 1, docs/expert_parallel
+    .md): the expert term is no longer the global union — each shard
+    streams only its resident experts, the pass completes when the
+    *hottest* shard has streamed its local activated set, and the
+    all-to-all dispatch adds interconnect time. Per-shard activated counts
+    come from `per_shard_unique` (measured, [S]) or the analytic
+    `expected_unique_experts_sharded` under `shard_weights` per-request
+    routing profiles; `assume_balanced=True` is the deliberately naive
+    comparator that spreads the union evenly over shards (the
+    "global-union" model the --ep-sweep gates against — it under-prices
+    skewed routing). `placement=None` / n_shards=1 degrades bit-exactly to
+    the unsharded model above.
+
     Returns iteration_time's keys plus `per_request` (list of dicts with
-    t_attr / bytes_attr / marginal_experts) and `n_requests`."""
+    t_attr / bytes_attr / marginal_experts) and `n_requests`; sharded
+    passes additionally report `shard_unique` [S], `max_shard_experts`,
+    `hot_shard`, `imbalance` (max/mean over shards), `t_a2a`, and
+    `n_shards`."""
     wb = 2
     ns = [max(int(n), 0) for n in tokens_per_request]
     cls = list(context_lens)
@@ -275,7 +506,30 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
     union = est["union"] if unique_experts is None else float(unique_experts)
 
     weights = _weight_read_bytes(cfg, wb)
-    experts = _expert_read_bytes(cfg, union, wb)
+    sharded = (placement is not None and placement.n_shards > 1
+               and cfg.is_moe)
+    shard_info = {}
+    if sharded:
+        # the hottest shard gates the pass: its local activated experts are
+        # the expert stream on the critical path, not the global union
+        shard_unique, hot = _resolve_shard_unique(
+            cfg, ns, placement, affinity, shard_weights, per_shard_unique)
+        gate = (sum(shard_unique) / placement.n_shards if assume_balanced
+                else shard_unique[hot])
+        experts = _expert_read_bytes(cfg, gate, wb)
+        t_a2a = _a2a_time(cfg, hw, total_tokens, placement.n_shards, wb)
+        mean_shard = sum(shard_unique) / placement.n_shards
+        shard_info = {
+            "shard_unique": shard_unique,
+            "max_shard_experts": shard_unique[hot],
+            "hot_shard": hot,
+            "imbalance": (shard_unique[hot] / mean_shard
+                          if mean_shard > 0 else 1.0),
+            "t_a2a": t_a2a, "n_shards": placement.n_shards,
+        }
+    else:
+        experts = _expert_read_bytes(cfg, union, wb)
+        t_a2a = 0.0
     n_attn = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
     prefill_bytes_per_tok = (kv_bytes_per_token(cfg, wb) * n_attn
                              + cfg.d_model * wb)   # KV write + embed row
@@ -289,8 +543,13 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
     t_mem = total_bytes / hw.hbm_bw
     t_compute = flops / hw.peak_flops
     t = max(t_mem, t_compute) + fixed_overhead
+    if sharded:
+        t = t + t_a2a
 
     # ---- marginal-bytes attribution -------------------------------------
+    # non-bytes terms (fixed overhead + the sharded pass's collective) are
+    # split evenly — every live request needs them, none owns them
+    non_bytes = fixed_overhead + t_a2a if sharded else fixed_overhead
     live = [i for i, n in enumerate(ns) if n > 0]
     n_live = max(len(live), 1)
     if per_request_unique is not None:
@@ -312,15 +571,36 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
             continue
         frac_e = (mweights[i] / msum) if msum > 0 else 1.0 / n_live
         bytes_i = weights / n_live + experts * frac_e + kv_each[i]
-        t_attr = ((t - fixed_overhead) * bytes_i / total_bytes
-                  if total_bytes > 0 else 0.0) + fixed_overhead / n_live
+        t_attr = ((t - non_bytes) * bytes_i / total_bytes
+                  if total_bytes > 0 else 0.0) + non_bytes / n_live
         per_request.append({"t_attr": t_attr, "bytes_attr": bytes_i,
                             "marginal_experts": est["marginal"][i]})
 
-    return {"t_iter": t, "t_mem": t_mem, "t_compute": t_compute,
-            "bytes": total_bytes, "expert_bytes": experts, "flops": flops,
-            "unique_experts": union, "n_requests": b_req,
-            "n_tokens": total_tokens, "per_request": per_request}
+    out = {"t_iter": t, "t_mem": t_mem, "t_compute": t_compute,
+           "bytes": total_bytes, "expert_bytes": experts, "flops": flops,
+           "unique_experts": union, "n_requests": b_req,
+           "n_tokens": total_tokens, "per_request": per_request}
+    out.update(shard_info)
+    return out
+
+
+def _resolve_shard_unique(cfg, ns, placement: ExpertPlacement,
+                          affinity: float, shard_weights,
+                          per_shard_unique):
+    """Per-shard activated-expert counts for a sharded pass: measured
+    counts when the caller has them, the analytic sharded union otherwise.
+    Returns (shard_unique [S], hot_shard). Ties break on the lowest shard
+    id, keeping the gating shard deterministic."""
+    if per_shard_unique is not None:
+        shard_unique = [max(float(u), 0.0) for u in per_shard_unique]
+        if len(shard_unique) != placement.n_shards:
+            raise ValueError(f"{len(shard_unique)} shard counts vs "
+                             f"{placement.n_shards} shards")
+        return shard_unique, _hot_shard(shard_unique)
+    est = expected_unique_experts_sharded(
+        cfg.num_experts, cfg.experts_per_token, ns, placement,
+        affinity, shard_weights)
+    return est["per_shard"], est["hot_shard"]
 
 
 class BatchCostOracle:
@@ -334,11 +614,21 @@ class BatchCostOracle:
     (dense weight read, per-row KV/prefill bytes) at construction.
     `t_batch(ns)` returns exactly `batch_iteration_time(...)["t_iter"]` for
     the same inputs — same expressions, same float-op order — which a
-    tier-1 property test pins down."""
+    tier-1 property test pins down.
+
+    `placement` (n_shards > 1) switches the pricing to the EP-sharded
+    roofline: max over shards of local activated-expert bytes plus the
+    all-to-all collective, under per-row `shard_weights` routing profiles
+    (None entries -> uniform). `assume_balanced=True` keeps the placement's
+    shard count but spreads the union evenly — the global-union comparator
+    planner of docs/expert_parallel.md. Both agree float-exactly with
+    `batch_iteration_time` under the same arguments."""
 
     def __init__(self, cfg, hw: Hardware, context_lens, *,
                  affinity: float = 0.0, window: int = 0,
-                 fixed_overhead: float = 2e-4, prefill_tokens=None):
+                 fixed_overhead: float = 2e-4, prefill_tokens=None,
+                 placement: Optional[ExpertPlacement] = None,
+                 shard_weights=None, assume_balanced: bool = False):
         wb = 2
         self.cfg = cfg
         self.hw = hw
@@ -351,6 +641,24 @@ class BatchCostOracle:
                    [max(int(p), 0) for p in prefill_tokens])
         if len(self.ps) != b:
             raise ValueError(f"{len(self.ps)} prefill counts vs {b} contexts")
+        self.placement = placement
+        self.assume_balanced = assume_balanced
+        self._sharded = (placement is not None and placement.n_shards > 1
+                         and cfg.is_moe)
+        if placement is not None and cfg.is_moe:
+            placement.validate_experts(cfg.num_experts)
+        if shard_weights is not None and len(shard_weights) != b:
+            raise ValueError(f"{len(shard_weights)} shard profiles vs "
+                             f"{b} contexts")
+        self.shard_weights = shard_weights
+        if self._sharded:
+            # allocation-independent shard constants, cached like the
+            # dense-weight and per-row KV terms: the water-filling queries
+            # t_batch O(B*K) times per step and must not re-derive the
+            # placement's counts or re-normalize B profiles each time
+            self._counts = placement.counts
+            self._norm_sw = _normalized_shard_weights(self._counts, b,
+                                                      shard_weights)
         self._weights = _weight_read_bytes(cfg, wb)
         n_attn = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
         prefill_bytes_per_tok = (kv_bytes_per_token(cfg, wb) * n_attn
@@ -369,18 +677,29 @@ class BatchCostOracle:
                              f"{len(self.cls)} contexts")
         cfg, hw = self.cfg, self.hw
         total = sum(ns)
-        union = (expected_unique_experts(cfg.num_experts,
-                                         cfg.experts_per_token, total,
-                                         self.affinity)
-                 if cfg.is_moe and total > 0 else 0.0)
-        experts = _expert_read_bytes(cfg, union, 2)
+        if self._sharded:
+            est = _sharded_union(cfg.num_experts, cfg.experts_per_token,
+                                 ns, self._counts, self._norm_sw,
+                                 self.affinity)
+            gate = (sum(est["per_shard"]) / self.placement.n_shards
+                    if self.assume_balanced else est["max_shard"])
+            experts = _expert_read_bytes(cfg, gate, 2)
+        else:
+            union = (expected_unique_experts(cfg.num_experts,
+                                             cfg.experts_per_token, total,
+                                             self.affinity)
+                     if cfg.is_moe and total > 0 else 0.0)
+            experts = _expert_read_bytes(cfg, union, 2)
         total_bytes = self._weights + experts + sum(
             kv if n > 0 else 0.0 for n, kv in zip(ns, self._kv_live))
         flops = sum(iteration_flops(cfg, n, c + p, self.window)
                     for n, c, p in zip(ns, self.cls, self.ps) if n > 0)
         t_mem = total_bytes / hw.hbm_bw
         t_compute = flops / hw.peak_flops
-        return max(t_mem, t_compute) + self.fixed_overhead
+        t = max(t_mem, t_compute) + self.fixed_overhead
+        if self._sharded:
+            t = t + _a2a_time(cfg, hw, total, self.placement.n_shards, 2)
+        return t
 
 
 # --------------------------------------------------------------------- #

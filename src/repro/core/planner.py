@@ -31,6 +31,16 @@ request trials an off-policy K per shared pass (`SpeculationManager.hold`)
 attributed-cost measurement. The one trialing request is granted its probe
 K in full, so the FSM measures exactly what it asked to measure.
 
+Expert parallelism (docs/expert_parallel.md): under an `ExpertPlacement`
+with n_shards > 1 the oracle prices each candidate allocation with the
+max-over-shards roofline, so Δt_batch is the *hottest shard's* delta — a
++1 grant to a request whose routing profile concentrates on the gating
+shard costs more than one spreading over cold shards, and water-filling
+steers grants away from the shard that gates the pass.
+`PlannerConfig(shard_aware=False)` is the deliberately naive comparator
+that spreads the union evenly over shards (the "global-union" planner the
+--ep-sweep gates against).
+
 Degradation: at B=1 (a single span in the pass) the planner is bypassed —
 grants equal asks bit for bit, reproducing the legacy per-request
 controller path exactly — and `policy="independent"` is the escape hatch
@@ -61,6 +71,10 @@ class PlannerConfig:
     accept_window: int = 16
     #: stagger Cascade TEST phases to one trial per shared pass
     stagger_tests: bool = True
+    #: with an ExpertPlacement: True prices the max-over-shards roofline
+    #: (the hottest shard gates the pass); False is the global-union
+    #: comparator that assumes the union spreads evenly over shards
+    shard_aware: bool = True
 
 
 @dataclass
@@ -165,12 +179,20 @@ class BatchSpecPlanner:
     planner can be shared by the engine for the whole serving run."""
 
     def __init__(self, cfg, hw: cm.Hardware = None, *, affinity: float = 0.0,
-                 window: int = 0, config: Optional[PlannerConfig] = None):
+                 window: int = 0, config: Optional[PlannerConfig] = None,
+                 placement: Optional[cm.ExpertPlacement] = None):
         self.cfg = cfg
         self.hw = hw or cm.TPU_V5E
         self.affinity = affinity
         self.window = window
         self.config = config or PlannerConfig()
+        if placement is not None:
+            if not cfg.is_moe:
+                raise ValueError(
+                    f"ExpertPlacement supplied for the dense (non-MoE) "
+                    f"config {cfg.name!r} — there are no experts to shard")
+            placement.validate_experts(cfg.num_experts)
+        self.placement = placement
         self._stagger_tick = 0   # round-robin fairness across trialing rows
 
     # ------------------------------------------------------------------ #
@@ -182,13 +204,18 @@ class BatchSpecPlanner:
         return analyzer.accept_rate(self.config.accept_window)
 
     def plan(self, controllers: Dict[int, object], context_lens, *,
-             prefill_tokens: Optional[Dict[int, int]] = None) -> BatchPlan:
+             prefill_tokens: Optional[Dict[int, int]] = None,
+             shard_weights: Optional[Dict[int, object]] = None) -> BatchPlan:
         """Plan one step. `controllers` maps decode row -> its controller
         (asks are collected here: `next_k()`, or `hold()` for staggered
         TEST rows); `context_lens` is the full [B] row table's cache
         lengths; `prefill_tokens` maps prefill rows to their co-scheduled
         chunk sizes (they share the pass and its expert union, so the
-        water-filling prices them in)."""
+        water-filling prices them in); `shard_weights` maps rows to their
+        measured per-shard routing profiles ([n_shards] weights, e.g. the
+        engine's EMA of per-row per-shard activation telemetry) so the
+        sharded oracle can tell a hot-shard-bound grant from a cold one
+        (rows without a profile default to placement-proportional mass)."""
         cfgp = self.config
         b = len(context_lens)
         pre = {i: max(int(p), 0)
@@ -220,10 +247,15 @@ class BatchSpecPlanner:
             base_ns[i] = 1
         for i, p in pre.items():
             base_ns[i] = p
+        sw = None
+        if self.placement is not None and shard_weights:
+            sw = [shard_weights.get(i) for i in range(b)]
         oracle = cm.BatchCostOracle(
             self.cfg, self.hw, context_lens, affinity=self.affinity,
             window=self.window,
-            prefill_tokens=[pre.get(i, 0) for i in range(b)])
+            prefill_tokens=[pre.get(i, 0) for i in range(b)],
+            placement=self.placement, shard_weights=sw,
+            assume_balanced=not cfgp.shard_aware)
 
         # -- allocate ----------------------------------------------------
         # bypass: independent policy, or a single-span pass (B=1 — the

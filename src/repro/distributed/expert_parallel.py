@@ -36,12 +36,22 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models import moe as moe_mod
 
 
-def _local_pack(cfg, x_loc, idx, weights, n_data: int, c_src: int):
+def _local_pack(cfg, x_loc, idx, n_data: int, c_src: int):
     """Build the send buffer on one device.
 
-    x_loc: [T_loc, d]; idx/weights: [T_loc, k].
-    Returns send [n_data, e_loc, c_src, d], and bookkeeping to unpack:
-    (dst, e_loc_idx, slot, keep) per (token, choice)."""
+    x_loc: [T_loc, d]; idx: [T_loc, k] routed expert ids.
+    Returns (send, (dst, e_within, slot_c, keep)) where
+      send     [n_data, e_loc, c_src, d] — token inputs slotted by
+               (destination shard, local expert, arrival rank), spill
+               entries already dropped;
+      dst      [T_loc*k] destination shard of each (token, choice);
+      e_within [T_loc*k] expert index within its shard;
+      slot_c   [T_loc*k] capacity-clamped slot (== c_src for spilled);
+      keep     [T_loc*k] bool, False where the (token, choice) overflowed
+               its per-source quota and was dropped from the send buffer.
+    The combine path gathers with (dst, e_within, slot_c) and zeroes
+    dropped choices via `keep` — routing weights are applied there, not
+    here."""
     t_loc, d = x_loc.shape
     k = cfg.experts_per_token
     e_loc = cfg.num_experts // n_data
@@ -49,8 +59,7 @@ def _local_pack(cfg, x_loc, idx, weights, n_data: int, c_src: int):
     flat_e = idx.reshape(-1)                        # [T_loc*k]
     dst = flat_e // e_loc
     e_within = flat_e % e_loc
-    bucket = dst * e_loc + e_within                 # == flat_e (clarity)
-    onehot = jax.nn.one_hot(bucket, cfg.num_experts, dtype=jnp.int32)
+    onehot = jax.nn.one_hot(flat_e, cfg.num_experts, dtype=jnp.int32)
     slot = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1
     keep = slot < c_src
     slot_c = jnp.where(keep, slot, c_src)           # spill row
@@ -90,7 +99,7 @@ def make_expert_parallel_moe(cfg, mesh: Mesh, *, capacity_factor: float = 2.0):
 
         weights, idx, probs = moe_mod.route(cfg, p, x_loc)
         send, (dst, e_within, slot_c, keep) = _local_pack(
-            cfg, x_loc, idx, weights, n_data, c_src)
+            cfg, x_loc, idx, n_data, c_src)
 
         # one all-to-all each way over the data axis
         recv = jax.lax.all_to_all(send, data_ax, split_axis=0,
@@ -121,9 +130,13 @@ def make_expert_parallel_moe(cfg, mesh: Mesh, *, capacity_factor: float = 2.0):
         aux = {
             "lb_loss": jax.lax.pmean(
                 moe_mod.load_balance_loss(cfg, probs, idx), data_ax),
-            # per-shard telemetry (concatenated over data by out_specs)
+            # per-source-shard telemetry (concatenated over data by
+            # out_specs); the *global* routing decision is emitted too so
+            # batch-aware consumers (per-row attribution, per-expert-shard
+            # unions) see the same [T, k] ids the dense path reports
             "unique_experts": moe_mod.unique_expert_count(cfg, idx)[None],
             "dropped": jnp.sum(~keep)[None],
+            "expert_idx": idx,
         }
         return y, aux
 
@@ -143,6 +156,6 @@ def make_expert_parallel_moe(cfg, mesh: Mesh, *, capacity_factor: float = 2.0):
         in_specs=(p_specs, P(data_ax, None)),
         out_specs=(P(data_ax, None),
                    {"lb_loss": P(), "unique_experts": P(data_ax),
-                    "dropped": P(data_ax)}),
+                    "dropped": P(data_ax), "expert_idx": P(data_ax, None)}),
         check_rep=False)
     return apply

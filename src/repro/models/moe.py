@@ -90,6 +90,35 @@ def unique_expert_stats(cfg, idx_btk, token_mask=None):
     return union, per_row
 
 
+def shard_expert_stats(cfg, idx_btk, shard_of, token_mask=None):
+    """Per-EP-shard distinct-expert counts: the batch union restricted to
+    each shard's resident experts [S] and the per-row restriction [B,S] —
+    the gating-shard quantities the sharded cost model prices (the pass
+    completes only when the hottest shard has streamed its local activated
+    experts; see core/cost_model.ExpertPlacement).
+
+    idx_btk: [B,T,k] routed expert ids; shard_of: length-E static int
+    sequence mapping expert -> shard; token_mask: [B,T] bool marking real
+    tokens (None = all valid). Because every expert lives on exactly one
+    shard, the per-shard counts partition `unique_expert_stats`' union and
+    the per-row counts partition its per_row."""
+    b, t, k = idx_btk.shape
+    e = cfg.num_experts
+    s_n = int(max(shard_of)) + 1
+    member = jax.nn.one_hot(jnp.asarray(shard_of, jnp.int32), s_n,
+                            dtype=jnp.int32)                   # [E,S]
+    if token_mask is not None:
+        idx_btk = jnp.where(token_mask[:, :, None], idx_btk, e)
+    flat = idx_btk.reshape(b, t * k)
+    rows = jnp.arange(b)[:, None]
+    hits = jnp.zeros((b, e + 1), jnp.int32).at[rows, flat].add(1)
+    active = (hits[:, :e] > 0).astype(jnp.int32)               # [B,E]
+    per_row_shard = active @ member                            # [B,S]
+    union_active = (jnp.sum(hits[:, :e], axis=0) > 0).astype(jnp.int32)
+    per_shard = union_active @ member                          # [S]
+    return per_shard, per_row_shard
+
+
 CAPACITY_FACTORS = {"train": 1.25, "serve": 2.0}
 
 
@@ -136,8 +165,16 @@ def apply_moe(cfg, p, x2d, *, capacity_policy: str = "train"):
             if cfg.num_experts % n_data == 0 and t % n_data == 0:
                 y, aux = _ep_apply(cfg, mesh)(
                     {k: p[k] for k in p}, x2d)
+                # the gathered routing decision [T,k] feeds the same
+                # union/per-row/per-shard accounting as the dense path —
+                # summing the per-source-shard counts would double-count
+                # experts shared across token shards, so the union is
+                # recomputed from the global ids and the raw per-source
+                # counts stay visible under their own key
                 aux = dict(aux,
-                           unique_experts=jnp.sum(aux["unique_experts"]),
+                           unique_experts=unique_expert_count(
+                               cfg, aux["expert_idx"]),
+                           unique_experts_src=aux["unique_experts"],
                            dropped=jnp.sum(aux["dropped"]))
                 return y, aux
     k, e = cfg.experts_per_token, cfg.num_experts

@@ -347,18 +347,32 @@ def _attn_block(cfg, p, x, lc, ctx, kind):
             # batch-aware accounting: per-row counts always; the union
             # replaces the raw all-token count when a padding mask marks
             # ragged [1+K_i] spans (padding must not inflate the cost driver)
+            idx_btk = moe_aux["expert_idx"].reshape(b, t, -1)
             union, per_row = moe_mod.unique_expert_stats(
-                cfg, moe_aux["expert_idx"].reshape(b, t, -1),
-                ctx.get("token_mask"))
+                cfg, idx_btk, ctx.get("token_mask"))
             aux["unique_experts_row"] = per_row
             if ctx.get("token_mask") is not None:
                 aux["unique_experts"] = union
+            sid = ctx.get("ep_shard_ids")
+            if sid is not None:
+                # EP-shard accounting: the hottest shard's local activated
+                # experts gate a sharded pass (docs/expert_parallel.md)
+                per_shard, row_shard = moe_mod.shard_expert_stats(
+                    cfg, idx_btk, sid, ctx.get("token_mask"))
+                aux["unique_experts_shard"] = per_shard
+                aux["unique_experts_row_shard"] = row_shard
     else:
         x = x + L.apply_mlp(cfg, p["ffn"], h2)
         aux["lb_loss"] = jnp.zeros((), jnp.float32)
         aux["unique_experts"] = jnp.zeros((), jnp.int32)
         if mode == "decode":
             aux["unique_experts_row"] = jnp.zeros((x.shape[0],), jnp.int32)
+            sid = ctx.get("ep_shard_ids")
+            if sid is not None:
+                s_n = int(max(sid)) + 1
+                aux["unique_experts_shard"] = jnp.zeros((s_n,), jnp.int32)
+                aux["unique_experts_row_shard"] = jnp.zeros(
+                    (x.shape[0], s_n), jnp.int32)
     return x, new_lc, aux
 
 
@@ -533,7 +547,7 @@ def _run_pattern(cfg, params, x, cache, ctx):
 
 
 def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
-             window, enc_out, moe_exact, token_mask=None):
+             window, enc_out, moe_exact, token_mask=None, ep_shard_ids=None):
     x = _embed_inputs(cfg, params, tokens, embeds, seq_pos)
     n_inflight = x.shape[0] * x.shape[1]
     if not moe_exact:
@@ -551,7 +565,7 @@ def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
            "window": window, "enc_out": enc_out, "moe_policy": moe_policy,
            "cache_pos": None if cache is None else cache.get("pos"),
            "slots": None, "slots_bt": None, "offset": None, "t_w": 0,
-           "token_mask": token_mask}
+           "token_mask": token_mask, "ep_shard_ids": ep_shard_ids}
     if cache is not None and "pos" in cache:
         t = x.shape[1]
         r = cache["pos"].shape[1]
@@ -596,6 +610,11 @@ def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
         aux["unique_experts"] = ys["aux"]["unique_experts"]  # [L]
         if "unique_experts_row" in ys["aux"]:
             aux["unique_experts_row"] = ys["aux"]["unique_experts_row"]  # [L,B]
+        if "unique_experts_shard" in ys["aux"]:
+            aux["unique_experts_shard"] = \
+                ys["aux"]["unique_experts_shard"]            # [L,S]
+            aux["unique_experts_row_shard"] = \
+                ys["aux"]["unique_experts_row_shard"]        # [L,B,S]
     staged = ys.get("staged")
 
     new_cache = None
@@ -647,7 +666,8 @@ def prefill(cfg, params, tokens, cache, *, embeds=None, rope_pos=None,
 
 
 def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
-                window: int = 0, moe_exact: bool = True, token_mask=None):
+                window: int = 0, moe_exact: bool = True, token_mask=None,
+                ep_shard_ids=None):
     """Verify/decode T tokens per row. Single-request caches start every row
     at the scalar cache['length']; per-row caches (init_cache(per_row=True))
     start row b at cache['lengths'][b], which is how a continuous batch
@@ -655,6 +675,11 @@ def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
     `token_mask` [B,T] marks the real tokens of each span — padding tokens
     still flow through the network (their writes are rolled back) but are
     excluded from the expert-union accounting.
+    `ep_shard_ids` (static length-E tuple, expert -> EP shard; see
+    core/cost_model.ExpertPlacement) additionally emits per-shard and
+    per-row-per-shard distinct-expert counts (`unique_experts_shard` [L,S],
+    `unique_experts_row_shard` [L,B,S]) — the hottest-shard telemetry an
+    EP-sharded serving deployment prices its passes with.
     Returns (logits [B,T,V], new_cache, aux, staged)."""
     b, t = tokens.shape[:2] if tokens is not None else embeds.shape[:2]
     offs = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
@@ -670,7 +695,8 @@ def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
                                           seq_pos=seq_pos, rope_pos=rope_pos,
                                           window=window, enc_out=None,
                                           moe_exact=moe_exact,
-                                          token_mask=token_mask)
+                                          token_mask=token_mask,
+                                          ep_shard_ids=ep_shard_ids)
     return logits, cache, aux, staged
 
 

@@ -333,7 +333,16 @@ class BatchedEngine:
     draft allocations: "joint" (default) runs the `BatchSpecPlanner`'s
     marginal-utility water-filling over the shared pass (docs/planner.md);
     "independent" is the escape hatch where every grant equals its ask —
-    the pre-planner engine. At B=1 the two are bit-identical."""
+    the pre-planner engine. At B=1 the two are bit-identical.
+
+    `placement` (an `ExpertPlacement`, docs/expert_parallel.md) models an
+    EP-sharded deployment: the verification pass is priced max-over-shards
+    (the hottest shard's local activated experts gate it, plus the
+    all-to-all collective), the decode pass emits measured per-shard and
+    per-row-per-shard activation telemetry, and the planner steers grants
+    away from requests concentrating load on the gating shard via an EMA
+    of each row's shard profile. `placement=None` (default) and
+    n_shards=1 are the unsharded engine, bit for bit."""
 
     def __init__(self, cfg, params, drafter_factory: Callable = None, *,
                  max_batch: int = 8,
@@ -348,7 +357,8 @@ class BatchedEngine:
                  chunk: int = 0,
                  max_prefill_tokens_per_step: Optional[int] = None,
                  policy: Optional[str] = None,
-                 planner: Optional[BatchSpecPlanner] = None):
+                 planner: Optional[BatchSpecPlanner] = None,
+                 placement: Optional[cm.ExpertPlacement] = None):
         self.cfg = cfg
         self.params = params
         self.drafter_factory = drafter_factory or (lambda: NGramDrafter())
@@ -385,9 +395,40 @@ class BatchedEngine:
             raise ValueError(f"unknown planner policy {policy!r} "
                              "(expected 'joint' or 'independent')")
         self.policy = policy
+        if placement is not None:
+            if not cfg.is_moe:
+                raise ValueError(
+                    f"ExpertPlacement supplied for the dense (non-MoE) "
+                    f"config {cfg.name!r} — there are no experts to shard, "
+                    "so the run would silently measure an unsharded "
+                    "deployment")
+            placement.validate_experts(cfg.num_experts)
+        self.placement = placement
+        # like the policy check above, a supplied planner must agree with
+        # the engine on the deployment it prices: the engine measures the
+        # max-over-shards pass under `placement`, and a planner pricing a
+        # different (or no) sharding would silently re-introduce exactly
+        # the mispricing the placement exists to eliminate. The sanctioned
+        # naive comparator is PlannerConfig(shard_aware=False), which
+        # keeps the placement but spreads the union evenly.
+        if planner is not None and cfg.is_moe:
+            pp = getattr(planner, "placement", None)
+            ours = self.placement.shard_of if self.placement else None
+            theirs = pp.shard_of if pp is not None else None
+            if ours != theirs:
+                raise ValueError(
+                    f"engine placement {ours} contradicts the supplied "
+                    f"planner's placement {theirs}")
+        #: measured shard accounting is live only when >1 shard exists —
+        #: a 1-shard placement must be indistinguishable from None
+        self._ep = (self.placement is not None
+                    and self.placement.n_shards > 1)
+        #: per-row EMA of measured per-shard activation profiles, the
+        #: planner's steering signal (slot -> [S] weights)
+        self._shard_profiles: dict = {}
         self.planner = planner or BatchSpecPlanner(
             cfg, hw, affinity=affinity, window=window,
-            config=PlannerConfig(policy=policy))
+            config=PlannerConfig(policy=policy), placement=self.placement)
         #: engine clock: virtual seconds under clock="model" (cost-model
         #: priced steps + blocking prefills), wall seconds under "wall".
         #: Queue-delay and TTFT telemetry are measured on this clock.
@@ -400,9 +441,11 @@ class BatchedEngine:
         self._prefill = jax.jit(
             lambda p, t, c, e: T.prefill(cfg, p, t, c, window=window,
                                          enc_out=e))
+        sid = (tuple(self.placement.shard_of) if self._ep else None)
         self._decode = jax.jit(
             lambda p, c, t, m: T.decode_step(cfg, p, c, t, window=window,
-                                             token_mask=m))
+                                             token_mask=m,
+                                             ep_shard_ids=sid))
         self._step_idx = 0
         self._req_counter = 0
         self._joined_since_step = 0
@@ -443,6 +486,7 @@ class BatchedEngine:
         if not free:
             raise RuntimeError("no free slot — retire a request first")
         idx = free[0]
+        self._shard_profiles.pop(idx, None)  # fresh row, fresh profile
         controller = controller or self.controller_factory()
         drafter = self.drafter_factory()
         drafter.reset()
@@ -532,6 +576,7 @@ class BatchedEngine:
                            f"{self.max_batch})")
         self.cache = T.clear_cache_row(self.cache, idx)
         self.slots[idx] = None
+        self._shard_profiles.pop(idx, None)
         return GenerationResult(s.out[:s.max_new], s.tel)
 
     # -- the shared iteration ------------------------------------------- #
@@ -603,7 +648,10 @@ class BatchedEngine:
         plan = self.planner.plan(
             {i: slots[i].controller for i in decode_rows},
             [int(n) for n in lengths_before],
-            prefill_tokens=chunk_plan)
+            prefill_tokens=chunk_plan,
+            shard_weights=({i: self._shard_profiles[i] for i in decode_rows
+                            if i in self._shard_profiles}
+                           if self._ep else None))
         k_req, drafts, draft_probs, wall_draft = {}, {}, {}, {}
         for i in decode_rows:
             s = slots[i]
@@ -668,12 +716,23 @@ class BatchedEngine:
                                       jnp.asarray(lengths_before))
 
         # 6. batch-aware cost accounting + marginal attribution
-        union = per_row = None
+        union = per_row = shard_mean = row_shard = None
         if self.cfg.is_moe and "unique_experts" in aux:
+            # mean over *layers* of the masked per-layer union [L]. (The EP
+            # apply path used to land its per-source-shard counts on this
+            # key, and a bare np.mean folded them into a scalar that was
+            # neither the union nor the gating shard; the union is now
+            # recomputed from the gathered expert ids upstream, and the
+            # per-shard view arrives separately below.)
             union = float(np.mean(np.asarray(aux["unique_experts"])))
         if self.cfg.is_moe and "unique_experts_row" in aux:
             per_row = np.mean(np.asarray(aux["unique_experts_row"],
                                          np.float64), axis=0)   # [B]
+        if self._ep and "unique_experts_shard" in aux:
+            shard_mean = np.mean(np.asarray(aux["unique_experts_shard"],
+                                            np.float64), axis=0)   # [S]
+            row_shard = np.mean(np.asarray(aux["unique_experts_row_shard"],
+                                           np.float64), axis=0)    # [B,S]
         tokens_per_row = [int(mask[i].sum()) for i in range(b)]
         cost = cm.batch_iteration_time(
             self.cfg, self.hw, tokens_per_row, list(lengths_before),
@@ -682,9 +741,25 @@ class BatchedEngine:
                                 [per_row[i] if i in spans else 0.0
                                  for i in range(b)]),
             affinity=self.affinity, window=self.window,
-            prefill_tokens=[chunk_plan.get(i, 0) for i in range(b)])
+            prefill_tokens=[chunk_plan.get(i, 0) for i in range(b)],
+            placement=self.placement,
+            per_shard_unique=(None if shard_mean is None
+                              else list(shard_mean)))
         t_verify_shared = (wall_verify if self.clock == "wall"
                            else cost["t_iter"])
+
+        # EP steering signal: fold this pass's measured per-row shard
+        # profile into the EMA the next plan() steers with
+        if row_shard is not None:
+            for i in spans:
+                prof = row_shard[i]
+                tot = float(prof.sum())
+                if tot <= 0:
+                    continue
+                prof = prof / tot
+                old = self._shard_profiles.get(i)
+                self._shard_profiles[i] = (prof if old is None
+                                           else 0.5 * old + 0.5 * prof)
 
         # 7. feed back per request; advance token state
         emitted_by_slot = {}
@@ -772,7 +847,12 @@ class BatchedEngine:
             held_tests=plan.held,
             t_step_predicted=plan.t_predicted,
             t_base_predicted=plan.t_base,
-            tokens_predicted=plan.tokens_predicted)
+            tokens_predicted=plan.tokens_predicted,
+            shard_experts=tuple(cost.get("shard_unique", ())),
+            max_shard_experts=cost.get("max_shard_experts", 0.0),
+            hot_shard=cost.get("hot_shard", -1),
+            shard_imbalance=cost.get("imbalance", 1.0),
+            t_a2a=cost.get("t_a2a", 0.0))
         self.telemetry.steps.append(step_tel)
         self.now += step_tel.t_total
         for i in finished_prefill:  # first token exists as of end-of-step

@@ -190,7 +190,10 @@ class ContinuousBatchingScheduler:
         `_steps_start` so a reused engine's earlier runs don't leak in):
         grant ratio (granted/requested drafts — 1.0 under
         policy="independent" by construction), outright preemptions, TEST
-        trials postponed by phase staggering, and the planner's
-        predicted-vs-measured step-time calibration error."""
+        trials postponed by phase staggering, the planner's
+        predicted-vs-measured step-time calibration error, and — under an
+        EP placement (docs/expert_parallel.md) — the mean max/mean-shard
+        activation imbalance plus how persistently one shard gated the
+        pass (`hot_shard_frac`)."""
         return planner_aggregates(
             self.engine.telemetry.steps[self._steps_start:])

@@ -57,6 +57,12 @@ class StepTelemetry:
     t_step_predicted: float = 0.0  # planner's predicted pass seconds
     t_base_predicted: float = 0.0  # predicted no-speculation pass seconds
     tokens_predicted: float = 0.0  # planner's predicted decode emissions
+    # -- EP-shard fields (defaults = unsharded deployment) ---------------- #
+    shard_experts: tuple = ()  # per-shard activated experts (mean layers)
+    max_shard_experts: float = 0.0  # the gating shard's activated experts
+    hot_shard: int = -1        # id of the gating shard (-1 = unsharded)
+    shard_imbalance: float = 1.0   # max-shard / mean-shard occupancy
+    t_a2a: float = 0.0         # all-to-all seconds priced into t_step
 
     @property
     def t_total(self) -> float:
@@ -175,6 +181,18 @@ class EngineTelemetry:
         prior vs the model's actual routing)."""
         return planner_aggregates(self.steps)["plan_time_error"]
 
+    @property
+    def mean_shard_imbalance(self) -> float:
+        """Mean max-shard/mean-shard activated-expert ratio over sharded
+        steps (1.0 = perfectly balanced, or no EP placement)."""
+        return planner_aggregates(self.steps)["mean_shard_imbalance"]
+
+    @property
+    def hot_shard_frac(self) -> float:
+        """How persistently one shard gates: the modal hot shard's share
+        of sharded steps (0.0 when the deployment is unsharded)."""
+        return planner_aggregates(self.steps)["hot_shard_frac"]
+
 
 def planner_aggregates(steps) -> dict:
     """Batch-planner decision aggregates over a step-telemetry list — the
@@ -185,9 +203,19 @@ def planner_aggregates(steps) -> dict:
     gr = sum(s.k_granted for s in steps)
     errs = [abs(s.t_step_predicted - s.t_step) / s.t_step
             for s in steps if s.t_step > 0 and s.t_step_predicted]
+    sharded = [s for s in steps if s.hot_shard >= 0]
+    hot_frac = 0.0
+    if sharded:
+        counts: dict = {}
+        for s in sharded:
+            counts[s.hot_shard] = counts.get(s.hot_shard, 0) + 1
+        hot_frac = max(counts.values()) / len(sharded)
     return {
         "grant_ratio": gr / req if req else 1.0,
         "preemptions": sum(s.preempted for s in steps),
         "held_tests": sum(s.held_tests for s in steps),
         "plan_time_error": sum(errs) / len(errs) if errs else 0.0,
+        "mean_shard_imbalance": (sum(s.shard_imbalance for s in sharded)
+                                 / len(sharded) if sharded else 1.0),
+        "hot_shard_frac": hot_frac,
     }

@@ -84,6 +84,102 @@ def test_hlo_trip_aware_analyzer():
     assert r["flops"] == pytest.approx(6 * 2 * 128 ** 3, rel=0.01)
 
 
+_EP_PARITY_SCRIPT = r"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs import get_config
+from repro.distributed.expert_parallel import make_expert_parallel_moe
+from repro.models import moe as moe_mod
+from repro.models import transformer as T
+
+assert jax.device_count() == 4, jax.devices()
+cfg = get_config("mixtral-8x7b").reduced()          # 4 experts, top-2
+mesh = Mesh(np.array(jax.devices()).reshape(4, 1), ("data", "model"))
+
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+p = jax.tree.map(lambda x: x[0], params["blocks"]["moe"])   # layer 0
+t, d = 32, cfg.d_model
+x2d = jax.random.normal(jax.random.PRNGKey(7), (t, d), jnp.float32)
+
+# reference: the dense scatter/gather path at exact capacity (no drops)
+y_ref, aux_ref = moe_mod.apply_moe(cfg, p, x2d, capacity_policy="exact")
+assert int(aux_ref["dropped"]) == 0
+
+# EP path at the default capacity factor: c_src = T_loc*k*cf // E + 1 = 9
+# >= T_loc = 8, so no (source, expert) bucket can overflow -> exact parity
+apply_ep = make_expert_parallel_moe(cfg, mesh, capacity_factor=2.0)
+y_ep, aux_ep = apply_ep(p, x2d)
+np.testing.assert_array_equal(np.asarray(aux_ep["expert_idx"]),
+                              np.asarray(aux_ref["expert_idx"]))
+assert int(np.sum(np.asarray(aux_ep["dropped"]))) == 0
+np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref),
+                           atol=3e-5, rtol=1e-5)
+# lb_loss is pmean-of-local-losses under EP (each device balances its own
+# token shard) — an intentional approximation of the full-batch loss
+np.testing.assert_allclose(float(aux_ep["lb_loss"]),
+                           float(aux_ref["lb_loss"]), rtol=0.05)
+# per-source-shard activated counts match the routing decision
+idx = np.asarray(aux_ref["expert_idx"])             # [T, k]
+src_counts = [len(np.unique(idx[s * 8:(s + 1) * 8])) for s in range(4)]
+np.testing.assert_array_equal(np.asarray(aux_ep["unique_experts"]),
+                              src_counts)
+
+# the apply_moe wrapper (opt "ep-a2a" + context mesh): the union must be
+# the dense path's distinct count, NOT the sum of per-source counts, and
+# the raw per-source view stays visible under its own key
+from repro.distributed import sharding as sh
+sh.set_options(["ep-a2a"], mesh)
+try:
+    y_wrap, aux_wrap = moe_mod.apply_moe(cfg, p, x2d,
+                                         capacity_policy="serve")
+finally:
+    sh.set_options([], None)
+np.testing.assert_allclose(np.asarray(y_wrap), np.asarray(y_ep),
+                           atol=3e-5, rtol=1e-5)
+assert int(aux_wrap["unique_experts"]) == int(aux_ref["unique_experts"])
+np.testing.assert_array_equal(np.asarray(aux_wrap["unique_experts_src"]),
+                              src_counts)
+assert int(aux_wrap["dropped"]) == 0
+
+# forced-drop case: c_src = 1 -> every (source shard, expert) bucket keeps
+# one (token, choice); the dropped counter must account for the overflow
+# exactly, computed independently from the routing decision
+apply_tiny = make_expert_parallel_moe(cfg, mesh, capacity_factor=1e-6)
+y_tiny, aux_tiny = apply_tiny(p, x2d)
+expected_drops = 0
+for s in range(4):
+    vals, counts = np.unique(idx[s * 8:(s + 1) * 8], return_counts=True)
+    expected_drops += int(np.sum(np.maximum(counts - 1, 0)))
+assert expected_drops > 0
+assert int(np.sum(np.asarray(aux_tiny["dropped"]))) == expected_drops
+assert np.all(np.isfinite(np.asarray(y_tiny)))
+print("EP-PARITY-OK")
+"""
+
+
+def test_expert_parallel_apply_matches_dense_moe(tmp_path):
+    """EP numerics parity end-to-end: `make_expert_parallel_moe` on a
+    forced 4-device CPU mesh against the dense `moe.apply_moe` scatter
+    path — exact routing agreement, allclose outputs when no bucket can
+    overflow, and exact dropped-token accounting when one can. Runs in a
+    subprocess because the XLA host-device-count flag must precede jax
+    initialisation."""
+    script = tmp_path / "ep_parity.py"
+    script.write_text(_EP_PARITY_SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    out = subprocess.run(
+        [sys.executable, str(script)], env=env, capture_output=True,
+        text=True, timeout=560,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert "EP-PARITY-OK" in out.stdout, out.stdout + out.stderr
+
+
 @pytest.mark.slow
 def test_dryrun_subprocess_production_mesh(tmp_path):
     """Real 16x16-mesh lower+compile for one (arch, shape) in a fresh

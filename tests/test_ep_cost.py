@@ -1,0 +1,399 @@
+"""EP-shard-aware cost accounting and planning: the `ExpertPlacement`
+contract, the sharded union model's invariants (per-shard counts partition
+the union, the gating shard never exceeds the global curve, skew
+concentrates it monotonically), float-exact degradation to the unsharded
+stack at n_shards=1 (statistics, oracle pricing, and the whole
+`BatchedEngine` — token streams and telemetry), and the planner's
+hot-shard steering. Property-based tests use hypothesis (or the in-repo
+fallback, tests/_hypothesis_compat.py)."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic in-repo fallback (requirements-dev.txt)
+    from tests._hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core import (BatchCostOracle, BatchSpecPlanner, CascadeController,
+                        ExpertPlacement, Hardware, PlannerConfig, TPU_V5E,
+                        batch_iteration_time, expected_unique_experts,
+                        expected_unique_experts_batch,
+                        expected_unique_experts_sharded, greedy_allocate)
+
+CFG = get_config("mixtral-8x7b").reduced()          # 4 experts, top-2
+HWS = [TPU_V5E,
+       Hardware("slowmem", hbm_bw=1e9, peak_flops=197e12),
+       Hardware("slowflops", hbm_bw=819e9, peak_flops=2e9),
+       Hardware("crossover", hbm_bw=1e9, peak_flops=6e9, ici_bw=5e8)]
+
+
+def _placement(e, s, kind):
+    return (ExpertPlacement.contiguous(e, s) if kind == "contiguous"
+            else ExpertPlacement.zipf(e, s, alpha=2.0))
+
+
+# ===================================================================== #
+# ExpertPlacement contract
+# ===================================================================== #
+
+def test_placement_constructors_and_validation():
+    pl = ExpertPlacement.contiguous(8, 4)
+    # matches distributed/expert_parallel.py's layout: e // (E / S)
+    assert pl.shard_of == tuple(e // 2 for e in range(8))
+    assert pl.counts == (2, 2, 2, 2) and pl.n_shards == 4
+
+    pz = ExpertPlacement.zipf(8, 4, alpha=2.0)
+    assert sum(pz.counts) == 8 and min(pz.counts) >= 1
+    assert pz.counts == tuple(sorted(pz.counts, reverse=True))
+    assert pz.counts[0] > pz.counts[-1]            # actually skewed
+
+    assert ExpertPlacement.from_sizes([3, 1]).shard_of == (0, 0, 0, 1)
+    with pytest.raises(ValueError):
+        ExpertPlacement.contiguous(8, 3)           # not divisible
+    with pytest.raises(ValueError):
+        ExpertPlacement((0, 2))                    # shard 1 empty
+    with pytest.raises(ValueError):
+        ExpertPlacement.from_sizes([2, 0])
+    with pytest.raises(ValueError):
+        ExpertPlacement.zipf(4, 8)
+
+
+def test_zipf_every_shard_nonempty_across_grid():
+    for e in (4, 8, 16, 64):
+        for s in (1, 2, 4):
+            for a in (0.5, 1.0, 2.0, 4.0):
+                pl = ExpertPlacement.zipf(e, s, alpha=a)
+                assert sum(pl.counts) == e and min(pl.counts) >= 1
+
+
+# ===================================================================== #
+# Sharded union model invariants
+# ===================================================================== #
+
+@settings(max_examples=80, deadline=None)
+@given(ns=st.lists(st.integers(0, 9), min_size=1, max_size=6),
+       aff=st.floats(0.0, 1.0), seed=st.integers(0, 10 ** 6))
+def test_sharded_n1_equals_batch_union_float_exactly(ns, aff, seed):
+    """The pricing contract's degradation clause: at one shard (or no
+    placement) the sharded statistics ARE `expected_unique_experts_batch`,
+    bit for bit — no parallel re-derivation allowed to drift."""
+    rng = np.random.default_rng(seed)
+    e = int(rng.integers(2, 64))
+    k = int(rng.integers(1, min(e, 8) + 1))
+    ref = expected_unique_experts_batch(e, k, ns, aff)["union"]
+    for pl in (None, ExpertPlacement.contiguous(e, 1)):
+        sh = expected_unique_experts_sharded(e, k, ns, pl, aff)
+        assert sh["union"] == ref
+        assert sh["per_shard"] == [ref]
+        assert sh["max_shard"] == ref and sh["hot_shard"] == 0
+
+
+@settings(max_examples=80, deadline=None)
+@given(ns=st.lists(st.integers(0, 9), min_size=1, max_size=6),
+       aff=st.floats(0.0, 1.0), seed=st.integers(0, 10 ** 6))
+def test_sharded_partition_and_gating_bounds(ns, aff, seed):
+    """Every expert lives on exactly one shard, so the per-shard expected
+    counts partition the model's union (sum >= union up to float error; at
+    uniform routing the sum IS the global curve), and the gating shard can
+    never exceed the global union (fewer bins hold fewer distinct
+    experts)."""
+    rng = np.random.default_rng(seed)
+    s = int(rng.integers(2, 5))
+    e = s * int(rng.integers(1, 9))
+    k = int(rng.integers(1, min(e, 8) + 1))
+    pl = _placement(e, s, str(rng.choice(["contiguous", "zipf"])))
+    glob = expected_unique_experts(e, k, max(sum(ns), 1), aff)
+
+    # uniform routing: shards partition the global curve exactly
+    sh = expected_unique_experts_sharded(e, k, ns, pl, aff)
+    assert sum(sh["per_shard"]) >= sh["union"] - 1e-9
+    if sum(ns) > 0:
+        assert sh["union"] == pytest.approx(glob, rel=1e-9)
+    assert sh["max_shard"] <= glob + 1e-9
+    assert sh["max_shard"] == max(sh["per_shard"])
+
+    # skewed per-request profiles: the union concentrates — the sum stays
+    # the (skew-consistent) union and the gating shard still never beats
+    # the uniform global curve
+    b = len(ns)
+    w = rng.dirichlet(np.ones(s) * 0.5, size=b)
+    shw = expected_unique_experts_sharded(e, k, ns, pl, aff,
+                                          shard_weights=w.tolist())
+    assert sum(shw["per_shard"]) >= shw["union"] - 1e-9
+    assert shw["max_shard"] <= glob + 1e-9
+    for u, cap in zip(shw["per_shard"], pl.counts):
+        assert -1e-12 <= u <= cap + 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(t=st.integers(1, 40), aff=st.floats(0.0, 0.9),
+       seed=st.integers(0, 10 ** 6))
+def test_max_shard_monotone_in_skew(t, aff, seed):
+    """Concentrating one routing profile onto the hot shard can only raise
+    the gating shard's expected count: max_shard is nondecreasing in the
+    skew exponent."""
+    rng = np.random.default_rng(seed)
+    s = int(rng.integers(2, 5))
+    e = s * int(rng.integers(1, 5))
+    k = int(rng.integers(1, min(e, 4) + 1))
+    pl = ExpertPlacement.contiguous(e, s)
+    prev = -1.0
+    for alpha in (0.0, 0.5, 1.0, 2.0, 4.0, 8.0):
+        w = np.array([1.0 / (i + 1) ** alpha for i in range(s)])
+        w = (w / w.sum()).tolist()
+        sh = expected_unique_experts_sharded(e, k, [t], pl, aff,
+                                             shard_weights=[w])
+        assert sh["per_shard"][0] >= prev - 1e-9
+        prev = sh["per_shard"][0]
+        assert sh["hot_shard"] == 0
+
+
+# ===================================================================== #
+# Sharded pricing: oracle == batch_iteration_time, degradation, structure
+# ===================================================================== #
+
+@settings(max_examples=60, deadline=None)
+@given(b=st.integers(1, 6), seed=st.integers(0, 10 ** 6),
+       aff=st.floats(0.0, 1.0))
+def test_sharded_oracle_matches_batch_iteration_time_exactly(b, seed, aff):
+    """The planner prices candidate allocations through the oracle; the
+    engine prices the realized pass through `batch_iteration_time`. Under
+    a placement (shard-aware AND the balanced comparator) the two must
+    still agree to the float."""
+    rng = np.random.default_rng(seed)
+    ns = [int(rng.integers(0, 9)) for _ in range(b)]
+    cls = [int(rng.integers(1, 400)) for _ in range(b)]
+    ps = [int(rng.integers(0, 16)) for _ in range(b)]
+    hw = HWS[seed % len(HWS)]
+    import dataclasses
+    s = int(rng.integers(1, 5))
+    pl = _placement(4 * s, s, str(rng.choice(["contiguous", "zipf"])))
+    cfg = dataclasses.replace(CFG, num_experts=pl.num_experts)
+    sw = [rng.dirichlet(np.ones(s)).tolist() if rng.integers(2) else None
+          for _ in range(b)]
+    bal = bool(rng.integers(2))
+    oracle = BatchCostOracle(cfg, hw, cls, affinity=aff, prefill_tokens=ps,
+                             placement=pl, shard_weights=sw,
+                             assume_balanced=bal)
+    ref = batch_iteration_time(cfg, hw, ns, cls, affinity=aff,
+                               prefill_tokens=ps, placement=pl,
+                               shard_weights=sw, assume_balanced=bal)
+    assert oracle.t_batch(ns) == ref["t_iter"]
+
+
+def test_sharded_pricing_degrades_exactly_at_one_shard():
+    """placement=None, a 1-shard placement, and PR 3's unsharded call must
+    all price identically — keys included (no shard keys leak into the
+    unsharded result)."""
+    pl1 = ExpertPlacement.contiguous(CFG.num_experts, 1)
+    a = batch_iteration_time(CFG, TPU_V5E, [3, 2], [100, 50], affinity=0.3)
+    b = batch_iteration_time(CFG, TPU_V5E, [3, 2], [100, 50], affinity=0.3,
+                             placement=pl1)
+    assert a == b
+    assert "shard_unique" not in a and "t_a2a" not in a
+
+
+def test_sharded_result_structure_and_attribution():
+    import dataclasses
+    cfg = dataclasses.replace(CFG, num_experts=8)
+    pl = ExpertPlacement.zipf(8, 4, alpha=2.0)
+    hw = HWS[3]
+    r = batch_iteration_time(cfg, hw, [3, 2, 4], [100, 50, 200],
+                             affinity=0.2, placement=pl)
+    assert r["n_shards"] == 4 and len(r["shard_unique"]) == 4
+    assert r["max_shard_experts"] == max(r["shard_unique"])
+    assert r["hot_shard"] == int(np.argmax(r["shard_unique"]))
+    assert r["imbalance"] >= 1.0 - 1e-12
+    assert r["t_a2a"] > 0.0
+    # attribution still sums to the pass (a2a + overhead split evenly)
+    assert sum(p["t_attr"] for p in r["per_request"]) == pytest.approx(
+        r["t_iter"], rel=1e-12)
+    # the hottest shard gates: pricing with the max equals pricing the
+    # same pass with every shard's count raised to the max
+    gate = r["max_shard_experts"]
+    r2 = batch_iteration_time(cfg, hw, [3, 2, 4], [100, 50, 200],
+                              affinity=0.2, placement=pl,
+                              per_shard_unique=[gate] * 4)
+    assert r2["t_iter"] == r["t_iter"]
+
+
+def test_measured_per_shard_counts_override_analytic():
+    import dataclasses
+    cfg = dataclasses.replace(CFG, num_experts=8)
+    pl = ExpertPlacement.contiguous(8, 2)
+    hw = HWS[1]
+    lo = batch_iteration_time(cfg, hw, [4], [100], placement=pl,
+                              per_shard_unique=[1.0, 1.0])
+    hi = batch_iteration_time(cfg, hw, [4], [100], placement=pl,
+                              per_shard_unique=[4.0, 1.0])
+    assert hi["t_iter"] > lo["t_iter"]
+    assert hi["hot_shard"] == 0 and hi["imbalance"] == pytest.approx(1.6)
+    with pytest.raises(ValueError):
+        batch_iteration_time(cfg, hw, [4], [100], placement=pl,
+                             per_shard_unique=[1.0, 1.0, 1.0])
+
+
+def test_balanced_comparator_underprices_skewed_pass():
+    """The --ep-sweep's motivating inequality: with a skewed placement the
+    global-union (balanced) model prices the pass below the max-over-shards
+    truth — the under-pricing that grants speculation a sharded deployment
+    cannot afford."""
+    import dataclasses
+    cfg = dataclasses.replace(CFG, num_experts=8)
+    pl = ExpertPlacement.zipf(8, 4, alpha=2.0)
+    hw = Hardware("mem", hbm_bw=1e9, peak_flops=1e14, ici_bw=5e8)
+    aware = batch_iteration_time(cfg, hw, [4, 4], [100, 100], placement=pl)
+    bal = batch_iteration_time(cfg, hw, [4, 4], [100, 100], placement=pl,
+                               assume_balanced=True)
+    assert bal["t_iter"] < aware["t_iter"]
+
+
+# ===================================================================== #
+# Planner steering
+# ===================================================================== #
+
+def test_water_filling_steers_away_from_hot_shard():
+    """Two identical requests, one routing onto the gating shard, one
+    spreading over cold shards: the hot-profiled request's grants can
+    never exceed the cold one's, and in a regime where the hot shard's
+    delta breaks the water level the cold request keeps speculating."""
+    import dataclasses
+    cfg = dataclasses.replace(CFG, num_experts=16)
+    pl = ExpertPlacement.contiguous(16, 4)
+    hw = Hardware("mem", hbm_bw=1e9, peak_flops=1e14, ici_bw=5e8)
+    hot = [1.0, 0.0, 0.0, 0.0]
+    cold = [0.0, 1 / 3, 1 / 3, 1 / 3]
+    oracle = BatchCostOracle(cfg, hw, [1024, 1024], placement=pl,
+                             shard_weights=[hot, cold])
+    accepts = {0: 0.4, 1: 0.4}
+    caps = {0: 6, 1: 6}
+    alloc, _ = greedy_allocate(oracle, [1, 1], [0, 1], caps, accepts)
+    assert alloc[1] > alloc[0], alloc
+    # sanity: with identical profiles the tie breaks symmetrically enough
+    # that neither row dominates by more than one grant
+    o2 = BatchCostOracle(cfg, hw, [1024, 1024], placement=pl,
+                         shard_weights=[cold, cold])
+    a2, _ = greedy_allocate(o2, [1, 1], [0, 1], caps, accepts)
+    assert abs(a2[0] - a2[1]) <= 1
+
+
+def test_planner_plan_accepts_shard_profiles():
+    import dataclasses
+    cfg = dataclasses.replace(CFG, num_experts=8)
+    pl = ExpertPlacement.contiguous(8, 4)
+    planner = BatchSpecPlanner(cfg, HWS[3], placement=pl)
+    ctls = {i: CascadeController() for i in range(2)}
+    plan = planner.plan(ctls, [64, 64],
+                        shard_weights={0: [1.0, 0.0, 0.0, 0.0]})
+    assert plan.t_base > 0
+    with pytest.raises(ValueError):
+        BatchSpecPlanner(CFG, placement=ExpertPlacement.contiguous(8, 4))
+
+
+def test_placement_model_mismatch_rejected_everywhere():
+    """The pricing contract's one consistency check applies at every entry
+    point — including the 1-shard placement (the degradation clause must
+    not skip validation)."""
+    wrong1 = ExpertPlacement.contiguous(8, 1)      # CFG has 4 experts
+    with pytest.raises(ValueError):
+        expected_unique_experts_sharded(CFG.num_experts, 2, [3], wrong1)
+    with pytest.raises(ValueError):
+        BatchSpecPlanner(CFG, placement=wrong1)
+    with pytest.raises(ValueError):
+        BatchCostOracle(CFG, TPU_V5E, [64], placement=wrong1)
+    # a placement on a dense config is a loud error, not a silent no-op
+    dense = get_config("stablelm-1.6b").reduced()
+    with pytest.raises(ValueError):
+        BatchSpecPlanner(dense, placement=ExpertPlacement.contiguous(8, 4))
+
+
+def test_engine_rejects_planner_placement_mismatch(tiny_moe):
+    """Like the PR 3 policy check: a supplied planner pricing a different
+    deployment than the engine measures must raise, not silently
+    re-introduce the global-union mispricing."""
+    from repro.serving import BatchedEngine, NGramDrafter
+    cfg, params = tiny_moe
+    pl = ExpertPlacement.contiguous(cfg.num_experts, 2)
+    naked = BatchSpecPlanner(cfg)                  # placement-free planner
+    with pytest.raises(ValueError):
+        BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=1,
+                      max_len=128, placement=pl, planner=naked)
+    with pytest.raises(ValueError):
+        BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=1,
+                      max_len=128, planner=BatchSpecPlanner(
+                          cfg, placement=pl))
+    # agreeing placements pass — including the balanced comparator
+    eng = BatchedEngine(
+        cfg, params, lambda: NGramDrafter(), max_batch=1, max_len=128,
+        placement=pl,
+        planner=BatchSpecPlanner(
+            cfg, config=PlannerConfig(shard_aware=False), placement=pl))
+    assert eng.placement is pl
+
+
+# ===================================================================== #
+# Engine: n_shards=1 placement is PR 3, bit for bit; sharded telemetry
+# ===================================================================== #
+
+def _run_sched(cfg, params, placement, temperature, n_req=4, max_batch=3):
+    from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
+                               NGramDrafter, Request)
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                        max_batch=max_batch, max_len=256,
+                        temperature=temperature, clock="model", seed=0,
+                        placement=placement)
+    sched = ContinuousBatchingScheduler(
+        eng, controller_factory=lambda: CascadeController())
+    reqs = [Request(request_id=f"r{i}", prompt=[3 + i, 4 + i, 5 + i] * 6,
+                    max_new=10 + 2 * i) for i in range(n_req)]
+    res = sched.run(reqs)
+    return res, eng
+
+
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_engine_one_shard_placement_identical_to_none(tiny_moe,
+                                                      temperature):
+    """The acceptance property: a 1-shard ExpertPlacement must leave the
+    BatchedEngine's token streams AND telemetry identical to PR 3's
+    placement-free engine — every PR 3 step/iteration field, and the new
+    shard fields at their unsharded defaults."""
+    cfg, params = tiny_moe
+    pl1 = ExpertPlacement.contiguous(cfg.num_experts, 1)
+    r_none, e_none = _run_sched(cfg, params, None, temperature)
+    r_one, e_one = _run_sched(cfg, params, pl1, temperature)
+    assert [r.tokens for r in r_none] == [r.tokens for r in r_one]
+    assert len(e_none.telemetry.steps) == len(e_one.telemetry.steps)
+    for a, b in zip(e_none.telemetry.steps, e_one.telemetry.steps):
+        assert a == b          # dataclass equality: every field, new ones too
+    for ra, rb in zip(r_none, r_one):
+        assert ra.telemetry.iterations == rb.telemetry.iterations
+        assert ra.telemetry.ttft == rb.telemetry.ttft
+
+
+def test_engine_sharded_telemetry_consistent(tiny_moe):
+    """Sharded steps surface union AND gating shard separately (the
+    engine.py np.mean fold fix): per-shard counts partition the union,
+    max_shard is their max, imbalance = max/mean, and the planner stats
+    aggregate them."""
+    cfg, params = tiny_moe
+    pl = ExpertPlacement.contiguous(cfg.num_experts, 2)
+    res, eng = _run_sched(cfg, params, pl, 0.0)
+    steps = eng.telemetry.steps
+    assert steps and all(s.hot_shard >= 0 for s in steps)
+    for s in steps:
+        assert len(s.shard_experts) == 2
+        assert s.max_shard_experts == pytest.approx(max(s.shard_experts))
+        assert sum(s.shard_experts) == pytest.approx(s.union_experts)
+        mean = sum(s.shard_experts) / 2
+        if mean > 0:
+            assert s.shard_imbalance == pytest.approx(
+                s.max_shard_experts / mean)
+        assert s.t_a2a > 0.0
+    stats = eng.telemetry
+    assert stats.mean_shard_imbalance >= 1.0
+    assert 0.0 < stats.hot_shard_frac <= 1.0
+    # greedy decoding stays lossless under sharded pricing
+    r_none, _ = _run_sched(cfg, params, None, 0.0)
+    assert [r.tokens for r in res] == [r.tokens for r in r_none]
