@@ -249,6 +249,192 @@ def planner_sweep(fast: bool = False, batches=(1, 2, 4, 8)):
 
 
 # --------------------------------------------------------------------- #
+# SLO sweep (model clock): mixed-tier traffic under TPOT bounds
+# --------------------------------------------------------------------- #
+
+def _slo_requests(cfg, n_requests: int, max_new: int, bound,
+                  neutral: bool = False):
+    """The planner-sweep workload with SLOs attached. `neutral`: every
+    request carries an *unbounded throughput-tier* RequestSLO — the
+    constraint pipeline fully engaged but provably inert (the no-SLO
+    drift gate's subject). Otherwise odd requests are latency-tier
+    carrying `bound` (None = unbounded latency marker: tier weighting
+    active, victim protection not), even requests plain throughput."""
+    from repro.core import RequestSLO
+    reqs = _sweep_requests(cfg, n_requests, max_new)
+    for i, r in enumerate(reqs):
+        if neutral:
+            r.slo = RequestSLO()
+        elif i % 2 == 1:
+            r.slo = RequestSLO.latency(tpot=bound)
+    return reqs
+
+
+def slo_sweep(fast: bool = False, batches=(4, 8)):
+    """Mixed-tier SLO sweep on the planner-sweep crossover regime
+    (docs/slo.md). Per batch size, four runs over the same workload/seed:
+
+      * zero   — speculation disabled (StaticK 0): measures the latency
+        rows' no-speculation experienced TPOT, the feasibility floor the
+        bound is calibrated from;
+      * free   — the unconstrained joint planner, no SLO anywhere (the
+        PR-4 path the no-SLO drift gate pins);
+      * unbounded — every request carries an *unbounded* RequestSLO: the
+        constraint pipeline engaged but inert;
+      * mixed  — latency rows bounded at the calibrated TPOT
+        (between the zero floor and what `free` inflicted on them).
+
+    Gates (committed artifact + CI smoke):
+      * no-SLO drift: `unbounded` tokens/s == `free` EXACTLY, per B (the
+        pipeline must be invisible without bounds);
+      * at B=max: every latency-tier request meets its bound (p95 and max
+        reported), with the planner actually denying grants
+        (slo_denied > 0 — the gate must not pass vacuously);
+      * at B=max: throughput-tier tokens/s in `mixed` >= 0.95x the same
+        rows' tokens/s under the unconstrained planner — victim
+        protection must not collapse batch throughput."""
+    from repro.core import StaticKController
+    cfg = get_config("mixtral-8x7b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    hw = _planner_hw()
+    if fast:
+        batches = tuple(b for b in batches if b == max(batches))
+    n_requests = max(batches)
+    max_new = 16 if fast else 32
+
+    def run(b, bound, zero=False, neutral=False):
+        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=b, max_len=512, temperature=0.0,
+                            clock="model", seed=0, hw=hw)
+        fac = ((lambda: StaticKController(0)) if zero
+               else (lambda: CascadeController()))
+        sched = ContinuousBatchingScheduler(eng, controller_factory=fac)
+        res = sched.run(_slo_requests(cfg, n_requests, max_new, bound,
+                                      neutral=neutral))
+        t_steps = sum(s.t_total for s in eng.telemetry.steps)
+        tiers = {"latency": [], "throughput": []}
+        for r in res:
+            tiers[r.telemetry.tier].append(r.telemetry)
+        out = {"tokens_per_s": sched.tokens_per_second(),
+               "t_steps": t_steps, "stats": sched.planner_stats(),
+               "tier_stats": sched.tier_stats(),
+               "violations": sched.slo_violations()}
+        for tier, tels in tiers.items():
+            toks = sum(t.output_tokens for t in tels)
+            out[f"{tier}_tokens_per_s"] = (toks / t_steps if t_steps
+                                           else 0.0)
+            tpots = [t.experienced_tpot for t in tels if t.output_tokens]
+            out[f"{tier}_max_tpot"] = max(tpots) if tpots else 0.0
+        return out
+
+    rows = []
+    drift_max = 0.0
+    gates = {}
+    for b in batches:
+        zero = run(b, None, zero=True)
+        # `free` carries UNBOUNDED latency markers: tier weighting active,
+        # victim protection not — the reference `mixed` differs from only
+        # in the bound. The no-SLO drift gate instead compares the bare
+        # run (no SLO objects anywhere — the PR-4 construction) against
+        # `neutral` (unbounded throughput-tier SLOs on every request: the
+        # pipeline engaged but provably inert) — exactly 0 or the
+        # refactor leaks into unbounded traffic.
+        free = run(b, None)
+        neutral = run(b, None, neutral=True)
+        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=b, max_len=512, temperature=0.0,
+                            clock="model", seed=0, hw=hw)
+        sched = ContinuousBatchingScheduler(
+            eng, controller_factory=lambda: CascadeController())
+        bare_res = sched.run(_sweep_requests(cfg, n_requests, max_new))
+        bare_tps = sched.tokens_per_second()
+        drift = abs(neutral["tokens_per_s"] - bare_tps)
+        drift_max = max(drift_max, drift)
+        # the retention gate's denominator: the SAME (even-parity) rows'
+        # tokens/s under the TRULY unconstrained planner — no SLO objects
+        # anywhere, so no tier weighting either (`free` is tier-weighted
+        # even unbounded, which would flatter the ratio)
+        bare_t_steps = sum(s.t_total for s in eng.telemetry.steps)
+        bare_thr_tps = (sum(r.telemetry.output_tokens
+                            for i, r in enumerate(bare_res) if i % 2 == 0)
+                        / bare_t_steps if bare_t_steps else 0.0)
+
+        # calibrate the bound: between the zero-spec floor and what the
+        # free-running planner inflicted on the latency rows, but never
+        # tighter than 2% above the floor — the planner denies on its
+        # *predicted* pass time, and a band narrower than the analytic
+        # union's prediction error would demand clairvoyance, not control
+        floor = zero["latency_max_tpot"]
+        worst = free["latency_max_tpot"]
+        bound = max(0.5 * (floor + worst), 1.02 * floor)
+        mixed = run(b, bound)
+        row = {
+            "B": b, "bound": bound,
+            "zero_latency_tpot": floor,
+            "free_latency_tpot": worst,
+            "mixed_latency_tpot": mixed["latency_max_tpot"],
+            "mixed_latency_p95": mixed["tier_stats"]
+            .get("latency", {}).get("p95_tpot", 0.0),
+            "free_tokens_per_s": free["tokens_per_s"],
+            "bare_tokens_per_s": bare_tps,
+            "mixed_tokens_per_s": mixed["tokens_per_s"],
+            "free_throughput_tokens_per_s": free["throughput_tokens_per_s"],
+            "bare_throughput_tokens_per_s": bare_thr_tps,
+            "mixed_throughput_tokens_per_s":
+                mixed["throughput_tokens_per_s"],
+            "slo_denied": mixed["stats"]["slo_denied"],
+            "violations": mixed["violations"],
+            "no_slo_drift": drift,
+        }
+        rows.append(row)
+        emit(f"serving_micro/slo_B{b}_mixed_latency_tpot",
+             row["mixed_latency_tpot"],
+             f"bound={bound:.5f};denied={row['slo_denied']}")
+        emit(f"serving_micro/slo_B{b}_throughput_retention",
+             (row["mixed_throughput_tokens_per_s"] / bare_thr_tps
+              if bare_thr_tps else 0.0),
+             "mixed/bare-unconstrained")
+        if b == max(batches):
+            gates = row
+
+    deep = max(batches)
+    retention = (gates["mixed_throughput_tokens_per_s"]
+                 / gates["bare_throughput_tokens_per_s"]
+                 if gates["bare_throughput_tokens_per_s"] else 0.0)
+    emit("serving_micro/slo_no_slo_drift", drift_max, "must-be-exactly-0")
+    emit(f"serving_micro/slo_B{deep}_latency_bound_met",
+         float(gates["violations"] == 0), "must-be-1")
+    emit(f"serving_micro/slo_B{deep}_throughput_retention", retention,
+         "must-be>=0.95")
+    save_json("serving_micro_slo_sweep",
+              {"hw": {"name": hw.name, "hbm_bw": hw.hbm_bw,
+                      "peak_flops": hw.peak_flops},
+               "max_new": max_new, "rows": rows, "deep_B": deep,
+               "no_slo_drift": drift_max,
+               "throughput_retention": retention})
+    if drift_max != 0.0:
+        raise SystemExit(
+            f"no-SLO tokens/s drifted {drift_max!r} from the bare planner "
+            "path (must be exactly 0: the constraint pipeline must be "
+            "invisible without bounds)")
+    for row in rows:
+        if row["violations"] != 0:
+            raise SystemExit(
+                f"latency-tier TPOT bound violated at B={row['B']}: max "
+                f"{row['mixed_latency_tpot']:.5f} vs bound "
+                f"{row['bound']:.5f}")
+    if gates["slo_denied"] == 0:
+        raise SystemExit(
+            f"the bound never bound: planner denied 0 grants at B={deep} "
+            "(the latency gate would be vacuous)")
+    if retention < 0.95:
+        raise SystemExit(
+            f"throughput-tier tokens/s dropped to {retention:.3f}x the "
+            f"unconstrained planner at B={deep} (must be >= 0.95)")
+    return rows
+
+
+# --------------------------------------------------------------------- #
 # EP-shard sweep (model clock): shards x placement skew x B,
 # shard-aware vs global-union planning on a sharded deployment
 # --------------------------------------------------------------------- #
@@ -536,6 +722,9 @@ if __name__ == "__main__":
                     help="continuous-batching sweep over B in {1,2,4,8}")
     ap.add_argument("--planner-sweep", action="store_true",
                     help="joint vs independent K allocation sweep")
+    ap.add_argument("--slo-sweep", action="store_true",
+                    help="mixed-tier TPOT bounds: victim protection vs "
+                         "unconstrained joint planning")
     ap.add_argument("--ep-sweep", action="store_true",
                     help="EP shards x placement skew x B: shard-aware vs "
                          "global-union planning")
@@ -550,6 +739,8 @@ if __name__ == "__main__":
         batch_sweep(fast=args.fast)
     if args.planner_sweep:
         planner_sweep(fast=args.fast)
+    if args.slo_sweep:
+        slo_sweep(fast=args.fast)
     if args.ep_sweep:
         ep_sweep(fast=args.fast)
     if args.prefill_sweep:

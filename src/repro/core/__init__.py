@@ -9,10 +9,13 @@ from .cost_model import (Hardware, TPU_V5E, RTX_6000_ADA,
                          iteration_flops, iteration_time, draft_time,
                          sample_time, kv_bytes_per_token)
 from .cost_model import (BatchCostOracle, ExpertPlacement, a2a_bytes,
-                         expected_emitted, expected_unique_experts_sharded)
+                         expected_emitted, expected_emitted_curve,
+                         expected_unique_experts_sharded)
 from .manager import BASELINE, TEST, SET, CascadeConfig, SpeculationManager
-from .planner import (BatchPlan, BatchSpecPlanner, PlanDecision,
-                      PlannerConfig, greedy_allocate)
+from .planner import (BatchPlan, BatchSpecPlanner, BreakEvenConstraint,
+                      DraftYieldModel, GrantConstraint, PlanDecision,
+                      PlannerConfig, SLOTpotConstraint, greedy_allocate)
+from .slo import LATENCY, THROUGHPUT, RequestSLO, tpot_within
 from .utility import IterationRecord, UtilityAnalyzer
 
 __all__ = [
@@ -24,6 +27,9 @@ __all__ = [
     "iteration_time", "draft_time", "sample_time", "kv_bytes_per_token",
     "BASELINE", "TEST", "SET", "cascade_for_model",
     "BatchSpecPlanner", "BatchPlan", "PlanDecision", "PlannerConfig",
-    "expected_emitted", "greedy_allocate",
+    "expected_emitted", "expected_emitted_curve", "greedy_allocate",
     "ExpertPlacement", "expected_unique_experts_sharded", "a2a_bytes",
+    "RequestSLO", "LATENCY", "THROUGHPUT", "tpot_within",
+    "GrantConstraint", "BreakEvenConstraint", "SLOTpotConstraint",
+    "DraftYieldModel",
 ]

@@ -99,20 +99,48 @@ class ExpertPlacement:
     """Experts -> EP-shard map: the pricing contract every shard-aware
     consumer (cost model, planner, engine telemetry) shares.
 
-    `shard_of[e]` is the shard holding expert e's weights; every expert
-    lives on exactly one shard (no replication), and every shard id in
-    0..n_shards-1 holds at least one expert. `contiguous` matches
-    `distributed/expert_parallel.py`'s layout (expert e on shard
-    e // (E / n_shards)); `from_sizes` builds contiguous blocks of
-    arbitrary sizes, and `zipf` the skew-study placement that co-locates
-    zipf-proportional expert populations on shard 0 downward."""
-    shard_of: Tuple[int, ...]
+    `shard_of[e]` is the shard holding expert e's weights — an int for the
+    common single-home case, or a tuple of distinct shard ids when the
+    expert is *replicated* (hot-expert replication: the first id is the
+    primary home, the rest hold read-only replicas). Every shard id in
+    0..n_shards-1 holds at least one resident expert (primary or replica).
+    `contiguous` matches `distributed/expert_parallel.py`'s layout (expert
+    e on shard e // (E / n_shards)); `from_sizes` builds contiguous blocks
+    of arbitrary sizes, `zipf` the skew-study placement that co-locates
+    zipf-proportional expert populations on shard 0 downward, and
+    `replicate` adds replica shards to chosen experts of an existing
+    placement.
+
+    Replication is a *pricing* feature: a replicated expert's activated
+    load can be served from whichever replica shard is coolest, so the
+    analytic per-shard union takes min-over-replicas (see
+    `_rebalance_replicas` — it can only lower the gating shard, never
+    raise it). The measured engine path keeps routing to primary homes
+    (`primary_shard_of`); serving-side replica routing is future work."""
+    shard_of: Tuple
 
     def __post_init__(self):
         if not self.shard_of:
             raise ValueError("empty placement (no experts)")
-        s = max(self.shard_of) + 1
-        if min(self.shard_of) < 0 or len(set(self.shard_of)) != s:
+        norm = []
+        for e, s in enumerate(self.shard_of):
+            if isinstance(s, (tuple, list)):
+                reps = tuple(int(x) for x in s)
+                if not reps or len(set(reps)) != len(reps) or min(reps) < 0:
+                    raise ValueError(f"expert {e}: replica shards must be "
+                                     f"a non-empty set of distinct "
+                                     f"non-negative ids, got {s!r}")
+                norm.append(reps if len(reps) > 1 else reps[0])
+            else:
+                if int(s) < 0:
+                    raise ValueError(f"expert {e}: negative shard id {s!r}")
+                norm.append(int(s))
+        object.__setattr__(self, "shard_of", tuple(norm))
+        resident = set()
+        for s in self.shard_of:
+            resident.update(s if isinstance(s, tuple) else (s,))
+        n = max(resident) + 1
+        if resident != set(range(n)):
             raise ValueError("shard ids must cover 0..n_shards-1 with every "
                              f"shard non-empty, got {self.shard_of}")
 
@@ -122,15 +150,54 @@ class ExpertPlacement:
 
     @property
     def n_shards(self) -> int:
-        return max(self.shard_of) + 1
+        return max(max(s) if isinstance(s, tuple) else s
+                   for s in self.shard_of) + 1
+
+    @property
+    def primary_shard_of(self) -> Tuple[int, ...]:
+        """Each expert's primary home — the layout the measured engine
+        path routes on (ints, usable as `ep_shard_ids`)."""
+        return tuple(s[0] if isinstance(s, tuple) else s
+                     for s in self.shard_of)
+
+    @property
+    def has_replication(self) -> bool:
+        return any(isinstance(s, tuple) for s in self.shard_of)
 
     @property
     def counts(self) -> Tuple[int, ...]:
-        """Experts resident per shard."""
+        """Experts homed per shard (primary residence — the population the
+        analytic activation curve spreads routed mass over; replicas do
+        not add activated population, they add serving *options*, priced
+        by `_rebalance_replicas`)."""
         c = [0] * self.n_shards
-        for s in self.shard_of:
+        for s in self.primary_shard_of:
             c[s] += 1
         return tuple(c)
+
+    @property
+    def resident_counts(self) -> Tuple[int, ...]:
+        """Expert weights resident per shard, replicas included (the HBM
+        footprint view; equals `counts` without replication)."""
+        c = [0] * self.n_shards
+        for s in self.shard_of:
+            for x in (s if isinstance(s, tuple) else (s,)):
+                c[x] += 1
+        return tuple(c)
+
+    @property
+    def replication_groups(self) -> Tuple[Tuple[int, Tuple[int, ...], int],
+                                          ...]:
+        """Replicated experts grouped by identical replica set:
+        (primary_shard, alternate_shards, n_experts) per group — the
+        movable-mass units `_rebalance_replicas` shifts off the gating
+        shard. Empty without replication."""
+        groups: dict = {}
+        for s in self.shard_of:
+            if isinstance(s, tuple):
+                groups[s] = groups.get(s, 0) + 1
+        return tuple((reps[0], reps[1:], n)
+                     for reps, n in sorted(groups.items()))
 
     def validate_experts(self, num_experts: int) -> None:
         """The one consistency check every consumer of the pricing
@@ -178,6 +245,27 @@ class ExpertPlacement:
             base[s] += 1
         return cls.from_sizes([1 + b for b in base])
 
+    def replicate(self, replicas: dict) -> "ExpertPlacement":
+        """Hot-expert replication: a new placement where each expert in
+        `replicas` (expert id -> extra shard id(s)) additionally holds
+        read-only replicas on those shards. Primary homes are unchanged,
+        so the measured layout (`primary_shard_of`) and activation
+        populations (`counts`) stay identical — only the min-over-replicas
+        pricing relief changes."""
+        new = list(self.shard_of)
+        for e, extra in replicas.items():
+            if not 0 <= e < self.num_experts:
+                raise ValueError(f"expert {e} outside 0..{self.num_experts - 1}")
+            extra = tuple(extra) if isinstance(extra, (tuple, list)) \
+                else (int(extra),)
+            cur = new[e] if isinstance(new[e], tuple) else (new[e],)
+            merged = cur + tuple(x for x in extra if x not in cur)
+            if max(merged) >= self.n_shards:
+                raise ValueError(f"expert {e}: replica shard beyond the "
+                                 f"placement's {self.n_shards} shards")
+            new[e] = merged
+        return ExpertPlacement(tuple(new))
+
 
 def _hot_shard(per_shard) -> int:
     """The gating shard: argmax activated experts, ties broken on the
@@ -206,11 +294,53 @@ def _normalized_shard_weights(counts, n_requests: int, shard_weights):
     return ws
 
 
+def _rebalance_replicas(per_shard, counts, groups):
+    """Min-over-replicas pricing relief (hot-expert replication): a
+    replicated expert group's activated load can be served from whichever
+    of its replica shards is coolest, so activated mass may move off the
+    gating shard. Mass on a shard splits uniformly over the shard's homed
+    population, so group g on shard s owns `per_shard[s] * n_g / E_s` of
+    its activated count; the greedy loop repeatedly halves the gap between
+    the current gating shard and a cooler replica target. Every move takes
+    mass OFF the argmax shard and lands the target strictly below the old
+    max, so the gating count is non-increasing — replication can only
+    relieve the gating shard, never create a hotter one (property-tested).
+    Shard totals are conserved, so the union is unchanged."""
+    loads = list(per_shard)
+    # movable parcels: [mass, shard-it-sits-on, full replica set]
+    parcels = []
+    for p, alts, n_g in groups:
+        if counts[p] > 0 and loads[p] > 0:
+            parcels.append([loads[p] * (n_g / counts[p]), p, (p,) + alts])
+    for _ in range(16 * max(len(parcels), 1)):
+        hot = _hot_shard(loads)
+        best = None
+        for idx, (m, src, reps) in enumerate(parcels):
+            if src != hot or m <= 1e-12:
+                continue
+            for a in reps:
+                if loads[a] < loads[hot] - 1e-12 and (
+                        best is None or loads[a] < loads[best[1]]):
+                    best = (idx, a)
+        if best is None:
+            break
+        idx, tgt = best
+        m, src, reps = parcels[idx]
+        delta = min(m, (loads[src] - loads[tgt]) / 2.0)
+        loads[src] -= delta
+        loads[tgt] += delta
+        parcels[idx][0] = m - delta
+        parcels.append([delta, tgt, reps])
+    return loads
+
+
 def _sharded_union(num_experts: int, top_k: int, ns, counts, norm_ws,
-                   affinity: float) -> dict:
+                   affinity: float, replica_groups=None) -> dict:
     """Core per-shard curve over pre-normalized profiles (see
     `expected_unique_experts_sharded` for the derivation and the public
-    normalizing entry point)."""
+    normalizing entry point). `replica_groups` (from
+    `ExpertPlacement.replication_groups`) applies the min-over-replicas
+    relief after the primary-home curve."""
     s_n = len(counts)
     total = sum(ns)
     if num_experts == 0 or total == 0:
@@ -220,6 +350,9 @@ def _sharded_union(num_experts: int, top_k: int, ns, counts, norm_ws,
     per_shard = []
     for s in range(s_n):
         e_s = float(counts[s])
+        if e_s <= 0:           # replica-only shard: no homed population
+            per_shard.append(0.0)
+            continue
         untouched, mass = 1.0, 0.0
         for i, n in enumerate(ns):
             if n <= 0:
@@ -231,6 +364,8 @@ def _sharded_union(num_experts: int, top_k: int, ns, counts, norm_ws,
         floor = min(k * (mass / total), e_s)
         val = floor + (rand - floor) * (1.0 - affinity)
         per_shard.append(min(max(val, 0.0), e_s))
+    if replica_groups:
+        per_shard = _rebalance_replicas(per_shard, counts, replica_groups)
     hot = _hot_shard(per_shard)
     return {"per_shard": per_shard, "union": sum(per_shard),
             "max_shard": per_shard[hot], "hot_shard": hot, "n_shards": s_n}
@@ -272,7 +407,9 @@ def expected_unique_experts_sharded(num_experts: int, top_k: int,
                 "hot_shard": 0, "n_shards": 1}
     counts = placement.counts
     norm_ws = _normalized_shard_weights(counts, len(ns), shard_weights)
-    return _sharded_union(num_experts, top_k, ns, counts, norm_ws, affinity)
+    return _sharded_union(num_experts, top_k, ns, counts, norm_ws, affinity,
+                          replica_groups=placement.replication_groups
+                          if placement.has_replication else None)
 
 
 def a2a_bytes(cfg, n_tokens: int, n_shards: int, wb: int = 2) -> float:
@@ -659,6 +796,8 @@ class BatchCostOracle:
             self._counts = placement.counts
             self._norm_sw = _normalized_shard_weights(self._counts, b,
                                                       shard_weights)
+            self._replica_groups = (placement.replication_groups
+                                    if placement.has_replication else None)
         self._weights = _weight_read_bytes(cfg, wb)
         n_attn = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
         prefill_bytes_per_tok = (kv_bytes_per_token(cfg, wb) * n_attn
@@ -680,7 +819,8 @@ class BatchCostOracle:
         if self._sharded:
             est = _sharded_union(cfg.num_experts, cfg.experts_per_token,
                                  ns, self._counts, self._norm_sw,
-                                 self.affinity)
+                                 self.affinity,
+                                 replica_groups=self._replica_groups)
             gate = (sum(est["per_shard"]) / self.placement.n_shards
                     if self.assume_balanced else est["max_shard"])
             experts = _expert_read_bytes(cfg, gate, 2)
@@ -700,6 +840,22 @@ class BatchCostOracle:
         if self._sharded:
             t = t + _a2a_time(cfg, hw, total, self.placement.n_shards, 2)
         return t
+
+    def predicted_tpot(self, tokens_per_request, emitted_per_request
+                       ) -> list:
+        """Per-request predicted TPOT under a candidate allocation: every
+        request sharing the pass *waits out the whole pass* (max-over-
+        shards priced under a placement) between its token batches, so
+        request i's experienced seconds-per-token is t_batch(ns) over its
+        own expected emissions. This — not the marginal-bytes cost
+        attribution, which deliberately charges a grant's bytes to the
+        grantee — is the victim quantity the planner's SLO constraint
+        bounds (docs/slo.md): a grant to ANY row lengthens every
+        co-scheduled row's predicted TPOT. Rows expected to emit nothing
+        this pass (prefill chunks, dead rows) report inf."""
+        t = self.t_batch(tokens_per_request)
+        return [t / e if e > 0 else float("inf")
+                for e in emitted_per_request]
 
 
 # --------------------------------------------------------------------- #
@@ -796,6 +952,24 @@ def expected_emitted(accept_rate: float, k: int) -> float:
     planner's yield predictions."""
     a = min(max(accept_rate, 0.0), 0.999)
     return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+def expected_emitted_curve(curve, k: int) -> float:
+    """`expected_emitted` generalized to a per-position acceptance curve
+    (`UtilityAnalyzer.accept_curve`): E[emitted] = 1 + sum over depths j of
+    P(drafts 1..j all accepted) = 1 + sum_j prod_{p<j} curve[p]. A flat
+    curve reproduces the geometric series; a depth-decaying curve tightens
+    the deep-draft over-prediction the flat mean makes (the planner's
+    `use_accept_curve` flag). Positions past the curve reuse its last
+    value; k=0 -> exactly 1."""
+    if k <= 0:
+        return 1.0
+    tot, p = 1.0, 1.0
+    for j in range(k):
+        c = curve[j] if j < len(curve) else (curve[-1] if curve else 0.0)
+        p *= min(max(c, 0.0), 0.999)
+        tot += p
+    return tot
 
 
 # --------------------------------------------------------------------- #

@@ -25,6 +25,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
+from .slo import tpot_within
 from .utility import IterationRecord, UtilityAnalyzer
 
 BASELINE, TEST, SET = "baseline", "test", "set"
@@ -204,7 +205,9 @@ class SpeculationManager:
 
     def _slo_allows(self, k: int) -> bool:
         """True if K's measured TPOT estimate satisfies the SLO (unknown Ks
-        are allowed — testing them is how we learn)."""
+        are allowed — testing them is how we learn). The comparison itself
+        is `slo.tpot_within`, the one predicate shared with the batch
+        planner's predicted-TPOT grant constraint (docs/slo.md)."""
         if self.cfg.slo_tpot is None or k == 0:
             return True
         base = self.analyzer.baseline_time
@@ -215,7 +218,7 @@ class SpeculationManager:
             return True
         tpot = (sum(r.t_iter for r in recs) / max(
             sum(r.tokens for r in recs), 1))
-        return tpot <= self.cfg.slo_tpot
+        return tpot_within(self.cfg.slo_tpot, tpot)
 
     def _next_trial_k(self) -> Optional[int]:
         """Next K to trial, or None to exit the test phase early."""
@@ -260,6 +263,12 @@ class SpeculationManager:
             return None  # revisiting -> converged
         while nxt > self.cfg.k_min and not self._slo_allows(nxt):
             nxt -= 1     # SLO: climb no higher than the latency bound allows
+        if not self._slo_allows(nxt):
+            # the downclimb bottomed out at k_min and even k_min violates
+            # the bound: trialing it anyway would knowingly run an
+            # SLO-breaking K for trial_len iterations. Disable instead —
+            # _choose_set_k's SLO filter then settles on K=0.
+            return None
         if any(k == nxt for k, _ in self._trials):
             return None
         return nxt

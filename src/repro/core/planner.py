@@ -16,20 +16,38 @@ exploration and per-request disable), then jointly decides the *grants*
   * predict each request's marginal token yield from its windowed draft
     acceptance (`UtilityAnalyzer.accept_rate`): granting the (k+1)-th
     draft token to a request with acceptance a is worth a^(k+1) expected
-    extra emissions;
-  * repeatedly grant +1 draft token to the request with the highest
-    predicted Δtokens/Δt_batch, and stop when the best marginal utility —
-    that rate over the batch's no-speculation rate B/t_base — drops below
-    `util_floor` (= 1: the paper's "disable speculation" rule, now per
-    grant instead of per request, which also preempts speculation when
-    prefill chunks or high occupancy have pushed the shared pass past the
-    roofline crossover where every extra token costs real time).
+    extra emissions (or the depth-k product of its per-position
+    `accept_curve` under `use_accept_curve` — drafts decay with depth);
+  * repeatedly grant +1 draft token to the admissible candidate with the
+    highest predicted Δtokens/Δt_batch, where *admissible* is decided by
+    a pluggable pipeline of `GrantConstraint` objects.
+
+Constraint pipeline (docs/slo.md): the stopping rule is no longer a
+hard-coded water level — each candidate grant is vetted by every
+constraint, and the loop stops when no admissible candidate remains.
+
+  * `BreakEvenConstraint` — the paper's break-even rule per grant: the
+    marginal rate must beat the (latency-weighted) no-speculation batch
+    rate `util_floor * sum(w_i) / t_base`. Latency-tier requests carry
+    weight `latency_tier_weight` > 1, raising the bar for everyone's
+    marginal grants when latency traffic shares the pass.
+  * `SLOTpotConstraint` — victim protection: a grant to ANY row is denied
+    when it would push any *co-scheduled* bounded request's predicted
+    TPOT (`BatchCostOracle.predicted_tpot`: the whole — max-over-shards —
+    pass over that request's expected emissions) past its bound, unless
+    the move does not worsen it. No per-request gate can see this: the
+    victim's own controller never asked for the grant that hurts it.
+
+Future constraints (replication steering, memory caps) plug into the same
+pipeline — `greedy_allocate(constraints=[...])` is the extension point.
 
 Trial hygiene: the planner staggers Cascade TEST phases so at most one
 request trials an off-policy K per shared pass (`SpeculationManager.hold`)
 — a concurrent trial shifts the expert union under every other request's
 attributed-cost measurement. The one trialing request is granted its probe
-K in full, so the FSM measures exactly what it asked to measure.
+K in full, so the FSM measures exactly what it asked to measure — unless
+pinning the probe would itself break a co-scheduled SLO bound, in which
+case victim protection wins and the probe is water-filled like any grant.
 
 Expert parallelism (docs/expert_parallel.md): under an `ExpertPlacement`
 with n_shards > 1 the oracle prices each candidate allocation with the
@@ -43,18 +61,22 @@ that spreads the union evenly over shards (the "global-union" planner the
 
 Degradation: at B=1 (a single span in the pass) the planner is bypassed —
 grants equal asks bit for bit, reproducing the legacy per-request
-controller path exactly — and `policy="independent"` is the escape hatch
-that bypasses it at every batch size.
-"""
+controller path exactly (the request's own SLO is the per-request
+`CascadeConfig.slo_tpot` check there) — and `policy="independent"` is the
+escape hatch that bypasses it at every batch size. With no SLOs attached
+and the default flags, the pipeline is bit-identical — grants, predictions,
+telemetry — to the pre-pipeline water-filling (property-tested against a
+verbatim reference implementation)."""
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 from . import cost_model as cm
-from .cost_model import expected_emitted
+from .cost_model import expected_emitted, expected_emitted_curve
 from .manager import TEST
+from .slo import LATENCY, RequestSLO, tpot_within
 
 
 @dataclass(frozen=True)
@@ -75,6 +97,177 @@ class PlannerConfig:
     #: (the hottest shard gates the pass); False is the global-union
     #: comparator that assumes the union spreads evenly over shards
     shard_aware: bool = True
+    #: water-level weight of a latency-tier request (throughput tier = 1):
+    #: with mixed-tier traffic the no-speculation rate is weighted, so
+    #: marginal grants must clear a higher bar when latency requests
+    #: share the pass. 1.0 disables the weighting.
+    latency_tier_weight: float = 2.0
+    #: predict marginal yield from the per-position acceptance curve
+    #: (UtilityAnalyzer.accept_curve) instead of the flat windowed mean —
+    #: drafts decay with depth, so the flat mean over-grants deep Ks.
+    #: Default off: the flat path is the bit-identity baseline.
+    use_accept_curve: bool = False
+
+
+class DraftYieldModel:
+    """Predicted draft yield for the water-filling and the SLO constraint:
+    `marginal(i, k)` is the expected extra emissions of granting row i its
+    (k+1)-th draft token, `emitted(i, k)` its cumulative expected
+    emissions at k granted drafts. Flat acceptance a gives the paper's
+    truncated geometric series (marginal a^(k+1)); a per-position curve
+    (accept-model upgrade, flag-gated) gives the depth-decayed product."""
+
+    def __init__(self, accepts: Dict[int, float],
+                 curves: Optional[Dict[int, Sequence[float]]] = None):
+        self.accepts = accepts
+        self.curves = curves or {}
+
+    def marginal(self, i: int, k: int) -> float:
+        curve = self.curves.get(i)
+        if curve is None:
+            return self.accepts[i] ** (k + 1)
+        p = 1.0
+        for j in range(k + 1):
+            c = curve[j] if j < len(curve) else curve[-1]
+            p *= min(max(c, 0.0), 0.999)
+        return p
+
+    def emitted(self, i: int, k: int) -> float:
+        curve = self.curves.get(i)
+        if curve is None:
+            return expected_emitted(self.accepts[i], k)
+        return expected_emitted_curve(curve, k)
+
+
+@dataclass
+class GrantCandidate:
+    """One +1-draft-token proposal the constraint pipeline vets."""
+    row: int               # decode row receiving the extra draft
+    k_current: int         # drafts already granted to the row
+    d_tokens: float        # predicted marginal emissions of the grant
+    d_t: float             # marginal batch-pass delta (max-over-shards)
+    rate: float            # d_tokens / d_t (inf when the grant is free)
+    t_after: float         # predicted pass seconds AFTER the grant
+
+
+@dataclass
+class AllocationContext:
+    """Shared state the constraints read (and `greedy_allocate` owns):
+    `ns`/`alloc`/`t_cur` are live views updated as grants land."""
+    oracle: cm.BatchCostOracle
+    decode: Sequence[int]
+    caps: Dict[int, int]
+    accepts: Dict[int, float]
+    yields: DraftYieldModel
+    ns: List[int]
+    alloc: Dict[int, int]
+    t_base: float
+    t_cur: float
+    fixed: frozenset
+
+
+class GrantConstraint:
+    """One rule of the allocation pipeline. `prepare` runs once per plan
+    (after fixed rows are pinned), `admits` vets each candidate grant, and
+    `admits_pinned` vets the pinned-trial base state — a constraint that
+    rejects it demotes the pinned probes to ordinary candidates. Subclass
+    and pass via `greedy_allocate(constraints=[...])` /
+    `BatchSpecPlanner(constraints_factory=...)` to extend the planner
+    (this is the extension point future constraints — replication
+    steering, memory caps — plug into)."""
+
+    name = "constraint"
+
+    def prepare(self, ctx: AllocationContext) -> None:
+        pass
+
+    def admits(self, cand: GrantCandidate, ctx: AllocationContext) -> bool:
+        return True
+
+    def admits_pinned(self, ctx: AllocationContext) -> bool:
+        return True
+
+
+@dataclass
+class BreakEvenConstraint(GrantConstraint):
+    """The paper's break-even rule per grant: a candidate must beat the
+    batch's no-speculation token rate — the water level
+    `util_floor * sum(w_i) / t_base`, with latency-tier rows weighted
+    above 1 (`weights`) so mixed-tier passes demand more from every
+    marginal grant. With unit weights this is exactly the pre-pipeline
+    `util_floor * B_live / t_base` level, float for float."""
+    util_floor: float = 1.0
+    weights: Optional[Dict[int, float]] = None
+
+    name = "break_even"
+    r_floor: float = 0.0
+
+    def prepare(self, ctx: AllocationContext) -> None:
+        if not ctx.decode:
+            self.r_floor = 0.0
+            return
+        eff_b = (len(ctx.decode) if self.weights is None
+                 else sum(self.weights.get(i, 1.0) for i in ctx.decode))
+        self.r_floor = self.util_floor * eff_b / ctx.t_base
+
+    def admits(self, cand: GrantCandidate, ctx: AllocationContext) -> bool:
+        return not (cand.rate < self.r_floor)
+
+
+@dataclass
+class SLOTpotConstraint(GrantConstraint):
+    """Victim protection: deny any grant that pushes any co-scheduled
+    bounded request's *predicted* TPOT past its bound — not just the
+    grantee's. Predicted TPOT is the whole pass (already the gating
+    shard's time under a placement) over the request's expected
+    emissions (`BatchCostOracle.predicted_tpot` semantics, inlined here
+    against the candidate's `t_after`).
+
+    The escape clause — a candidate violating row j's bound is still
+    admitted when it does not worsen j's predicted TPOT — keeps an
+    *infeasibly*-bounded row (its bound below even the no-speculation
+    pass) from freezing the whole batch, and lets a bounded row's own
+    speculation pull it back under its bound (Theorem 4.2: TPOT falls as
+    utility rises). The invariant that survives water-filling, property-
+    tested: every bounded row's predicted TPOT ends <= max(its bound, its
+    no-speculation TPOT)."""
+    bounds: Dict[int, float] = field(default_factory=dict)
+
+    name = "slo_tpot"
+
+    def _tpot(self, j: int, t_pass: float, ctx: AllocationContext,
+              extra: int = 0) -> float:
+        e = ctx.yields.emitted(j, ctx.alloc[j] + extra)
+        return t_pass / e if e > 0 else float("inf")
+
+    def admits(self, cand: GrantCandidate, ctx: AllocationContext) -> bool:
+        for j, bound in self.bounds.items():
+            extra = 1 if j == cand.row else 0
+            after = self._tpot(j, cand.t_after, ctx, extra)
+            if tpot_within(bound, after):
+                continue
+            if after > self._tpot(j, ctx.t_cur, ctx):
+                return False   # worsens a bounded victim past its SLO
+        return True
+
+    def admits_pinned(self, ctx: AllocationContext) -> bool:
+        """A staggered trial's pinned probe K must not break a
+        co-scheduled bound either — SLO beats trial fidelity. Compared
+        against the no-speculation base state (the demotion target)."""
+        if not self.bounds or not ctx.fixed:
+            return True
+        base_ns = list(ctx.ns)
+        for i in ctx.fixed:
+            base_ns[i] -= ctx.alloc[i]
+        t_zero = ctx.oracle.t_batch(base_ns)
+        for j, bound in self.bounds.items():
+            after = self._tpot(j, ctx.t_cur, ctx)
+            if tpot_within(bound, after):
+                continue
+            e = ctx.yields.emitted(j, 0 if j in ctx.fixed else ctx.alloc[j])
+            if after > (t_zero / e if e > 0 else float("inf")):
+                return False
+        return True
 
 
 @dataclass
@@ -86,6 +279,7 @@ class PlanDecision:
     accept_rate: float      # windowed estimate used for the prediction
     phase: str              # controller phase when planned
     held: bool = False      # TEST trial postponed by staggering
+    slo_capped: bool = False  # a grant to this row was denied by an SLO
 
     @property
     def preempted(self) -> bool:
@@ -104,6 +298,7 @@ class BatchPlan:
     tokens_predicted: float = 0.0  # predicted emissions (decode rows)
     held: int = 0              # TEST trials postponed this step
     preempted: int = 0         # requests granted 0 while asking > 0
+    slo_denied: int = 0        # rows whose grants an SLO constraint capped
 
     @property
     def requested_total(self) -> int:
@@ -124,52 +319,87 @@ class BatchPlan:
 
 
 def greedy_allocate(oracle: cm.BatchCostOracle, base_ns, decode, caps,
-                    accepts, *, fixed=frozenset(), util_floor: float = 1.0):
-    """Greedy marginal-utility water-filling.
+                    accepts, *, fixed=frozenset(), util_floor: float = 1.0,
+                    constraints: Optional[Sequence[GrantConstraint]] = None,
+                    yield_model: Optional[DraftYieldModel] = None):
+    """Greedy marginal-utility water-filling through the constraint
+    pipeline.
 
     Starting from `base_ns` (every decode row at its committed token, plus
     any co-scheduled prefill chunks), repeatedly grant +1 draft token to
-    the decode row with the highest predicted Δtokens/Δt_batch, where
-    Δtokens = accepts[i]^(k_i+1) (the next draft's expected yield) and
-    Δt_batch comes from the cost oracle at the *current* allocation — so
-    union saturation cheapens later grants and roofline crossover taxes
-    them, exactly as the shared pass will. Stops when the best marginal
-    rate falls below `util_floor * len(decode) / t_base`, the batch's
-    no-speculation token rate: a grant below that water level would lower
-    batch throughput (util_floor=1 is the paper's break-even rule).
+    the *admissible* decode row with the highest predicted Δtokens/Δt_batch,
+    where Δtokens comes from `yield_model` (default: the flat-acceptance
+    geometric increment accepts[i]^(k_i+1)) and Δt_batch from the cost
+    oracle at the *current* allocation — so union saturation cheapens later
+    grants and roofline crossover taxes them, exactly as the shared pass
+    will. A candidate is admissible when every constraint admits it;
+    `constraints=None` builds the default pipeline [BreakEvenConstraint
+    (util_floor)], which reproduces the pre-pipeline stopping rule — stop
+    when the best marginal rate falls below `util_floor * len(decode) /
+    t_base` — bit for bit. The loop ends when no admissible candidate
+    remains. Ties break on the lowest row index, keeping the allocation
+    deterministic.
 
     `fixed` rows are pinned at caps[i] before water-filling begins — the
-    staggered TEST trial whose probe K must run unmodified. Ties break on
-    the lowest row index, keeping the allocation deterministic.
+    staggered TEST trial whose probe K must run unmodified. A constraint
+    may veto the pinned state (`admits_pinned` — the SLO constraint does,
+    when a probe would break a co-scheduled bound); the pins are then
+    demoted to ordinary capped candidates.
 
     Returns (alloc, info) with alloc = {row: drafts granted} and info
-    carrying t_base / t_alloc / r_floor for telemetry."""
+    carrying t_base / t_alloc / r_floor plus `denied` ({constraint name:
+    rows it vetoed at least once}) for telemetry."""
+    ym = yield_model or DraftYieldModel(accepts)
+    cons = (list(constraints) if constraints is not None
+            else [BreakEvenConstraint(util_floor=util_floor)])
     ns = list(base_ns)
     alloc = {i: 0 for i in decode}
     t_base = oracle.t_batch(ns)
-    r_floor = (util_floor * len(decode) / t_base) if decode else 0.0
     for i in fixed:
         alloc[i] = caps[i]
         ns[i] += caps[i]
     t_cur = oracle.t_batch(ns)
+    ctx = AllocationContext(oracle=oracle, decode=decode, caps=caps,
+                            accepts=accepts, yields=ym, ns=ns, alloc=alloc,
+                            t_base=t_base, t_cur=t_cur, fixed=fixed)
+    denied: Dict[str, set] = {}
+    if fixed and not all(c.admits_pinned(ctx) for c in cons):
+        for i in fixed:
+            ns[i] -= caps[i]
+            alloc[i] = 0
+            denied.setdefault("pinned", set()).add(i)
+        fixed = ctx.fixed = frozenset()
+        ctx.t_cur = t_cur = oracle.t_batch(ns)
+    for c in cons:
+        c.prepare(ctx)
     while True:
-        best, best_rate = None, 0.0
+        best = None
         for i in decode:
             if i in fixed or alloc[i] >= caps[i]:
                 continue
-            d_tok = accepts[i] ** (alloc[i] + 1)
+            d_tok = ym.marginal(i, alloc[i])
             ns[i] += 1
-            d_t = oracle.t_batch(ns) - t_cur
+            t_after = oracle.t_batch(ns)
             ns[i] -= 1
+            d_t = t_after - t_cur
             rate = (d_tok / d_t) if d_t > 0 else float("inf")
-            if best is None or rate > best_rate:
-                best, best_rate = i, rate
-        if best is None or best_rate < r_floor:
+            cand = GrantCandidate(row=i, k_current=alloc[i], d_tokens=d_tok,
+                                  d_t=d_t, rate=rate, t_after=t_after)
+            veto = next((c for c in cons if not c.admits(cand, ctx)), None)
+            if veto is not None:
+                denied.setdefault(veto.name, set()).add(i)
+                continue
+            if best is None or cand.rate > best.rate:
+                best = cand
+        if best is None:
             break
-        alloc[best] += 1
-        ns[best] += 1
-        t_cur = oracle.t_batch(ns)
-    return alloc, {"t_base": t_base, "t_alloc": t_cur, "r_floor": r_floor}
+        alloc[best.row] += 1
+        ns[best.row] += 1
+        ctx.t_cur = t_cur = oracle.t_batch(ns)
+    floor = next((c.r_floor for c in cons
+                  if isinstance(c, BreakEvenConstraint)), 0.0)
+    return alloc, {"t_base": t_base, "t_alloc": t_cur, "r_floor": floor,
+                   "denied": denied}
 
 
 class BatchSpecPlanner:
@@ -203,9 +433,34 @@ class BatchSpecPlanner:
             return None
         return analyzer.accept_rate(self.config.accept_window)
 
+    def _accept_curve(self, controller, max_k: int) -> Optional[list]:
+        analyzer = getattr(controller, "analyzer", None)
+        if analyzer is None or not hasattr(analyzer, "accept_curve"):
+            return None
+        return analyzer.accept_curve(max_k, self.config.accept_window)
+
+    def build_constraints(self, decode, requested,
+                          slos: Dict[int, RequestSLO]
+                          ) -> List[GrantConstraint]:
+        """The default pipeline: the (latency-weighted) break-even water
+        level plus victim-protecting TPOT bounds. Override or extend in a
+        subclass to plug in additional constraints."""
+        cfgp = self.config
+        weights = None
+        if cfgp.latency_tier_weight != 1.0:
+            lat = {i: cfgp.latency_tier_weight for i in decode
+                   if i in slos and slos[i].tier == LATENCY}
+            weights = lat or None
+        bounds = {i: slos[i].tpot for i in decode
+                  if i in slos and slos[i].tpot is not None}
+        return [BreakEvenConstraint(util_floor=cfgp.util_floor,
+                                    weights=weights),
+                SLOTpotConstraint(bounds=bounds)]
+
     def plan(self, controllers: Dict[int, object], context_lens, *,
              prefill_tokens: Optional[Dict[int, int]] = None,
-             shard_weights: Optional[Dict[int, object]] = None) -> BatchPlan:
+             shard_weights: Optional[Dict[int, object]] = None,
+             slos: Optional[Dict[int, RequestSLO]] = None) -> BatchPlan:
         """Plan one step. `controllers` maps decode row -> its controller
         (asks are collected here: `next_k()`, or `hold()` for staggered
         TEST rows); `context_lens` is the full [B] row table's cache
@@ -215,12 +470,15 @@ class BatchSpecPlanner:
         measured per-shard routing profiles ([n_shards] weights, e.g. the
         engine's EMA of per-row per-shard activation telemetry) so the
         sharded oracle can tell a hot-shard-bound grant from a cold one
-        (rows without a profile default to placement-proportional mass)."""
+        (rows without a profile default to placement-proportional mass);
+        `slos` maps decode rows to their `RequestSLO`s — TPOT bounds and
+        tiers become constraints on the joint allocation (docs/slo.md)."""
         cfgp = self.config
         b = len(context_lens)
         pre = {i: max(int(p), 0)
                for i, p in (prefill_tokens or {}).items() if p > 0}
         decode = sorted(controllers)
+        slos = slos or {}
         joint = cfgp.policy == "joint"
 
         # -- phase staggering: at most one TEST trial per shared pass ----
@@ -241,6 +499,15 @@ class BatchSpecPlanner:
             requested[i] = int(ctl.hold() if i in held else ctl.next_k())
             a = self._accept_rate(ctl)
             accepts[i] = cfgp.default_accept if a is None else a
+        curves = None
+        if cfgp.use_accept_curve:
+            curves = {}
+            for i in decode:
+                c = self._accept_curve(controllers[i],
+                                       max(requested[i], 1))
+                if c is not None:
+                    curves[i] = c
+        ym = DraftYieldModel(accepts, curves)
 
         base_ns = [0] * b
         for i in decode:
@@ -259,9 +526,11 @@ class BatchSpecPlanner:
 
         # -- allocate ----------------------------------------------------
         # bypass: independent policy, or a single-span pass (B=1 — the
-        # paper's regime, where Cascade alone is the policy and the
-        # planner must be invisible, bit for bit)
+        # paper's regime, where Cascade alone is the policy, the planner
+        # must be invisible bit for bit, and the request's own SLO is the
+        # per-request CascadeConfig.slo_tpot check)
         singleton = len(decode) == 1 and not pre
+        slo_capped: set = set()
         if not joint or singleton:
             alloc = dict(requested)
         else:
@@ -269,9 +538,12 @@ class BatchSpecPlanner:
             fixed = frozenset(
                 i for i in decode
                 if phases[i] == TEST and i not in held and requested[i] > 0)
-            alloc, _ = greedy_allocate(oracle, base_ns, decode, requested,
-                                       accepts, fixed=fixed,
-                                       util_floor=cfgp.util_floor)
+            alloc, info = greedy_allocate(
+                oracle, base_ns, decode, requested, accepts, fixed=fixed,
+                util_floor=cfgp.util_floor, yield_model=ym,
+                constraints=self.build_constraints(decode, requested, slos))
+            slo_capped = (info["denied"].get("slo_tpot", set())
+                          | info["denied"].get("pinned", set()))
 
         # -- predictions + decisions ------------------------------------
         ns = list(base_ns)
@@ -283,11 +555,12 @@ class BatchSpecPlanner:
         decisions = {
             i: PlanDecision(slot=i, requested=requested[i],
                             granted=alloc[i], accept_rate=accepts[i],
-                            phase=phases[i], held=i in held)
+                            phase=phases[i], held=i in held,
+                            slo_capped=i in slo_capped)
             for i in decode}
         return BatchPlan(
             decisions=decisions, t_base=t_base, t_predicted=t_pred,
-            tokens_predicted=sum(
-                expected_emitted(accepts[i], alloc[i]) for i in decode),
+            tokens_predicted=sum(ym.emitted(i, alloc[i]) for i in decode),
             held=len(held),
-            preempted=sum(1 for d in decisions.values() if d.preempted))
+            preempted=sum(1 for d in decisions.values() if d.preempted),
+            slo_denied=len(slo_capped))

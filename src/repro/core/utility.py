@@ -116,6 +116,38 @@ class UtilityAnalyzer:
         accepted = sum(min(max(r.tokens - 1, 0), r.k) for r in recs)
         return min(accepted / drafted, 0.999)
 
+    def accept_curve(self, max_k: int, n: Optional[int] = None
+                     ) -> Optional[list]:
+        """Per-position conditional acceptance over the last `n`
+        speculative records: curve[p] = P(draft p+1 accepted | position
+        reached). No extra recording is needed — speculative verification
+        accepts a *prefix*, so a record (k, tokens) pins down every
+        position's outcome: positions 0..tokens-2 were reached and
+        accepted, position tokens-1 was reached and rejected (when it was
+        drafted, tokens-1 < k), and positions past the first rejection
+        were never reached (and must not count — that truncation is
+        exactly why a flat mean over-estimates deep drafts: acceptance
+        decays with depth, the ROADMAP's acceptance-model item).
+
+        Positions with no observations fall back to the flat windowed
+        `accept_rate`; None until any speculative record exists (callers
+        fall back to their prior). Stop-token-truncated iterations
+        undercount deliberately, like `accept_rate`. Values capped below
+        1 so geometric consumers stay finite."""
+        recs = [r for r in self._records if r.k > 0][-(n or self.window):]
+        flat = self.accept_rate(n)
+        if flat is None or max_k <= 0:
+            return None
+        curve = []
+        for p in range(max_k):
+            reached = sum(1 for r in recs
+                          if r.k > p and min(r.tokens - 1, r.k) >= p)
+            accepted = sum(1 for r in recs
+                           if r.k > p and min(r.tokens - 1, r.k) > p)
+            curve.append(min(accepted / reached, 0.999) if reached
+                         else flat)
+        return curve
+
     def trial_utility(self, trial_records) -> float:
         """Utility of an explicit list of records (one test-phase trial)."""
         base = self.baseline_time

@@ -1,6 +1,8 @@
 """Serving substrate: engines (single-request + continuous batching),
 drafters, rejection sampler, schedulers."""
 
+from repro.core.slo import RequestSLO
+
 from .drafter import Drafter, DraftModelDrafter, NGramDrafter
 from .engine import BatchedEngine, GenerationResult, ServingEngine
 from .sampler import greedy_verify, rejection_sample

@@ -29,6 +29,7 @@ model driven by the *measured* unique-expert activations of this iteration
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
@@ -41,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import cost_model as cm
 from repro.core.controller import CascadeController, StaticKController
 from repro.core.planner import BatchSpecPlanner, PlannerConfig
+from repro.core.slo import RequestSLO
 from repro.models import transformer as T
 
 from .drafter import Drafter, NGramDrafter
@@ -258,7 +260,8 @@ class ServingEngine:
                 t_verify=t_verify, t_sample=t_sample,
                 unique_experts=uniq or 0.0, context_len=len_before,
                 phase=getattr(controller, "phase", ""),
-                utility=controller.utility()))
+                utility=controller.utility(),
+                t_pass=t_iter))  # single-request: the pass IS the request's
             it += 1
             if stopped:
                 break
@@ -302,6 +305,7 @@ class _Slot:
     t_submit: float = 0.0            # engine-clock time of submission
     queue_seen: bool = False         # t_queue recorded yet?
     seq: int = 0                     # admission order (FIFO prefill packing)
+    slo: Optional[RequestSLO] = None  # latency objective (docs/slo.md)
 
 
 class BatchedEngine:
@@ -441,7 +445,9 @@ class BatchedEngine:
         self._prefill = jax.jit(
             lambda p, t, c, e: T.prefill(cfg, p, t, c, window=window,
                                          enc_out=e))
-        sid = (tuple(self.placement.shard_of) if self._ep else None)
+        # measured routing uses primary homes; replicas are a pricing-side
+        # relief (cost_model._rebalance_replicas), not a serving-side path
+        sid = (tuple(self.placement.primary_shard_of) if self._ep else None)
         self._decode = jax.jit(
             lambda p, c, t, m: T.decode_step(cfg, p, c, t, window=window,
                                              token_mask=m,
@@ -464,7 +470,8 @@ class BatchedEngine:
     def join(self, prompt: List[int], max_new: int = 128, *,
              controller=None, request_id: str = "", task: str = "",
              stop_token: Optional[int] = None, enc_out=None,
-             submit_time: Optional[float] = None) -> int:
+             submit_time: Optional[float] = None,
+             slo: Optional[RequestSLO] = None) -> int:
         """Admit `prompt` into a free cache row; returns the slot index.
 
         chunk=0: blocking — runs the full prefill here, stalling every
@@ -476,7 +483,12 @@ class BatchedEngine:
         which the chunked decode-shaped pass cannot do.
         `submit_time` (engine-clock seconds, e.g. recorded by a scheduler at
         enqueue) anchors the request's queue-delay/TTFT telemetry; default
-        is "submitted now"."""
+        is "submitted now".
+        `slo` (a `core.RequestSLO`, docs/slo.md) rides on the slot into the
+        planner: its TPOT bound constrains the joint allocation (grants to
+        ANY co-scheduled row that would push this request past its bound
+        are denied) and is handed to the request's own Cascade config so
+        the per-request trial gate enforces the same bound."""
         if not prompt:
             raise ValueError("empty prompt — nothing to prefill")
         if len(prompt) >= self.max_len:
@@ -488,6 +500,22 @@ class BatchedEngine:
         idx = free[0]
         self._shard_profiles.pop(idx, None)  # fresh row, fresh profile
         controller = controller or self.controller_factory()
+        if slo is not None and slo.tpot is not None:
+            # the per-request FSM shares the bound: its measured trial
+            # gate (manager._slo_allows) and the planner's predicted grant
+            # constraint then enforce the SAME objective at both levels.
+            # An explicit CascadeConfig.slo_tpot wins over the request's,
+            # and the caller's config object is never mutated (a factory
+            # may hand the same tuned config to every controller —
+            # install the bound on a per-request replacement instead).
+            ccfg = getattr(controller, "config", None)
+            if (dataclasses.is_dataclass(ccfg)
+                    and getattr(ccfg, "slo_tpot", 0) is None):
+                bound_cfg = dataclasses.replace(ccfg, slo_tpot=slo.tpot)
+                controller.config = bound_cfg
+                mgr = getattr(controller, "manager", None)
+                if mgr is not None and getattr(mgr, "cfg", None) is ccfg:
+                    mgr.cfg = bound_cfg
         drafter = self.drafter_factory()
         drafter.reset()
         # the first request consumes exactly the legacy engine's rng stream
@@ -500,6 +528,10 @@ class BatchedEngine:
         t_submit = self.now if submit_time is None else float(submit_time)
         tel = RequestTelemetry(request_id=request_id, task=task,
                                prompt_len=len(prompt))
+        if slo is not None:
+            tel.tier = slo.tier
+            tel.slo_tpot = slo.tpot
+            tel.slo_ttft = slo.ttft
 
         if self.chunk > 0 and enc_out is None:
             # non-blocking admission: no forward pass here; the row's cache
@@ -510,7 +542,7 @@ class BatchedEngine:
                 controller=controller, drafter=drafter, rng=rng, tel=tel,
                 history=list(prompt), out=[], last_tok=-1,
                 phase="prefill", prompt=list(prompt),
-                t_submit=t_submit, seq=n)
+                t_submit=t_submit, seq=n, slo=slo)
             self._joined_since_step += 1
             return idx
 
@@ -534,7 +566,7 @@ class BatchedEngine:
             index=idx, request_id=request_id, task=task, max_new=max_new,
             stop_token=stop_token, controller=controller, drafter=drafter,
             rng=rng, tel=tel, history=list(prompt) + [first], out=[first],
-            last_tok=first, t_submit=t_submit, seq=n)
+            last_tok=first, t_submit=t_submit, seq=n, slo=slo)
         self._maybe_finish(slot,
                            stopped=stop_token is not None
                            and first == stop_token)
@@ -651,7 +683,9 @@ class BatchedEngine:
             prefill_tokens=chunk_plan,
             shard_weights=({i: self._shard_profiles[i] for i in decode_rows
                             if i in self._shard_profiles}
-                           if self._ep else None))
+                           if self._ep else None),
+            slos={i: slots[i].slo for i in decode_rows
+                  if slots[i].slo is not None})
         k_req, drafts, draft_probs, wall_draft = {}, {}, {}, {}
         for i in decode_rows:
             s = slots[i]
@@ -763,6 +797,7 @@ class BatchedEngine:
 
         # 7. feed back per request; advance token state
         emitted_by_slot = {}
+        step_iter_tel = {}   # this step's records, for the t_pass backfill
         occupancy = len(spans)
         n_tokens = sum(tokens_per_row)
         padded = occupancy * t_max - n_tokens
@@ -790,7 +825,7 @@ class BatchedEngine:
                                  t_verify=t_verify, t_sample=t_sample,
                                  k=k_eff if k_req[i] > 0 else 0,
                                  batch=occupancy)
-            s.tel.iterations.append(IterationTelemetry(
+            step_iter_tel[i] = IterationTelemetry(
                 iteration=s.iteration, k_requested=k_req[i],
                 k_drafted=k_eff, tokens_emitted=len(emitted),
                 t_iter=t_iter, t_draft=t_draft, t_verify=t_verify,
@@ -804,7 +839,9 @@ class BatchedEngine:
                 union_experts=union or 0.0,
                 padding_frac=padded / (n_tokens + padded) if n_tokens else 0.0,
                 k_granted=plan.decisions[i].granted,
-                plan_held=plan.decisions[i].held))
+                plan_held=plan.decisions[i].held,
+                slo_capped=plan.decisions[i].slo_capped)
+            s.tel.iterations.append(step_iter_tel[i])
             s.iteration += 1
             emitted_by_slot[i] = emitted
             self._maybe_finish(s, stopped=stopped)
@@ -848,12 +885,17 @@ class BatchedEngine:
             t_step_predicted=plan.t_predicted,
             t_base_predicted=plan.t_base,
             tokens_predicted=plan.tokens_predicted,
+            slo_denied=plan.slo_denied,
             shard_experts=tuple(cost.get("shard_unique", ())),
             max_shard_experts=cost.get("max_shard_experts", 0.0),
             hot_shard=cost.get("hot_shard", -1),
             shard_imbalance=cost.get("imbalance", 1.0),
             t_a2a=cost.get("t_a2a", 0.0))
         self.telemetry.steps.append(step_tel)
+        # every decode row experienced the WHOLE pass between its tokens —
+        # the latency quantity SLOs bound (vs t_iter's attributed share)
+        for it_tel in step_iter_tel.values():
+            it_tel.t_pass = step_tel.t_total
         self.now += step_tel.t_total
         for i in finished_prefill:  # first token exists as of end-of-step
             s = slots[i]

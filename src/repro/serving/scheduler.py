@@ -20,6 +20,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, Iterable, List, Optional
 
+from repro.core.slo import LATENCY, RequestSLO
+
 from .engine import BatchedEngine, GenerationResult, ServingEngine
 from .telemetry import planner_aggregates
 
@@ -32,6 +34,10 @@ class Request:
     task: str = ""
     enc_out: object = None
     stop_token: Optional[int] = None
+    #: latency objective (docs/slo.md): a TPOT/TTFT bound plus tier.
+    #: Latency-tier requests are admitted ahead of FIFO when a slot frees,
+    #: and their TPOT bound constrains the planner's joint allocation.
+    slo: Optional[RequestSLO] = None
 
 
 @dataclass
@@ -107,9 +113,20 @@ class ContinuousBatchingScheduler:
         # covers the scheduler's own queue, not just the slot table
         self._submit_time[req.request_id] = getattr(self.engine, "now", 0.0)
 
+    def _pop_next(self) -> Request:
+        """Tier-aware admission: the first latency-tier request jumps the
+        queue (FIFO within each tier); with no latency-tier requests
+        waiting, this is plain FIFO — byte-identical to the pre-SLO
+        scheduler."""
+        for n, r in enumerate(self.queue):
+            if r.slo is not None and r.slo.tier == LATENCY:
+                del self.queue[n]
+                return r
+        return self.queue.popleft()
+
     def _admit(self) -> None:
         while self.queue and self.engine.free_slots:
-            req = self.queue.popleft()
+            req = self._pop_next()
             ctl = (self.controller_factory() if self.controller_factory
                    else None)
             idx = self.engine.join(req.prompt, req.max_new, controller=ctl,
@@ -117,7 +134,8 @@ class ContinuousBatchingScheduler:
                                    stop_token=req.stop_token,
                                    enc_out=req.enc_out,
                                    submit_time=self._submit_time.get(
-                                       req.request_id))
+                                       req.request_id),
+                                   slo=req.slo)
             self._slot_req[idx] = req.request_id
 
     def _retire_finished(self) -> None:
@@ -191,9 +209,45 @@ class ContinuousBatchingScheduler:
         grant ratio (granted/requested drafts — 1.0 under
         policy="independent" by construction), outright preemptions, TEST
         trials postponed by phase staggering, the planner's
-        predicted-vs-measured step-time calibration error, and — under an
-        EP placement (docs/expert_parallel.md) — the mean max/mean-shard
-        activation imbalance plus how persistently one shard gated the
-        pass (`hot_shard_frac`)."""
+        predicted-vs-measured step-time calibration error, row-steps whose
+        grants an SLO constraint capped (`slo_denied`, docs/slo.md), and —
+        under an EP placement (docs/expert_parallel.md) — the mean
+        max/mean-shard activation imbalance plus how persistently one
+        shard gated the pass (`hot_shard_frac`)."""
         return planner_aggregates(
             self.engine.telemetry.steps[self._steps_start:])
+
+    # -- SLO figures of merit (docs/slo.md) ----------------------------- #
+
+    def tier_stats(self) -> Dict[str, dict]:
+        """Per-tier latency/throughput figures over finished requests:
+        request count, emitted tokens, mean/p95 *experienced* TPOT (the
+        pass time a request waits out between token batches — the quantity
+        `RequestSLO.tpot` bounds), mean TTFT, and how many requests
+        violated their own TPOT/TTFT bound."""
+        tiers: Dict[str, list] = {}
+        for r in self.results:
+            tiers.setdefault(r.telemetry.tier, []).append(r.telemetry)
+        out = {}
+        for tier, tels in tiers.items():
+            tpots = sorted(t.experienced_tpot for t in tels
+                           if t.output_tokens)
+            p95 = (tpots[min(int(0.95 * (len(tpots) - 1) + 0.999999),
+                             len(tpots) - 1)] if tpots else 0.0)
+            out[tier] = {
+                "n": len(tels),
+                "tokens": sum(t.output_tokens for t in tels),
+                "mean_tpot": sum(tpots) / len(tpots) if tpots else 0.0,
+                "p95_tpot": p95,
+                "max_tpot": tpots[-1] if tpots else 0.0,
+                "mean_ttft": sum(t.ttft for t in tels) / len(tels),
+                "tpot_violations": sum(t.slo_tpot_violated for t in tels),
+                "ttft_violations": sum(t.slo_ttft_violated for t in tels),
+            }
+        return out
+
+    def slo_violations(self) -> int:
+        """Finished requests whose experienced TPOT or TTFT exceeded their
+        own bound (0 without bounded requests)."""
+        return sum(r.telemetry.slo_tpot_violated
+                   + r.telemetry.slo_ttft_violated for r in self.results)

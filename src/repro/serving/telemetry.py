@@ -30,6 +30,12 @@ class IterationTelemetry:
     # -- batch-planner fields (k_granted == k_requested off-planner) ------ #
     k_granted: int = 0         # planner's joint allocation for this request
     plan_held: bool = False    # TEST trial postponed by phase staggering
+    # -- SLO fields (docs/slo.md; defaults = unconstrained request) ------- #
+    t_pass: float = 0.0        # the WHOLE shared pass's seconds (verify +
+                               # slowest draft/sample) — the latency this
+                               # request experienced waiting the pass out,
+                               # as opposed to t_iter's attributed share
+    slo_capped: bool = False   # a grant to this row was denied by an SLO
 
 
 @dataclass
@@ -57,6 +63,7 @@ class StepTelemetry:
     t_step_predicted: float = 0.0  # planner's predicted pass seconds
     t_base_predicted: float = 0.0  # predicted no-speculation pass seconds
     tokens_predicted: float = 0.0  # planner's predicted decode emissions
+    slo_denied: int = 0        # rows whose grants an SLO constraint capped
     # -- EP-shard fields (defaults = unsharded deployment) ---------------- #
     shard_experts: tuple = ()  # per-shard activated experts (mean layers)
     max_shard_experts: float = 0.0  # the gating shard's activated experts
@@ -89,6 +96,10 @@ class RequestTelemetry:
     ttft: float = 0.0          # submit -> first output token, engine clock
     prefill_chunks: int = 0    # chunks the prompt was admitted in (0 =
                                # legacy single-shot blocking prefill)
+    # -- SLO identity (docs/slo.md; defaults = unconstrained request) ----- #
+    tier: str = "throughput"   # scheduling tier ("latency" | "throughput")
+    slo_tpot: Optional[float] = None   # TPOT bound of the request, if any
+    slo_ttft: Optional[float] = None   # TTFT bound of the request, if any
 
     # ------------------------------------------------------------------ #
 
@@ -102,9 +113,40 @@ class RequestTelemetry:
 
     @property
     def tpot(self) -> float:
-        """Time per output token (paper's figure of merit)."""
+        """Time per output token (paper's figure of merit): attributed
+        cost share per token — what this request's decoding cost the
+        cluster."""
         n = self.output_tokens
         return self.decode_time / n if n else float("inf")
+
+    @property
+    def experienced_tpot(self) -> float:
+        """Time per output token the *user* experienced: under continuous
+        batching a request waits out the whole shared pass between its
+        token batches, so its inter-token latency is the pass time — not
+        its attributed cost share, which deliberately charges expert bytes
+        to whoever dragged them in. This is the quantity `RequestSLO.tpot`
+        bounds and the planner's SLO constraint predicts (docs/slo.md).
+        Falls back to the attributed `tpot` for records without a pass
+        time (the single-request engine, where the two coincide)."""
+        n = self.output_tokens
+        if not n:
+            return float("inf")
+        t = sum(it.t_pass for it in self.iterations)
+        return t / n if t > 0 else self.tpot
+
+    @property
+    def slo_tpot_violated(self) -> bool:
+        """True when this request's experienced TPOT exceeded its bound
+        (False without a bound — the shared no-bound-passes rule)."""
+        from repro.core.slo import tpot_within
+        return not tpot_within(self.slo_tpot, self.experienced_tpot)
+
+    @property
+    def slo_ttft_violated(self) -> bool:
+        from repro.core.slo import tpot_within
+        return not tpot_within(self.slo_ttft, self.ttft if self.ttft > 0
+                               else None)
 
     @property
     def etr(self) -> float:
@@ -182,6 +224,12 @@ class EngineTelemetry:
         return planner_aggregates(self.steps)["plan_time_error"]
 
     @property
+    def slo_denied(self) -> int:
+        """Row-steps whose grants an SLO constraint capped (victim
+        protection engaging; 0 without bounded requests)."""
+        return planner_aggregates(self.steps)["slo_denied"]
+
+    @property
     def mean_shard_imbalance(self) -> float:
         """Mean max-shard/mean-shard activated-expert ratio over sharded
         steps (1.0 = perfectly balanced, or no EP placement)."""
@@ -218,4 +266,5 @@ def planner_aggregates(steps) -> dict:
         "mean_shard_imbalance": (sum(s.shard_imbalance for s in sharded)
                                  / len(sharded) if sharded else 1.0),
         "hot_shard_frac": hot_frac,
+        "slo_denied": sum(s.slo_denied for s in steps),
     }

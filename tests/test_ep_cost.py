@@ -397,3 +397,95 @@ def test_engine_sharded_telemetry_consistent(tiny_moe):
     # greedy decoding stays lossless under sharded pricing
     r_none, _ = _run_sched(cfg, params, None, 0.0)
     assert [r.tokens for r in res] == [r.tokens for r in r_none]
+
+
+# ===================================================================== #
+# Hot-expert replication: min-over-replicas pricing
+# ===================================================================== #
+
+def test_replicated_placement_contract():
+    pl = ExpertPlacement.contiguous(8, 4)
+    pr = pl.replicate({0: 1, 1: (2, 3)})
+    assert pr.has_replication and not pl.has_replication
+    assert pr.primary_shard_of == pl.shard_of        # homes unchanged
+    assert pr.counts == pl.counts                    # activation population
+    assert pr.resident_counts == (2, 3, 3, 3)        # replicas add bytes
+    assert pr.n_shards == 4 and pr.num_experts == 8
+    assert pr.replication_groups == ((0, (1,), 1), (0, (2, 3), 1))
+    # direct construction: tuple entries are replica sets, primary first
+    mixed = ExpertPlacement(((0, 1), 1))
+    assert mixed.primary_shard_of == (0, 1)
+    with pytest.raises(ValueError):
+        ExpertPlacement(((0, 0), 1))                 # duplicate replica
+    with pytest.raises(ValueError):
+        pl.replicate({0: 7})                         # beyond the shards
+    with pytest.raises(ValueError):
+        pl.replicate({99: 1})                        # no such expert
+    with pytest.raises(ValueError):
+        ExpertPlacement(((0, 2), 0))                 # shard 1 unresident
+
+
+def test_replication_relieves_the_gating_shard_concretely():
+    """All of hot shard 0's experts replicated onto cold shard 3: the
+    activated load spreads and the gating count drops toward balance,
+    while the union is conserved."""
+    pl = ExpertPlacement.zipf(8, 4, alpha=2.0)       # shard 0 hot
+    hot_experts = [e for e, s in enumerate(pl.shard_of) if s == 0]
+    pr = pl.replicate({e: 3 for e in hot_experts})
+    base = expected_unique_experts_sharded(8, 2, [6, 6], pl)
+    rep = expected_unique_experts_sharded(8, 2, [6, 6], pr)
+    assert rep["max_shard"] < base["max_shard"]
+    assert rep["union"] == pytest.approx(base["union"], rel=1e-9)
+    # and the priced pass is cheaper: the hottest shard gates it
+    hw = Hardware("mem", hbm_bw=1e9, peak_flops=1e14, ici_bw=5e8)
+    import dataclasses
+    cfg = dataclasses.replace(CFG, num_experts=8)
+    t_base = batch_iteration_time(cfg, hw, [6, 6], [100, 100],
+                                  placement=pl)["t_iter"]
+    t_rep = batch_iteration_time(cfg, hw, [6, 6], [100, 100],
+                                 placement=pr)["t_iter"]
+    assert t_rep < t_base
+
+
+@settings(max_examples=60, deadline=None)
+@given(ns=st.lists(st.integers(0, 9), min_size=1, max_size=5),
+       aff=st.floats(0.0, 1.0), seed=st.integers(0, 10 ** 6))
+def test_replication_never_increases_gating_shard(ns, aff, seed):
+    """The satellite property: ANY replication added to ANY placement can
+    only lower (or keep) the gating shard's expected activated count and
+    the priced pass time — min-over-replicas is a relief, never a tax.
+    Union and per-request profiles are preserved."""
+    rng = np.random.default_rng(seed)
+    s = int(rng.integers(2, 5))
+    e = s * int(rng.integers(1, 6))
+    k = int(rng.integers(1, min(e, 8) + 1))
+    pl = _placement(e, s, str(rng.choice(["contiguous", "zipf"])))
+    reps = {}
+    for ex in range(e):
+        if rng.integers(3) == 0:
+            extra = [x for x in range(s) if x != pl.shard_of[ex]]
+            take = int(rng.integers(1, len(extra) + 1))
+            reps[ex] = tuple(rng.choice(extra, take, replace=False)
+                             .tolist())
+    pr = pl.replicate(reps) if reps else pl
+    sw = (rng.dirichlet(np.ones(s), size=len(ns)).tolist()
+          if rng.integers(2) else None)
+    base = expected_unique_experts_sharded(e, k, ns, pl, aff,
+                                           shard_weights=sw)
+    rep = expected_unique_experts_sharded(e, k, ns, pr, aff,
+                                          shard_weights=sw)
+    assert rep["max_shard"] <= base["max_shard"] + 1e-9
+    assert rep["union"] == pytest.approx(base["union"], rel=1e-9, abs=1e-12)
+    # oracle pricing agrees with batch_iteration_time under replication
+    import dataclasses
+    cfg = dataclasses.replace(CFG, num_experts=e)
+    hw = HWS[seed % len(HWS)]
+    cls = [int(rng.integers(8, 200)) for _ in ns]
+    oracle = BatchCostOracle(cfg, hw, cls, affinity=aff, placement=pr,
+                             shard_weights=sw)
+    ref = batch_iteration_time(cfg, hw, ns, cls, affinity=aff,
+                               placement=pr, shard_weights=sw)
+    assert oracle.t_batch(ns) == ref["t_iter"]
+    assert ref["t_iter"] <= batch_iteration_time(
+        cfg, hw, ns, cls, affinity=aff, placement=pl,
+        shard_weights=sw)["t_iter"] + 1e-12

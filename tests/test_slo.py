@@ -1,0 +1,609 @@
+"""SLO-constrained joint grants (docs/slo.md): the `RequestSLO` contract
+and shared predicate, the constraint-pipeline water-filling's bit-identity
+with the pre-pipeline implementation when no SLOs are set, the victim-
+protection invariant (a granted allocation never pushes any co-scheduled
+bounded request's predicted TPOT past max(bound, no-spec TPOT)), the
+latency-weighted water level, tier-aware admission, the manager downclimb
+regression, and the flag-gated per-position acceptance curve. Property-
+based tests use hypothesis (or the in-repo fallback)."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic in-repo fallback (requirements-dev.txt)
+    from tests._hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core import (BatchCostOracle, BatchSpecPlanner,
+                        BreakEvenConstraint, CascadeConfig,
+                        CascadeController, DraftYieldModel, Hardware,
+                        IterationRecord, PlannerConfig, RequestSLO,
+                        SLOTpotConstraint, SpeculationManager, TPU_V5E,
+                        UtilityAnalyzer, expected_emitted,
+                        expected_emitted_curve, greedy_allocate,
+                        tpot_within)
+from repro.core.manager import SET, TEST
+from repro.core.slo import LATENCY, THROUGHPUT
+
+CFG = get_config("mixtral-8x7b").reduced()
+
+# the same four regimes the planner tests price across (test_planner.py)
+HWS = [TPU_V5E,
+       Hardware("slowmem", hbm_bw=1e9, peak_flops=197e12),
+       Hardware("slowflops", hbm_bw=819e9, peak_flops=2e9),
+       Hardware("crossover", hbm_bw=1e9, peak_flops=6e9)]
+
+
+# ===================================================================== #
+# RequestSLO contract + the one shared predicate
+# ===================================================================== #
+
+def test_request_slo_contract():
+    assert RequestSLO().tier == THROUGHPUT
+    assert RequestSLO.latency(tpot=0.1).is_latency_tier
+    with pytest.raises(ValueError):
+        RequestSLO(tier="gold")
+    with pytest.raises(ValueError):
+        RequestSLO(tpot=0.0)
+    with pytest.raises(ValueError):
+        RequestSLO(ttft=-1.0)
+
+
+def test_tpot_within_is_the_shared_predicate():
+    # None bound / None estimate always pass; otherwise <= decides
+    assert tpot_within(None, 5.0) and tpot_within(0.1, None)
+    assert tpot_within(0.1, 0.1) and not tpot_within(0.1, 0.100001)
+
+
+def test_manager_slo_allows_delegates_to_predicate():
+    """The manager's measured trial gate and the planner's predicted grant
+    constraint must share one comparison rule — same boundary behaviour
+    (tpot == bound passes)."""
+    mgr = SpeculationManager(cfg=CascadeConfig(slo_tpot=0.5))
+    for _ in range(4):
+        mgr.analyzer.observe(IterationRecord(k=0, tokens=1, t_iter=1.0))
+    for _ in range(4):   # measured TPOT at K=2: exactly 0.5 s/token
+        mgr.analyzer.observe(IterationRecord(k=2, tokens=2, t_iter=1.0))
+    assert mgr._slo_allows(2)                  # boundary: == bound passes
+    for _ in range(8):   # now 1.5/2 = 0.75 > bound
+        mgr.analyzer.observe(IterationRecord(k=2, tokens=2, t_iter=1.5))
+    assert not mgr._slo_allows(2)
+
+
+# ===================================================================== #
+# Satellite regression: the SLO downclimb must disable, not settle on a
+# k_min that itself violates the bound
+# ===================================================================== #
+
+def _mgr_with_all_k_violating(k_min=1):
+    """A manager whose measured TPOT violates the bound at EVERY K>0: each
+    K emits 1 token in 1.0s (bound 0.5), so no downclimb target is legal."""
+    mgr = SpeculationManager(cfg=CascadeConfig(slo_tpot=0.5, k_min=k_min))
+    for _ in range(4):
+        mgr.analyzer.observe(IterationRecord(k=0, tokens=1, t_iter=0.4))
+    for k in range(1, mgr.cfg.k_max + 1):
+        for _ in range(4):
+            mgr.analyzer.observe(IterationRecord(k=k, tokens=1, t_iter=1.0))
+    return mgr
+
+
+def test_downclimb_returns_none_when_k_min_violates_slo():
+    """Regression: `_next_trial_k`'s SLO downclimb used to bottom out AT
+    k_min and return it even when k_min itself fails the bound — trialing
+    a K the manager already measured as SLO-breaking. It must disable
+    (None) instead."""
+    mgr = _mgr_with_all_k_violating()
+    mgr.phase = TEST
+    mgr._trials = [(3, 1.2)]   # utility fine — only the SLO blocks
+    mgr._trials_done = 1
+    assert mgr._next_trial_k() is None
+    # and the full FSM settles on K=0 (disabled), never trialing k_min
+    mgr2 = _mgr_with_all_k_violating()
+    mgr2.phase = TEST
+    mgr2._k_now = 3
+    mgr2._phase_left = 1
+    mgr2._trials, mgr2._trials_done, mgr2._trial_records = [], 0, []
+    mgr2.observe(IterationRecord(k=3, tokens=2, t_iter=1.0))
+    assert mgr2.phase == SET and mgr2._k_now == 0
+
+
+def test_downclimb_still_finds_a_legal_lower_k():
+    """Non-regression: when some lower K satisfies the bound, the
+    downclimb must still land on it (not over-disable)."""
+    mgr = SpeculationManager(cfg=CascadeConfig(slo_tpot=0.5, k_min=1))
+    for _ in range(4):
+        mgr.analyzer.observe(IterationRecord(k=0, tokens=1, t_iter=0.4))
+    for _ in range(4):       # K=1 fine: 0.45 s/token
+        mgr.analyzer.observe(IterationRecord(k=1, tokens=2, t_iter=0.9))
+    for k in (2, 3):         # K=2 and K=3 violate: 1.0 s/token
+        for _ in range(4):
+            mgr.analyzer.observe(IterationRecord(k=k, tokens=1, t_iter=1.0))
+    mgr.phase = TEST
+    # single improving trial at K=2 -> hill-climb proposes 3; the SLO
+    # downclimb walks 3 -> 2 -> 1, and 1 is legal and untested
+    mgr._trials = [(2, 1.2)]
+    mgr._trials_done = 1
+    nxt = mgr._next_trial_k()
+    assert nxt == 1 and mgr._slo_allows(nxt)
+
+
+# ===================================================================== #
+# Tentpole: the constraint pipeline is the pre-pipeline water-filling,
+# bit for bit, when no SLOs are set
+# ===================================================================== #
+
+def _reference_water_filling(oracle, base_ns, decode, caps, accepts, *,
+                             fixed=frozenset(), util_floor=1.0):
+    """VERBATIM pre-pipeline implementation (PR 4's greedy_allocate) — the
+    reference the refactored pipeline must reproduce exactly."""
+    ns = list(base_ns)
+    alloc = {i: 0 for i in decode}
+    t_base = oracle.t_batch(ns)
+    r_floor = (util_floor * len(decode) / t_base) if decode else 0.0
+    for i in fixed:
+        alloc[i] = caps[i]
+        ns[i] += caps[i]
+    t_cur = oracle.t_batch(ns)
+    while True:
+        best, best_rate = None, 0.0
+        for i in decode:
+            if i in fixed or alloc[i] >= caps[i]:
+                continue
+            d_tok = accepts[i] ** (alloc[i] + 1)
+            ns[i] += 1
+            d_t = oracle.t_batch(ns) - t_cur
+            ns[i] -= 1
+            rate = (d_tok / d_t) if d_t > 0 else float("inf")
+            if best is None or rate > best_rate:
+                best, best_rate = i, rate
+        if best is None or best_rate < r_floor:
+            break
+        alloc[best] += 1
+        ns[best] += 1
+        t_cur = oracle.t_batch(ns)
+    return alloc, {"t_base": t_base, "t_alloc": t_cur, "r_floor": r_floor}
+
+
+@settings(max_examples=60, deadline=None)
+@given(b=st.integers(1, 5), seed=st.integers(0, 10 ** 6),
+       floor=st.floats(0.0, 2.0))
+def test_pipeline_bit_identical_to_reference_without_slos(b, seed, floor):
+    """The tentpole's degradation clause: with no SLO constraints the
+    pipeline's allocation AND info floats equal the pre-pipeline loop
+    exactly — grants, water level, priced times. Fixed (pinned-trial)
+    rows included."""
+    rng = np.random.default_rng(seed)
+    hw = HWS[seed % len(HWS)]
+    cls = [int(rng.integers(8, 400)) for _ in range(b)]
+    caps = {i: int(rng.integers(0, 6)) for i in range(b)}
+    accepts = {i: float(rng.uniform(0.0, 0.99)) for i in range(b)}
+    decode = list(range(b))
+    fixed = frozenset(i for i in decode
+                      if caps[i] > 0 and rng.integers(4) == 0)
+    oracle = BatchCostOracle(CFG, hw, cls,
+                             affinity=float(rng.choice([0.0, 0.3, 0.9])))
+    ref_alloc, ref_info = _reference_water_filling(
+        oracle, [1] * b, decode, caps, accepts, fixed=fixed,
+        util_floor=floor)
+    alloc, info = greedy_allocate(oracle, [1] * b, decode, caps, accepts,
+                                  fixed=fixed, util_floor=floor)
+    assert alloc == ref_alloc
+    for key in ("t_base", "t_alloc", "r_floor"):
+        assert info[key] == ref_info[key], key
+    assert info["denied"].get("slo_tpot", set()) == set()
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=st.integers(2, 5), seed=st.integers(0, 10 ** 6))
+def test_unbounded_slo_constraint_changes_nothing(b, seed):
+    """An SLOTpotConstraint with no bounds (every request unbounded) must
+    be provably inert: identical allocation to the default pipeline."""
+    rng = np.random.default_rng(seed)
+    hw = HWS[seed % len(HWS)]
+    cls = [int(rng.integers(8, 400)) for _ in range(b)]
+    caps = {i: int(rng.integers(0, 6)) for i in range(b)}
+    accepts = {i: float(rng.uniform(0.0, 0.99)) for i in range(b)}
+    oracle = BatchCostOracle(CFG, hw, cls, affinity=0.3)
+    a1, _ = greedy_allocate(oracle, [1] * b, list(range(b)), caps, accepts)
+    a2, _ = greedy_allocate(
+        oracle, [1] * b, list(range(b)), caps, accepts,
+        constraints=[BreakEvenConstraint(), SLOTpotConstraint(bounds={})])
+    assert a1 == a2
+
+
+# ===================================================================== #
+# Victim protection: the property the SLO constraint guarantees
+# ===================================================================== #
+
+def _predicted_tpots(oracle, base_ns, decode, alloc, accepts):
+    ns = list(base_ns)
+    for i in decode:
+        ns[i] += alloc[i]
+    emitted = [expected_emitted(accepts[i], alloc[i]) if i in alloc else 0.0
+               for i in range(len(base_ns))]
+    return oracle.predicted_tpot(ns, emitted)
+
+
+@settings(max_examples=60, deadline=None)
+@given(b=st.integers(2, 5), seed=st.integers(0, 10 ** 6),
+       slack=st.floats(1.0, 2.0))
+def test_granted_allocation_never_breaks_a_feasible_bound(b, seed, slack):
+    """Property (the ISSUE's test b): after water-filling under
+    SLOTpotConstraint, NO bounded request's predicted TPOT exceeds
+    max(bound, its no-speculation TPOT) — co-scheduled victims included,
+    whoever the grants went to. Bounds are sampled around the no-spec
+    pass so some bind and some don't."""
+    rng = np.random.default_rng(seed)
+    hw = HWS[seed % len(HWS)]
+    cls = [int(rng.integers(8, 400)) for _ in range(b)]
+    caps = {i: int(rng.integers(0, 6)) for i in range(b)}
+    accepts = {i: float(rng.uniform(0.0, 0.99)) for i in range(b)}
+    decode = list(range(b))
+    oracle = BatchCostOracle(CFG, hw, cls, affinity=0.3)
+    base_ns = [1] * b
+    t_zero = oracle.t_batch(base_ns)
+    base_tpot = _predicted_tpots(oracle, base_ns, decode,
+                                 {i: 0 for i in decode}, accepts)
+    bounds = {i: float(t_zero * rng.uniform(0.8, slack)) for i in decode
+              if rng.integers(2)}
+    alloc, _ = greedy_allocate(
+        oracle, base_ns, decode, caps, accepts,
+        constraints=[BreakEvenConstraint(),
+                     SLOTpotConstraint(bounds=bounds)])
+    tpots = _predicted_tpots(oracle, base_ns, decode, alloc, accepts)
+    for j, bound in bounds.items():
+        assert tpots[j] <= max(bound, base_tpot[j]) + 1e-12, (
+            j, tpots[j], bound, base_tpot[j], alloc)
+
+
+def test_slo_denies_victim_harming_grants_not_just_grantee():
+    """The motivating scenario: a bounded latency request co-scheduled
+    with eager throughput requests. Unconstrained water-filling grants
+    push the pass past the victim's bound; the SLO pipeline denies those
+    grants even though the victim itself asked for nothing."""
+    hw = Hardware("crossover", hbm_bw=1e9, peak_flops=6e9)
+    oracle = BatchCostOracle(CFG, hw, [128] * 4, affinity=0.0)
+    decode = [0, 1, 2, 3]
+    caps = {0: 0, 1: 6, 2: 6, 3: 6}       # row 0: the quiet victim
+    accepts = {0: 0.5, 1: 0.9, 2: 0.9, 3: 0.9}
+    base_ns = [1] * 4
+    free, _ = greedy_allocate(oracle, base_ns, decode, caps, accepts)
+    assert sum(free.values()) > 0          # speculation is worth it here
+    t_zero = oracle.t_batch(base_ns)
+    t_free = oracle.t_batch([1 + free.get(i, 0) for i in range(4)])
+    assert t_free > t_zero                 # ...and it lengthens the pass
+    # bound the victim between the no-spec pass and the free-for-all pass
+    bound = 0.5 * (t_zero + t_free)
+    con = SLOTpotConstraint(bounds={0: bound})
+    capped, info = greedy_allocate(
+        oracle, base_ns, decode, caps, accepts,
+        constraints=[BreakEvenConstraint(), con])
+    t_capped = oracle.t_batch([1 + capped.get(i, 0) for i in range(4)])
+    assert t_capped <= bound + 1e-12       # victim's TPOT = pass / 1
+    assert sum(capped.values()) < sum(free.values())
+    denied = info["denied"].get("slo_tpot", set())
+    assert denied and 0 not in denied      # others were denied, not row 0
+
+
+def test_infeasible_bound_denies_harm_without_deadlock():
+    """A bound below even the no-speculation pass cannot be met. The
+    escape clause then still permits the bounded row's OWN TPOT-improving
+    speculation (Theorem 4.2: its tokens-per-pass rise faster than the
+    pass lengthens) while denying the co-scheduled row's grants, which
+    only worsen the victim — and the loop terminates rather than
+    deadlocking on the unsatisfiable bound."""
+    hw = HWS[1]
+    oracle = BatchCostOracle(CFG, hw, [128, 128], affinity=0.0)
+    alloc, info = greedy_allocate(
+        oracle, [1, 1], [0, 1], {0: 4, 1: 4}, {0: 0.9, 1: 0.9},
+        constraints=[BreakEvenConstraint(),
+                     SLOTpotConstraint(bounds={0: 1e-12})])
+    assert alloc[1] == 0                      # the co-scheduled harm
+    assert 1 in info["denied"]["slo_tpot"]
+    # the victim's own grants never worsened it past its no-spec TPOT
+    tpots = _predicted_tpots(oracle, [1, 1], [0, 1], alloc,
+                             {0: 0.9, 1: 0.9})
+    base = _predicted_tpots(oracle, [1, 1], [0, 1], {0: 0, 1: 0},
+                            {0: 0.9, 1: 0.9})
+    assert tpots[0] <= base[0] + 1e-12
+
+
+def test_pinned_trial_demoted_when_probe_breaks_a_bound():
+    """SLO beats trial fidelity: a staggered TEST probe whose pinned K
+    would push a co-scheduled bounded request past its bound is demoted
+    to an ordinary water-filled candidate."""
+    hw = Hardware("crossover", hbm_bw=1e9, peak_flops=6e9)
+    oracle = BatchCostOracle(CFG, hw, [128, 128], affinity=0.0)
+    t_zero = oracle.t_batch([1, 1])
+    t_pinned = oracle.t_batch([1 + 6, 1])
+    bound = 0.5 * (t_zero + t_pinned)      # pinned probe breaks it
+    alloc, info = greedy_allocate(
+        oracle, [1, 1], [0, 1], {0: 6, 1: 0}, {0: 0.1, 1: 0.5},
+        fixed=frozenset([0]),
+        constraints=[BreakEvenConstraint(),
+                     SLOTpotConstraint(bounds={1: bound})])
+    assert alloc[0] < 6                    # probe no longer runs in full
+    assert 0 in info["denied"]["pinned"]
+    assert oracle.t_batch([1 + alloc[0], 1]) <= bound + 1e-12
+    # without the bound the same pin runs unmodified
+    free, _ = greedy_allocate(oracle, [1, 1], [0, 1], {0: 6, 1: 0},
+                              {0: 0.1, 1: 0.5}, fixed=frozenset([0]))
+    assert free[0] == 6
+
+
+def test_latency_weighted_water_level_grants_no_more():
+    """Mixed-tier traffic raises the water level: with a latency-tier row
+    weighted above 1, total grants never exceed the unweighted pipeline's
+    (same caps, same acceptance), and the weighted floor is higher."""
+    hw = Hardware("crossover", hbm_bw=1e9, peak_flops=6e9)
+    oracle = BatchCostOracle(CFG, hw, [128] * 4, affinity=0.0)
+    caps = {i: 4 for i in range(4)}
+    accepts = {i: 0.7 for i in range(4)}
+    plain, pi = greedy_allocate(oracle, [1] * 4, list(range(4)), caps,
+                                accepts)
+    weighted, wi = greedy_allocate(
+        oracle, [1] * 4, list(range(4)), caps, accepts,
+        constraints=[BreakEvenConstraint(weights={0: 4.0})])
+    assert wi["r_floor"] > pi["r_floor"]
+    assert sum(weighted.values()) <= sum(plain.values())
+
+
+def test_oracle_predicted_tpot_semantics():
+    """predicted_tpot = whole pass / per-request expected emissions; rows
+    with nothing to emit report inf; granting ANY row lengthens every
+    row's predicted TPOT (the victim effect the attribution split cannot
+    show)."""
+    oracle = BatchCostOracle(CFG, HWS[1], [128, 128], affinity=0.0)
+    before = oracle.predicted_tpot([1, 1], [1.0, 1.0])
+    assert before[0] == before[1] == oracle.t_batch([1, 1])
+    after = oracle.predicted_tpot([4, 1], [expected_emitted(0.8, 3), 1.0])
+    assert after[1] > before[1]            # victim pays for row 0's grant
+    assert oracle.predicted_tpot([1, 1], [1.0, 0.0])[1] == float("inf")
+
+
+# ===================================================================== #
+# Planner + engine plumbing
+# ===================================================================== #
+
+def _drive_to_test(mgr):
+    while mgr.phase != TEST:
+        k = mgr.next_k()
+        mgr.observe(IterationRecord(k=k, tokens=max(1, k), t_iter=1.0))
+
+
+def test_planner_plan_applies_slo_bounds():
+    """plan(slos=...) wires bounds into the pipeline: an infeasibly
+    bounded QUIET row (asking nothing itself) forces every co-scheduled
+    grant — pinned TEST probes included — to be denied and reported as
+    slo_denied; the same batch unbounded grants freely."""
+    hw = Hardware("crossover", hbm_bw=1e9, peak_flops=6e9)
+    planner = BatchSpecPlanner(CFG, hw,
+                               config=PlannerConfig(stagger_tests=False))
+
+    def controllers():
+        out = {0: CascadeController()}     # BASELINE: asks 0 (the victim)
+        for i in (1, 2):
+            c = CascadeController()
+            _drive_to_test(c.manager)
+            for _ in range(8):   # high-acceptance history
+                c.manager.analyzer.observe(
+                    IterationRecord(k=3, tokens=4, t_iter=1e-3))
+            out[i] = c
+        return out
+
+    free = planner.plan(controllers(), [64, 64, 64])
+    assert free.granted_total > 0 and free.slo_denied == 0
+    tight = planner.plan(controllers(), [64, 64, 64],
+                         slos={0: RequestSLO(tpot=1e-12)})
+    assert tight.granted_total == 0
+    assert tight.slo_denied > 0
+    assert any(d.slo_capped for d in tight.decisions.values())
+
+
+@pytest.mark.parametrize("batch", [1, 4])
+def test_engine_no_slo_bit_identical_to_unbounded_slo(tiny_moe, batch):
+    """Acceptance property (ISSUE test a): with no binding SLOs the whole
+    serving stack — token streams, per-request iteration telemetry, and
+    step telemetry, dataclass equality — is bit-identical whether the SLO
+    machinery is absent (slo=None) or engaged but unbounded
+    (RequestSLO() on every request), at B=1 and B=4."""
+    from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
+                               NGramDrafter, Request)
+    cfg, params = tiny_moe
+
+    def run(slo):
+        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=batch, max_len=256, temperature=0.0,
+                            clock="model", seed=0)
+        sched = ContinuousBatchingScheduler(
+            eng, controller_factory=lambda: CascadeController())
+        reqs = [Request(request_id=f"r{i}",
+                        prompt=[3 + i, 4 + i, 5 + i] * 6,
+                        max_new=10 + 2 * i, slo=slo) for i in range(5)]
+        return sched.run(reqs), eng
+
+    r_none, e_none = run(None)
+    r_un, e_un = run(RequestSLO())
+    assert [r.tokens for r in r_none] == [r.tokens for r in r_un]
+    assert len(e_none.telemetry.steps) == len(e_un.telemetry.steps)
+    for a, b in zip(e_none.telemetry.steps, e_un.telemetry.steps):
+        assert a == b            # every field, slo_denied == 0 included
+    for ra, rb in zip(r_none, r_un):
+        assert ra.telemetry.iterations == rb.telemetry.iterations
+        assert ra.telemetry.ttft == rb.telemetry.ttft
+
+
+def test_latency_tier_jumps_admission_queue(tiny_moe):
+    """Tier-aware admission: with the slot table full, a latency-tier
+    request submitted BEHIND throughput requests is admitted first when a
+    slot frees (FIFO within tiers; plain FIFO without latency traffic)."""
+    from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
+                               NGramDrafter, Request)
+    cfg, params = tiny_moe
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=1,
+                        max_len=256, temperature=0.0, clock="model", seed=0)
+    sched = ContinuousBatchingScheduler(
+        eng, controller_factory=lambda: CascadeController())
+    reqs = [Request(request_id="t0", prompt=[3, 4, 5] * 4, max_new=6),
+            Request(request_id="t1", prompt=[4, 5, 6] * 4, max_new=6),
+            Request(request_id="lat", prompt=[5, 6, 7] * 4, max_new=6,
+                    slo=RequestSLO.latency(tpot=10.0)),
+            Request(request_id="t2", prompt=[6, 7, 8] * 4, max_new=6)]
+    res = sched.run(reqs)
+    tel = {r.telemetry.request_id: r.telemetry for r in res}
+    # the latency request waited less than the earlier-submitted t1
+    assert tel["lat"].t_queue < tel["t1"].t_queue
+    assert tel["lat"].tier == LATENCY
+    stats = sched.tier_stats()
+    assert stats[LATENCY]["n"] == 1 and stats[THROUGHPUT]["n"] == 3
+    assert stats[LATENCY]["tpot_violations"] == 0
+    assert sched.slo_violations() == 0
+
+
+def test_engine_propagates_slo_tpot_to_cascade_config(tiny_moe):
+    from repro.serving import BatchedEngine, NGramDrafter
+    cfg, params = tiny_moe
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=2,
+                        max_len=256, temperature=0.0, clock="model")
+    idx = eng.join([3, 4, 5] * 4, 4, slo=RequestSLO.latency(tpot=0.25))
+    s = eng.slots[idx]
+    assert s.controller.config.slo_tpot == 0.25
+    assert s.tel.tier == LATENCY and s.tel.slo_tpot == 0.25
+    # an explicit CascadeConfig bound wins over the request's
+    own = CascadeController(CascadeConfig(slo_tpot=0.5))
+    idx2 = eng.join([4, 5, 6] * 4, 4, controller=own,
+                    slo=RequestSLO.latency(tpot=0.25))
+    assert eng.slots[idx2].controller.config.slo_tpot == 0.5
+    # the caller's config object is never mutated: a factory handing ONE
+    # shared tuned config to every controller must not have request A's
+    # bound leak into request B's FSM (regression)
+    shared = CascadeConfig()
+    eng.retire(idx)
+    idx3 = eng.join([5, 6, 7] * 4, 4,
+                    controller=CascadeController(shared),
+                    slo=RequestSLO.latency(tpot=0.125))
+    s3 = eng.slots[idx3]
+    assert shared.slo_tpot is None                  # untouched
+    assert s3.controller.config.slo_tpot == 0.125
+    assert s3.controller.manager.cfg.slo_tpot == 0.125  # FSM sees it too
+
+
+def test_mixed_tier_serving_meets_bound_end_to_end(tiny_moe):
+    """End-to-end on the crossover regime: unconstrained joint planning
+    pushes a quiet latency request past a feasible TPOT bound; with the
+    bound attached, every latency request meets it and the planner
+    reports the denials."""
+    from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
+                               NGramDrafter, Request)
+    cfg, params = tiny_moe
+    # deeper past the roofline than the sweep regime: the reduced model's
+    # trial-phase spans must add real compute time for the bound to bind
+    hw = Hardware("crossover-deep", hbm_bw=1e9, peak_flops=1.5e9)
+
+    def run(bound):
+        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=4, max_len=256, temperature=0.0,
+                            clock="model", seed=0, hw=hw)
+        sched = ContinuousBatchingScheduler(
+            eng, controller_factory=lambda: CascadeController())
+        reqs = []
+        for i in range(4):
+            # latency tier on even rows in BOTH runs (so the comparison
+            # differs only in the bound, not in tiering/weights)
+            slo = (RequestSLO.latency(tpot=bound) if i % 2 == 0 else None)
+            reqs.append(Request(request_id=f"r{i}",
+                                prompt=[3 + i, 4 + i, 5 + i] * 6,
+                                max_new=16, slo=slo))
+        res = sched.run(reqs)
+        lat = [r.telemetry.experienced_tpot for r in res
+               if r.telemetry.tier == LATENCY]
+        return lat, sched
+
+    free_tpots, _ = run(None)
+    # feasible-but-binding bound: between the zero-spec pass and what the
+    # unconstrained run actually inflicted on the latency rows
+    t_zero = BatchCostOracle(cfg, hw, [20] * 4).t_batch([1] * 4)
+    worst = max(free_tpots)
+    if worst <= t_zero * 1.05:
+        pytest.skip("regime did not inflate the pass enough to bind")
+    bound = 0.5 * (t_zero + worst)
+    tpots, sched = run(bound)
+    assert all(t <= bound * 1.05 for t in tpots), (tpots, bound)
+    assert sched.planner_stats()["slo_denied"] > 0
+
+
+# ===================================================================== #
+# Acceptance-model upgrade: per-position curve (flag-gated)
+# ===================================================================== #
+
+def test_accept_curve_estimates_per_position():
+    an = UtilityAnalyzer(window=16)
+    assert an.accept_curve(4) is None      # no speculative history
+    # records (k=3): tokens=4 -> all 3 accepted; tokens=2 -> pos0 ok,
+    # pos1 rejected, pos2 unreached; tokens=1 -> pos0 rejected
+    for tokens in (4, 2, 1):
+        an.observe(IterationRecord(k=3, tokens=tokens, t_iter=1.0))
+    curve = an.accept_curve(4)
+    assert curve[0] == pytest.approx(2 / 3)   # reached 3x, accepted 2x
+    assert curve[1] == pytest.approx(1 / 2)   # reached 2x, accepted 1x
+    assert curve[2] == pytest.approx(0.999)   # reached once, accepted (cap)
+    # position 3 never drafted -> falls back to the flat rate
+    assert curve[3] == an.accept_rate()
+    assert all(c <= 0.999 for c in curve)
+
+
+def test_accept_curve_catches_depth_decay():
+    """A depth-decaying history yields a decaying curve: the flat mean
+    under-prices shallow drafts and over-prices deep ones, which is
+    exactly the bias the curve-gated yield model removes."""
+    an = UtilityAnalyzer(window=64)
+    rng = np.random.default_rng(0)
+    for _ in range(48):
+        # position p accepted w.p. 0.9 - 0.25p: deep drafts mostly die
+        tokens = 1
+        for p in range(4):
+            if rng.random() < 0.9 - 0.25 * p:
+                tokens += 1
+            else:
+                break
+        an.observe(IterationRecord(k=4, tokens=tokens, t_iter=1.0))
+    curve = an.accept_curve(4, 64)
+    flat = an.accept_rate(64)
+    assert curve[0] > flat > curve[3]      # decay straddles the mean
+    ym_flat = DraftYieldModel({0: flat})
+    ym_curve = DraftYieldModel({0: flat}, {0: curve})
+    # the first draft is worth more than the flat mean says...
+    assert ym_curve.marginal(0, 0) > ym_flat.marginal(0, 0)
+    # ...and emitted matches the generalized series
+    assert ym_curve.emitted(0, 4) == pytest.approx(
+        expected_emitted_curve(curve, 4))
+
+
+def test_expected_emitted_curve_degrades_to_flat():
+    for a in (0.0, 0.3, 0.8):
+        for k in range(5):
+            assert expected_emitted_curve([a] * k, k) == pytest.approx(
+                expected_emitted(a, k), rel=1e-9)
+    assert expected_emitted_curve([], 3) == 1.0  # empty curve: no yield
+
+
+def test_use_accept_curve_flag_gated_b1_tokens_identical(tiny_moe):
+    """Flag on, B=1: the bypass keeps the token stream identical to the
+    flat path (grants == asks either way); default off is the bit-identity
+    baseline the pipeline tests pin."""
+    from repro.serving import BatchedEngine, NGramDrafter
+    cfg, params = tiny_moe
+    assert PlannerConfig().use_accept_curve is False
+
+    def run(flag):
+        planner = BatchSpecPlanner(
+            cfg, config=PlannerConfig(use_accept_curve=flag))
+        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=1, max_len=256, temperature=0.0,
+                            clock="model", seed=0, planner=planner)
+        return eng.generate([5, 6, 7, 8] * 6, max_new=24,
+                            controller=CascadeController())
+
+    assert run(True).tokens == run(False).tokens
