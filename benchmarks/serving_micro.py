@@ -715,6 +715,205 @@ def prefill_sweep(fast: bool = False, depths=(2, 8), chunks=None):
     return rows
 
 
+# --------------------------------------------------------------------- #
+# Kernel/calibration sweep (--calibrate): packed-vs-dense traffic by union
+# occupancy, wall-clock calibration of the analytic cost model, and the
+# packed-path bit-identity gate
+# --------------------------------------------------------------------- #
+
+def _occupancy_cfg():
+    """The reduced Mixtral widened to E=16 experts so the union-occupancy
+    axis has room below the 0.25 gate point (the stock reduced config's
+    E=4 saturates at two tokens)."""
+    import dataclasses
+    return dataclasses.replace(get_config("mixtral-8x7b").reduced(),
+                               num_experts=16)
+
+
+def _occupancy_sweep(fast: bool = False):
+    """Dense vs packed expert traffic and wall time by union occupancy.
+
+    For token counts T in {1..E/k..}, reports the packed path's bucketed
+    union cap U_pad, both paths' per-layer expert-weight bytes and FFN
+    FLOPs (`moe.moe_pass_counters` — dry-run counters that mirror what the
+    dispatch paths execute), and measured wall microseconds per apply.
+    Gates: at U/E <= 0.25 packed moves <= 0.35x the dense expert bytes;
+    packed traffic grows monotonically in U; at U = E packed and dense
+    counters agree exactly."""
+    from repro.models import moe
+    cfg = _occupancy_cfg()
+    params = moe.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    reps = 5 if fast else 20
+    rows = []
+    for t in (1, 2, 4, 8, 16):
+        cd = moe.moe_pass_counters(cfg, t, capacity_policy="exact",
+                                   packed=False)
+        cp = moe.moe_pass_counters(cfg, t, capacity_policy="exact",
+                                   packed=True)
+        x = jax.random.normal(jax.random.PRNGKey(t), (t, cfg.d_model),
+                              jnp.float32)
+
+        def _us(packed):
+            fn = jax.jit(lambda p, xx: moe.apply_moe(
+                cfg, p, xx, capacity_policy="exact", packed=packed)[0])
+            jax.block_until_ready(fn(params, x))   # compile
+            samples = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(params, x))
+                samples.append(time.perf_counter() - t0)
+            return float(np.median(samples) * 1e6)
+
+        row = {
+            "tokens": t,
+            "u_cap": cp["experts_streamed"],
+            "occupancy": cp["experts_streamed"] / cfg.num_experts,
+            "dense_expert_bytes": cd["expert_weight_bytes"],
+            "packed_expert_bytes": cp["expert_weight_bytes"],
+            "bytes_ratio": (cp["expert_weight_bytes"]
+                            / cd["expert_weight_bytes"]),
+            "dense_ffn_flops": cd["ffn_flops"],
+            "packed_ffn_flops": cp["ffn_flops"],
+            "dense_us": _us(False),
+            "packed_us": _us(True),
+        }
+        rows.append(row)
+        emit(f"serving_micro/kernel_T{t}_packed_bytes_ratio",
+             row["bytes_ratio"],
+             f"U={row['u_cap']}/{cfg.num_experts};"
+             f"packed={row['packed_us']:.0f}us;dense={row['dense_us']:.0f}us")
+
+    for r in rows:
+        if r["occupancy"] <= 0.25 and r["bytes_ratio"] > 0.35:
+            raise SystemExit(
+                f"packed path moved {r['bytes_ratio']:.2f}x the dense "
+                f"expert bytes at occupancy {r['occupancy']:.2f} "
+                "(gate: <= 0.35x at U/E <= 0.25)")
+    traffic = [r["packed_expert_bytes"] for r in rows]
+    if any(b2 < b1 for b1, b2 in zip(traffic, traffic[1:])):
+        raise SystemExit(f"packed expert traffic not monotone in U: "
+                         f"{traffic}")
+    full = [r for r in rows if r["u_cap"] == cfg.num_experts]
+    if not full:
+        raise SystemExit("occupancy sweep never reached U = E")
+    for r in full:
+        if (r["packed_expert_bytes"] != r["dense_expert_bytes"]
+                or r["packed_ffn_flops"] != r["dense_ffn_flops"]):
+            raise SystemExit(
+                f"packed != dense counters at U = E (T={r['tokens']}): "
+                f"{r['packed_expert_bytes']} vs {r['dense_expert_bytes']} "
+                f"bytes, {r['packed_ffn_flops']} vs "
+                f"{r['dense_ffn_flops']} FLOPs")
+    return {"num_experts": cfg.num_experts,
+            "experts_per_token": cfg.experts_per_token, "rows": rows}
+
+
+def _packed_stream_check(fast: bool = False):
+    """B=1 and B=4 packed-vs-dense emitted token streams must be
+    bit-identical: the packed path performs the same contractions in the
+    same dtype, so no numerics drift can reach rejection sampling."""
+    cfg = get_config("mixtral-8x7b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    max_new = 12 if fast else 24
+
+    def streams(b, packed):
+        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=b, max_len=512, temperature=0.0,
+                            clock="model", seed=0, packed=packed)
+        sched = ContinuousBatchingScheduler(
+            eng, controller_factory=lambda: CascadeController())
+        sched.run(_sweep_requests(cfg, max(b, 4), max_new))
+        return {r.telemetry.request_id: r.tokens for r in sched.results}
+
+    for b in (1, 4):
+        dense, packed = streams(b, False), streams(b, True)
+        if dense != packed:
+            diff = [k for k in dense if dense[k] != packed.get(k)]
+            raise SystemExit(
+                f"packed token streams diverged from dense at B={b} "
+                f"(requests {diff}) — numerics drift reached sampling")
+        emit(f"serving_micro/packed_B{b}_bit_identical", 1.0,
+             "must-be-1")
+    return True
+
+
+def _calibrate_planner(fast: bool = False):
+    """Fit `cost_model.Calibration` on the planner-sweep regime and verify
+    it: run the joint planner uncalibrated at B=8, fit scale/offset on the
+    per-step (predicted, measured) pairs, rerun with the calibrated
+    planner (util_floor widened by the post-fit residual,
+    `Calibration.adapted_util_floor`), and gate on mean `plan_time_error`
+    improving."""
+    from repro.core import cost_model as cm
+    from repro.core.planner import BatchSpecPlanner, PlannerConfig
+    cfg = get_config("mixtral-8x7b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    hw = _planner_hw()
+    b = 8
+    max_new = 16 if fast else 32
+
+    def run(planner=None):
+        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=b, max_len=512, temperature=0.0,
+                            clock="model", seed=0, hw=hw,
+                            policy=None if planner else "joint",
+                            planner=planner)
+        sched = ContinuousBatchingScheduler(
+            eng, controller_factory=lambda: CascadeController())
+        sched.run(_sweep_requests(cfg, b, max_new))
+        return eng, sched
+
+    eng0, sched0 = run()
+    steps = [s for s in eng0.telemetry.steps
+             if s.t_step > 0 and s.t_step_predicted]
+    err_before = sched0.planner_stats()["plan_time_error"]
+    cal = cm.Calibration.fit([s.t_step_predicted for s in steps],
+                             [s.t_step for s in steps],
+                             [s.t_a2a for s in steps])
+
+    planner = BatchSpecPlanner(
+        cfg, hw,
+        config=PlannerConfig(policy="joint",
+                             util_floor=cal.adapted_util_floor(1.0)),
+        calibration=cal)
+    eng1, sched1 = run(planner)
+    err_after = sched1.planner_stats()["plan_time_error"]
+
+    emit("serving_micro/calibrate_plan_time_error_before", err_before,
+         f"scale={cal.time_scale:.4f};offset={cal.time_offset:.2e}")
+    emit("serving_micro/calibrate_plan_time_error_after", err_after,
+         "must-be<before")
+    if err_before <= 0:
+        raise SystemExit("uncalibrated run reported zero plan_time_error — "
+                         "nothing to calibrate (regime mis-configured?)")
+    if err_after >= err_before:
+        raise SystemExit(
+            f"calibration did not improve plan_time_error: "
+            f"{err_after:.4f} after vs {err_before:.4f} before")
+    return {
+        "B": b, "max_new": max_new, "steps_fitted": len(steps),
+        "time_scale": cal.time_scale, "time_offset": cal.time_offset,
+        "a2a_scale": cal.a2a_scale,
+        "resid_before_fit": cal.resid_before,
+        "resid_after_fit": cal.resid_after,
+        "plan_time_error_before": err_before,
+        "plan_time_error_after": err_after,
+        "adapted_util_floor": cal.adapted_util_floor(1.0),
+    }
+
+
+def calibrate(fast: bool = False):
+    """--calibrate: the three kernel/calibration gates plus the committed
+    artifact (experiments/bench/serving_micro_kernel_sweep.json)."""
+    occupancy = _occupancy_sweep(fast)
+    _packed_stream_check(fast)
+    calibration = _calibrate_planner(fast)
+    save_json("serving_micro_kernel_sweep",
+              {"occupancy": occupancy, "calibration": calibration,
+               "packed_bit_identical": True})
+    return {"occupancy": occupancy, "calibration": calibration}
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -730,6 +929,10 @@ if __name__ == "__main__":
                          "global-union planning")
     ap.add_argument("--prefill-sweep", action="store_true",
                     help="queue depth x chunk size -> TTFT/TPOT sweep")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="packed-vs-dense traffic by union occupancy, "
+                         "packed bit-identity, and wall-clock calibration "
+                         "of the analytic cost model")
     ap.add_argument("--no-micro", action="store_true",
                     help="skip the single-call microbenchmarks")
     args = ap.parse_args()
@@ -745,3 +948,5 @@ if __name__ == "__main__":
         ep_sweep(fast=args.fast)
     if args.prefill_sweep:
         prefill_sweep(fast=args.fast)
+    if args.calibrate:
+        calibrate(fast=args.fast)

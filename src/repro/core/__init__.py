@@ -8,8 +8,9 @@ from .cost_model import (Hardware, TPU_V5E, RTX_6000_ADA,
                          expected_unique_experts_batch, iteration_bytes,
                          iteration_flops, iteration_time, draft_time,
                          sample_time, kv_bytes_per_token)
-from .cost_model import (BatchCostOracle, ExpertPlacement, a2a_bytes,
-                         expected_emitted, expected_emitted_curve,
+from .cost_model import (BatchCostOracle, Calibration, ExpertPlacement,
+                         a2a_bytes, expected_emitted,
+                         expected_emitted_curve,
                          expected_unique_experts_sharded)
 from .manager import BASELINE, TEST, SET, CascadeConfig, SpeculationManager
 from .planner import (BatchPlan, BatchSpecPlanner, BreakEvenConstraint,
@@ -23,7 +24,7 @@ __all__ = [
     "SpeculationManager", "UtilityAnalyzer", "IterationRecord",
     "Hardware", "TPU_V5E", "RTX_6000_ADA", "expected_unique_experts",
     "expected_unique_experts_batch", "batch_iteration_time",
-    "BatchCostOracle", "iteration_bytes", "iteration_flops",
+    "BatchCostOracle", "Calibration", "iteration_bytes", "iteration_flops",
     "iteration_time", "draft_time", "sample_time", "kv_bytes_per_token",
     "BASELINE", "TEST", "SET", "cascade_for_model",
     "BatchSpecPlanner", "BatchPlan", "PlanDecision", "PlannerConfig",

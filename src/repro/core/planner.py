@@ -410,12 +410,17 @@ class BatchSpecPlanner:
 
     def __init__(self, cfg, hw: cm.Hardware = None, *, affinity: float = 0.0,
                  window: int = 0, config: Optional[PlannerConfig] = None,
-                 placement: Optional[cm.ExpertPlacement] = None):
+                 placement: Optional[cm.ExpertPlacement] = None,
+                 calibration: Optional[cm.Calibration] = None):
         self.cfg = cfg
         self.hw = hw or cm.TPU_V5E
         self.affinity = affinity
         self.window = window
         self.config = config or PlannerConfig()
+        #: wall-clock residual correction (cost_model.Calibration, fitted
+        #: by --calibrate) applied to every oracle this planner prices
+        #: with; None is bit-identical to the uncalibrated planner
+        self.calibration = calibration
         if placement is not None:
             if not cfg.is_moe:
                 raise ValueError(
@@ -522,7 +527,8 @@ class BatchSpecPlanner:
             window=self.window,
             prefill_tokens=[pre.get(i, 0) for i in range(b)],
             placement=self.placement, shard_weights=sw,
-            assume_balanced=not cfgp.shard_aware)
+            assume_balanced=not cfgp.shard_aware,
+            calibration=self.calibration)
 
         # -- allocate ----------------------------------------------------
         # bypass: independent policy, or a single-span pass (B=1 — the

@@ -1,20 +1,38 @@
-"""Pallas TPU kernel: grouped expert matmul (MoE FFN) over the capacity
+"""Pallas TPU kernels: grouped expert matmul (MoE FFN) over the capacity
 dispatch layout — the paper's verification hot spot (§2.4).
 
-y[e] = x[e] @ w[e] for each expert e, where x is the [E, C, d] dispatched
-token buffer and counts[e] says how many capacity slots actually hold
-tokens. During MoE *verification* most experts have zero tokens (only the
-unique experts routed by the K+1 in-flight tokens are live) — exactly the
-effect Cascade's cost model prices. The kernel skips the MXU work of dead
-tiles with `pl.when(count > row_block_start)`; on a real TPU the BlockSpec
-index_map additionally redirects dead weight-block fetches to block 0 so
-the HBM traffic (not just the FLOPs) scales with *unique activated
-experts* — this is the TPU analogue of the GPU only-fetch-active-experts
-behaviour the paper's analysis rests on.
+Two kernels live here:
 
-Tiling: grid = (E, C/bc, F/bf, d/bd), d innermost for accumulation; all
-three tiles ((bc,bd) x, (bd,bf) w, (bc,bf) out) are MXU-aligned with the
-128x128 defaults."""
+`moe_gmm` — the single grouped matmul y[e] = x[e] @ w[e] over the dense
+[E, C, d] dispatch buffer, where counts[e] says how many capacity slots
+actually hold tokens.  During MoE *verification* most experts have zero
+tokens (only the unique experts routed by the K+1 in-flight tokens are
+live) — exactly the effect Cascade's cost model prices.  The kernel skips
+the MXU work of dead tiles with `pl.when(count > row_block_start)`.
+
+`moe_gmm_fused` — the union-packed swiglu/gelu FFN.  It consumes the
+*packed* [U_pad, C, d] layout produced by `models.moe.apply_moe(packed=
+True)` (only the bucketed union of activated experts is materialised) and
+fuses gate/up/activation/down into one pass: for each (expert, row-block)
+it runs all three matmuls per F-tile and accumulates the down-projection
+into the output block, so the intermediate [C, F] activation never touches
+HBM.  Expert liveness arrives as a *scalar-prefetched* counts vector
+(`pltpu.PrefetchScalarGridSpec`): the weight-block index_maps read it and
+redirect dead experts' fetches to block 0, so a dead expert's HBM weight
+traffic is never issued — the TPU analogue of the GPU
+only-fetch-active-experts behaviour the paper's analysis rests on.  The
+same spec works under `interpret=True`, keeping the kernel CPU-portable.
+
+Both kernels pad non-divisible C/F/d internally (zero rows/columns are
+exact no-ops through matmul and through silu/gelu, which fix 0) so
+arbitrary capacity and model dims never crash the Pallas path.
+
+Tiling: `moe_gmm` uses grid (E, C/bc, F/bf, d/bd) with d innermost for
+accumulation; `moe_gmm_fused` uses grid (U, C/bc, F/bf) with F innermost
+(the activation is elementwise in F, so each F-tile's contribution to the
+[bc, d] output block is complete) and keeps d whole per block so the three
+matmuls fuse without a d-reduction loop.  All tiles are MXU-aligned with
+the 128x128 defaults."""
 
 from __future__ import annotations
 
@@ -23,9 +41,25 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(counts_ref, x_ref, w_ref, o_ref, *, bc, nd):
+def _pad_to(a, axis: int, mult: int):
+    """Zero-pad `a` along `axis` up to the next multiple of `mult`."""
+    n = a.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths)
+
+
+# --------------------------------------------------------------------- #
+# moe_gmm: grouped matmul over the dense [E, C, d] dispatch buffer
+# --------------------------------------------------------------------- #
+
+def _kernel(counts_ref, x_ref, w_ref, o_ref, *, bc):
     ic = pl.program_id(1)
     id_ = pl.program_id(3)
 
@@ -53,15 +87,21 @@ def moe_gmm(x, w, counts, *, bc: int = 128, bf: int = 128, bd: int = 128,
     bc = min(bc, c)
     bf = min(bf, f)
     bd = min(bd, d)
-    assert c % bc == 0 and f % bf == 0 and d % bd == 0, (c, f, d, bc, bf, bd)
-    grid = (e, c // bc, f // bf, d // bd)
+    # Non-divisible dims are zero-padded (padding rows/cols contribute
+    # exact zeros through the matmul) and the result sliced back.
+    xp = _pad_to(_pad_to(x, 1, bc), 2, bd)
+    wp = _pad_to(_pad_to(w, 1, bd), 2, bf)
+    cp, dp = xp.shape[1], xp.shape[2]
+    fp = wp.shape[2]
+    grid = (e, cp // bc, fp // bf, dp // bd)
 
     # On real TPU hardware the weight-block index_map below would be
     #   lambda ie, ic, if_, id_: (ie if counts[ie] else 0, id_, if_)
-    # via PrefetchScalarGridSpec so dead experts' weights are never fetched;
-    # plain BlockSpec keeps the kernel interpret-mode portable here.
+    # via PrefetchScalarGridSpec so dead experts' weights are never fetched
+    # (moe_gmm_fused does exactly that); plain BlockSpec keeps this legacy
+    # dense-layout kernel simple — its dead tiles still skip the MXU work.
     y = pl.pallas_call(
-        functools.partial(_kernel, bc=bc, nd=d // bd),
+        functools.partial(_kernel, bc=bc),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda ie, ic, if_, id_: (ie,)),
@@ -70,7 +110,108 @@ def moe_gmm(x, w, counts, *, bc: int = 128, bf: int = 128, bd: int = 128,
         ],
         out_specs=pl.BlockSpec((1, bc, bf),
                                lambda ie, ic, if_, id_: (ie, ic, if_)),
-        out_shape=jax.ShapeDtypeStruct((e, c, f), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((e, cp, fp), jnp.float32),
         interpret=interpret,
-    )(counts, x, w)
-    return y.astype(x.dtype)
+    )(counts, xp, wp)
+    return y[:, :c, :f].astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# moe_gmm_fused: packed-union swiglu/gelu FFN in one pass
+# --------------------------------------------------------------------- #
+
+def _fused_kernel(counts_ref, *refs, bc, activation):
+    if activation == "swiglu":
+        x_ref, wg_ref, wu_ref, wd_ref, o_ref = refs
+    else:
+        x_ref, wu_ref, wd_ref, o_ref = refs
+        wg_ref = None
+    iu = pl.program_id(0)
+    ic = pl.program_id(1)
+    if_ = pl.program_id(2)
+
+    @pl.when(if_ == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    live = counts_ref[iu] > ic * bc
+
+    @pl.when(live)
+    def _compute():
+        x = x_ref[0].astype(jnp.float32)                     # [bc, d]
+        up = jnp.dot(x, wu_ref[0].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)     # [bc, bf]
+        if activation == "swiglu":
+            gate = jnp.dot(x, wg_ref[0].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+            h = jax.nn.silu(gate) * up
+        else:
+            h = jax.nn.gelu(up)
+        o_ref[0] += jnp.dot(h, wd_ref[0].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("activation", "bc", "bf", "interpret"))
+def moe_gmm_fused(x, wg, wu, wd, counts, *, activation: str = "swiglu",
+                  bc: int = 128, bf: int = 128, interpret: bool = False):
+    """Fused packed-union FFN.
+
+    x:  [U, C, d]  packed dispatch buffer (slot u holds the tokens routed
+                   to the u-th activated expert; dead slots hold zeros)
+    wg: [U, d, F]  gathered gate weights (ignored / may be None for gelu)
+    wu: [U, d, F]  gathered up weights
+    wd: [U, F, d]  gathered down weights
+    counts: [U] i32 live tokens per packed slot -> y [U, C, d].
+
+    counts is scalar-prefetched: dead slots' weight (and token) block
+    fetches are steered to block 0 so their HBM traffic is never issued,
+    and their MXU work is skipped outright.
+    """
+    if activation not in ("swiglu", "gelu"):
+        raise ValueError(f"unknown activation {activation!r}")
+    u, c, d = x.shape
+    f = wu.shape[2]
+    bc = min(bc, c)
+    bf = min(bf, f)
+    # Zero-pad non-divisible C/F: silu/gelu fix 0 and padded wd rows are
+    # zero, so padding contributes exact zeros twice over.
+    xp = _pad_to(x, 1, bc)
+    wup = _pad_to(wu, 2, bf)
+    wdp = _pad_to(wd, 1, bf)
+    cp, fp = xp.shape[1], wup.shape[2]
+    grid = (u, cp // bc, fp // bf)
+
+    def _steer(iu, cnt):
+        # Dead packed slots (counts == 0) re-fetch slot 0's blocks instead
+        # of issuing their own HBM reads.
+        return jnp.where(cnt[iu] > 0, iu, 0)
+
+    x_spec = pl.BlockSpec((1, bc, d), lambda iu, ic, if_, cnt:
+                          (_steer(iu, cnt), ic, 0))
+    wu_spec = pl.BlockSpec((1, d, bf), lambda iu, ic, if_, cnt:
+                           (_steer(iu, cnt), 0, if_))
+    wd_spec = pl.BlockSpec((1, bf, d), lambda iu, ic, if_, cnt:
+                           (_steer(iu, cnt), if_, 0))
+    in_specs = [x_spec, wu_spec, wd_spec]
+    operands = [xp, wup, wdp]
+    if activation == "swiglu":
+        wgp = _pad_to(wg, 2, bf)
+        in_specs.insert(1, pl.BlockSpec((1, d, bf), lambda iu, ic, if_, cnt:
+                                        (_steer(iu, cnt), 0, if_)))
+        operands.insert(1, wgp)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bc, d), lambda iu, ic, if_, cnt:
+                               (iu, ic, 0)),
+    )
+    y = pl.pallas_call(
+        functools.partial(_fused_kernel, bc=bc, activation=activation),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((u, cp, d), jnp.float32),
+        interpret=interpret,
+    )(counts, *operands)
+    return y[:, :c].astype(x.dtype)

@@ -1,7 +1,9 @@
-"""Oracle for the grouped expert matmul over the capacity dispatch layout."""
+"""Oracles for the grouped expert matmul and the fused packed-union FFN
+over the capacity dispatch layout."""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -10,6 +12,29 @@ def moe_gmm_ref(x, w, counts=None):
     beyond the count hold zeros by construction). Returns [E,C,F]."""
     y = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
                    w.astype(jnp.float32))
+    if counts is not None:
+        c = x.shape[1]
+        mask = jnp.arange(c)[None, :] < counts[:, None]
+        y = jnp.where(mask[..., None], y, 0.0)
+    return y.astype(x.dtype)
+
+
+def moe_gmm_fused_ref(x, wg, wu, wd, counts=None, *,
+                      activation: str = "swiglu"):
+    """Oracle for `moe_gmm_fused`: the packed-union swiglu/gelu FFN.
+
+    x: [U,C,d]; wg/wu: [U,d,F]; wd: [U,F,d]; counts: [U] valid tokens per
+    packed slot. Returns [U,C,d]."""
+    if activation not in ("swiglu", "gelu"):
+        raise ValueError(f"unknown activation {activation!r}")
+    xf = x.astype(jnp.float32)
+    up = jnp.einsum("ucd,udf->ucf", xf, wu.astype(jnp.float32))
+    if activation == "swiglu":
+        gate = jnp.einsum("ucd,udf->ucf", xf, wg.astype(jnp.float32))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    y = jnp.einsum("ucf,ufd->ucd", h, wd.astype(jnp.float32))
     if counts is not None:
         c = x.shape[1]
         mask = jnp.arange(c)[None, :] < counts[:, None]

@@ -90,21 +90,25 @@ def unique_expert_stats(cfg, idx_btk, token_mask=None):
     return union, per_row
 
 
-def shard_expert_stats(cfg, idx_btk, shard_of, token_mask=None):
+def shard_expert_stats(cfg, idx_btk, shard_of, token_mask=None,
+                       n_shards=None):
     """Per-EP-shard distinct-expert counts: the batch union restricted to
     each shard's resident experts [S] and the per-row restriction [B,S] —
     the gating-shard quantities the sharded cost model prices (the pass
     completes only when the hottest shard has streamed its local activated
     experts; see core/cost_model.ExpertPlacement).
 
-    idx_btk: [B,T,k] routed expert ids; shard_of: length-E static int
-    sequence mapping expert -> shard; token_mask: [B,T] bool marking real
-    tokens (None = all valid). Because every expert lives on exactly one
-    shard, the per-shard counts partition `unique_expert_stats`' union and
-    the per-row counts partition its per_row."""
+    idx_btk: [B,T,k] routed expert ids; shard_of: length-E int sequence
+    mapping expert -> shard — either a static python sequence, or a traced
+    array (the engine's online replica routing feeds one), in which case
+    `n_shards` must be given since the shard count cannot be read off a
+    tracer; token_mask: [B,T] bool marking real tokens (None = all valid).
+    Because every expert lives on exactly one shard, the per-shard counts
+    partition `unique_expert_stats`' union and the per-row counts
+    partition its per_row."""
     b, t, k = idx_btk.shape
     e = cfg.num_experts
-    s_n = int(max(shard_of)) + 1
+    s_n = int(n_shards) if n_shards is not None else int(max(shard_of)) + 1
     member = jax.nn.one_hot(jnp.asarray(shard_of, jnp.int32), s_n,
                             dtype=jnp.int32)                   # [E,S]
     if token_mask is not None:
@@ -141,6 +145,41 @@ def _capacity(cfg, n_tokens: int, policy: str) -> int:
     return max(min(n_tokens, cap), min(n_tokens, cfg.experts_per_token))
 
 
+def packed_expert_cap(cfg, n_tokens: int) -> int:
+    """Static slot count U_pad of the packed verification layout.
+
+    A T-token pass routes at most min(T*k, E) distinct experts, so the
+    packed dispatch buffer needs at most that many expert slots.  The
+    bound is pow-2 bucketed (reusing the span bucketing of
+    `transformer.bucket_length`) so the jit trace is keyed on the same
+    already-bucketed token counts the engine produces — U_pad changes only
+    when the span bucket does, never per routing outcome."""
+    from .transformer import bucket_length
+    u = min(n_tokens * cfg.experts_per_token, cfg.num_experts)
+    return min(bucket_length(u), cfg.num_experts)
+
+
+def moe_pass_counters(cfg, n_tokens: int, *, capacity_policy: str = "exact",
+                      packed: bool = False, weight_bytes: int = 2) -> dict:
+    """Dry-run counters for one MoE layer's FFN pass: the expert-weight
+    bytes the dispatch path streams and the FLOPs its stacked matmuls
+    execute.  These mirror the implementation exactly — the dense path
+    einsums over all E experts; the packed path gathers and multiplies
+    only the U_pad = `packed_expert_cap` slots — and back the scaling
+    gates in `benchmarks/serving_micro.py --calibrate`."""
+    c = _capacity(cfg, n_tokens, capacity_policy)
+    streamed = (packed_expert_cap(cfg, n_tokens) if packed
+                else cfg.num_experts)
+    mult = 3 if cfg.activation == "swiglu" else 2
+    d, f = cfg.d_model, cfg.moe_d_ff
+    return {
+        "experts_streamed": streamed,
+        "capacity": c,
+        "expert_weight_bytes": streamed * mult * d * f * weight_bytes,
+        "ffn_flops": 2.0 * streamed * c * d * f * mult,
+    }
+
+
 _EP_CACHE = {}
 
 
@@ -152,8 +191,21 @@ def _ep_apply(cfg, mesh):
     return _EP_CACHE[key]
 
 
-def apply_moe(cfg, p, x2d, *, capacity_policy: str = "train"):
-    """x2d: [T,d] -> (y [T,d], aux dict with routing telemetry)."""
+def apply_moe(cfg, p, x2d, *, capacity_policy: str = "train",
+              packed: bool = False, kernel_backend: str | None = None):
+    """x2d: [T,d] -> (y [T,d], aux dict with routing telemetry).
+
+    packed=True takes the union-packed verification path: the activated
+    experts are compacted into the leading `packed_expert_cap(cfg, T)`
+    slots, so weight gathers, the dispatch buffer and the FFN matmuls all
+    scale with the (bucketed) union U rather than E.  With
+    kernel_backend=None the packed FFN runs the same inline einsums as the
+    dense path — identical contraction structure and dtype promotion, so
+    the outputs are bit-identical and rejection sampling sees no numerics
+    drift.  kernel_backend="pallas"/"interpret"/"ref" routes the packed
+    FFN through `kernels.moe_gmm.moe_gmm_fused` instead (allclose, not
+    bitwise).  The packed path is the single-host serving hot path; the
+    GSPMD dispatch-shard constraints and the ep-a2a path stay dense."""
     from repro.distributed.sharding import _CONTEXT_MESH, constrain, opt
     t, d = x2d.shape
     if opt("ep-a2a") and capacity_policy != "exact":
@@ -190,32 +242,75 @@ def apply_moe(cfg, p, x2d, *, capacity_policy: str = "train"):
     keep = flat_p < c
     flat_p = jnp.where(keep, flat_p, c)  # overflow rows scatter to a spill slot
 
-    # --- dispatch: scatter tokens into [E, C(+spill), d]
     x_rep = jnp.repeat(x2d, k, axis=0)                        # [T*k,d]
-    disp = jnp.zeros((e, c + 1, d), x2d.dtype)
-    disp = disp.at[flat_e, flat_p].set(x_rep)
-    disp = disp[:, :c]                                        # drop spill slot
-    if opt("dispatch-shard"):
-        # §Perf: pin the dispatch buffer (experts over 'data') so GSPMD
-        # does not involuntarily replicate it through the scatter
-        disp = constrain(disp, "data", None, None)
+    if packed:
+        # --- union compaction: map the activated experts onto the leading
+        # U_pad packed slots (active experts first, ascending id — a
+        # deterministic, trace-stable permutation).  Every routed expert
+        # is active, so every (token, choice) lands in a slot < U_pad.
+        u_cap = packed_expert_cap(cfg, t)
+        hits = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)   # [E]
+        active = (hits > 0).astype(jnp.int32)
+        perm = jnp.argsort(1 - active, stable=True)           # [E]
+        expert_ids = perm[:u_cap]                             # [U_pad]
+        slot_of = (jnp.full((e,), u_cap, jnp.int32)
+                   .at[expert_ids].set(jnp.arange(u_cap, dtype=jnp.int32)))
+        flat_u = slot_of[flat_e]                              # [T*k] < U_pad
 
-    # --- expert FFN (stacked einsum; FLOPs = E*C*d*F per matmul)
-    if "w_gate" in p and cfg.activation == "swiglu":
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, p["w_gate"]))
-        h = h * jnp.einsum("ecd,edf->ecf", disp, p["w_up"])
+        # --- packed dispatch: [U_pad, C(+spill), d]
+        disp = jnp.zeros((u_cap, c + 1, d), x2d.dtype)
+        disp = disp.at[flat_u, flat_p].set(x_rep)[:, :c]
+
+        # --- gather only the union's weights (the U-not-E byte stream)
+        wu_g = jnp.take(p["w_up"], expert_ids, axis=0)        # [U_pad,d,F]
+        wd_g = jnp.take(p["w_down"], expert_ids, axis=0)      # [U_pad,F,d]
+        swiglu = "w_gate" in p and cfg.activation == "swiglu"
+        wg_g = (jnp.take(p["w_gate"], expert_ids, axis=0) if swiglu
+                else None)
+        if kernel_backend is not None:
+            from repro.kernels.moe_gmm import moe_gmm_fused
+            counts = jnp.minimum(hits[expert_ids], c)
+            out = moe_gmm_fused(disp, wg_g, wu_g, wd_g, counts,
+                                activation="swiglu" if swiglu else "gelu",
+                                backend=kernel_backend)
+        else:
+            # same contractions/dtypes as the dense branch -> bit-identical
+            if swiglu:
+                h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, wg_g))
+                h = h * jnp.einsum("ecd,edf->ecf", disp, wu_g)
+            else:
+                h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", disp, wu_g))
+            out = jnp.einsum("ecf,efd->ecd", h, wd_g)         # [U_pad,C,d]
+
+        pad = jnp.zeros((u_cap, 1, d), out.dtype)
+        out = jnp.concatenate([out, pad], axis=1)
+        y_rep = out[flat_u, jnp.where(keep, flat_p, c)]       # [T*k,d]
     else:
-        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", disp, p["w_up"]))
-    if opt("dispatch-shard"):
-        h = constrain(h, "data", None, "model")
-    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])          # [E,C,d]
-    if opt("dispatch-shard"):
-        out = constrain(out, "data", None, None)
+        # --- dispatch: scatter tokens into [E, C(+spill), d]
+        disp = jnp.zeros((e, c + 1, d), x2d.dtype)
+        disp = disp.at[flat_e, flat_p].set(x_rep)
+        disp = disp[:, :c]                                    # drop spill slot
+        if opt("dispatch-shard"):
+            # §Perf: pin the dispatch buffer (experts over 'data') so GSPMD
+            # does not involuntarily replicate it through the scatter
+            disp = constrain(disp, "data", None, None)
 
-    # --- combine: gather each slot's output back to its token
-    pad = jnp.zeros((e, 1, d), out.dtype)
-    out = jnp.concatenate([out, pad], axis=1)                 # spill reads zeros
-    y_rep = out[flat_e, jnp.where(keep, flat_p, c)]           # [T*k,d]
+        # --- expert FFN (stacked einsum; FLOPs = E*C*d*F per matmul)
+        if "w_gate" in p and cfg.activation == "swiglu":
+            h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, p["w_gate"]))
+            h = h * jnp.einsum("ecd,edf->ecf", disp, p["w_up"])
+        else:
+            h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", disp, p["w_up"]))
+        if opt("dispatch-shard"):
+            h = constrain(h, "data", None, "model")
+        out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])      # [E,C,d]
+        if opt("dispatch-shard"):
+            out = constrain(out, "data", None, None)
+
+        # --- combine: gather each slot's output back to its token
+        pad = jnp.zeros((e, 1, d), out.dtype)
+        out = jnp.concatenate([out, pad], axis=1)             # spill reads 0
+        y_rep = out[flat_e, jnp.where(keep, flat_p, c)]       # [T*k,d]
     w_flat = (weights.reshape(-1) * keep).astype(out.dtype)
     y = jnp.sum((y_rep * w_flat[:, None]).reshape(t, k, d), axis=1)
 

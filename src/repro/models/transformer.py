@@ -339,7 +339,8 @@ def _attn_block(cfg, p, x, lc, ctx, kind):
     if cfg.is_moe:
         b, t, d = h2.shape
         y2d, moe_aux = moe_mod.apply_moe(cfg, p["moe"], h2.reshape(b * t, d),
-                                         capacity_policy=ctx["moe_policy"])
+                                         capacity_policy=ctx["moe_policy"],
+                                         packed=ctx.get("moe_packed", False))
         x = x + y2d.reshape(b, t, d)
         aux["lb_loss"] = moe_aux["lb_loss"]
         aux["unique_experts"] = moe_aux["unique_experts"]
@@ -358,7 +359,8 @@ def _attn_block(cfg, p, x, lc, ctx, kind):
                 # EP-shard accounting: the hottest shard's local activated
                 # experts gate a sharded pass (docs/expert_parallel.md)
                 per_shard, row_shard = moe_mod.shard_expert_stats(
-                    cfg, idx_btk, sid, ctx.get("token_mask"))
+                    cfg, idx_btk, sid, ctx.get("token_mask"),
+                    n_shards=ctx.get("ep_n_shards"))
                 aux["unique_experts_shard"] = per_shard
                 aux["unique_experts_row_shard"] = row_shard
     else:
@@ -369,7 +371,8 @@ def _attn_block(cfg, p, x, lc, ctx, kind):
             aux["unique_experts_row"] = jnp.zeros((x.shape[0],), jnp.int32)
             sid = ctx.get("ep_shard_ids")
             if sid is not None:
-                s_n = int(max(sid)) + 1
+                s_n = (int(ctx["ep_n_shards"]) if ctx.get("ep_n_shards")
+                       else int(max(sid)) + 1)
                 aux["unique_experts_shard"] = jnp.zeros((s_n,), jnp.int32)
                 aux["unique_experts_row_shard"] = jnp.zeros(
                     (x.shape[0], s_n), jnp.int32)
@@ -547,7 +550,8 @@ def _run_pattern(cfg, params, x, cache, ctx):
 
 
 def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
-             window, enc_out, moe_exact, token_mask=None, ep_shard_ids=None):
+             window, enc_out, moe_exact, token_mask=None, ep_shard_ids=None,
+             ep_n_shards=None, moe_packed=False):
     x = _embed_inputs(cfg, params, tokens, embeds, seq_pos)
     n_inflight = x.shape[0] * x.shape[1]
     if not moe_exact:
@@ -565,7 +569,8 @@ def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
            "window": window, "enc_out": enc_out, "moe_policy": moe_policy,
            "cache_pos": None if cache is None else cache.get("pos"),
            "slots": None, "slots_bt": None, "offset": None, "t_w": 0,
-           "token_mask": token_mask, "ep_shard_ids": ep_shard_ids}
+           "token_mask": token_mask, "ep_shard_ids": ep_shard_ids,
+           "ep_n_shards": ep_n_shards, "moe_packed": moe_packed}
     if cache is not None and "pos" in cache:
         t = x.shape[1]
         r = cache["pos"].shape[1]
@@ -667,7 +672,7 @@ def prefill(cfg, params, tokens, cache, *, embeds=None, rope_pos=None,
 
 def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
                 window: int = 0, moe_exact: bool = True, token_mask=None,
-                ep_shard_ids=None):
+                ep_shard_ids=None, ep_n_shards=None, moe_packed=False):
     """Verify/decode T tokens per row. Single-request caches start every row
     at the scalar cache['length']; per-row caches (init_cache(per_row=True))
     start row b at cache['lengths'][b], which is how a continuous batch
@@ -675,11 +680,16 @@ def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
     `token_mask` [B,T] marks the real tokens of each span — padding tokens
     still flow through the network (their writes are rolled back) but are
     excluded from the expert-union accounting.
-    `ep_shard_ids` (static length-E tuple, expert -> EP shard; see
+    `ep_shard_ids` (length-E expert -> EP shard map; see
     core/cost_model.ExpertPlacement) additionally emits per-shard and
     per-row-per-shard distinct-expert counts (`unique_experts_shard` [L,S],
     `unique_experts_row_shard` [L,B,S]) — the hottest-shard telemetry an
-    EP-sharded serving deployment prices its passes with.
+    EP-sharded serving deployment prices its passes with.  It may be a
+    static tuple or a traced array (the engine's online replica routing
+    passes one); in the traced case `ep_n_shards` must carry the static
+    shard count.  `moe_packed=True` runs MoE layers on the union-packed
+    verification path (see models/moe.apply_moe) — bit-identical outputs,
+    union-scaled weight traffic.
     Returns (logits [B,T,V], new_cache, aux, staged)."""
     b, t = tokens.shape[:2] if tokens is not None else embeds.shape[:2]
     offs = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
@@ -696,7 +706,9 @@ def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
                                           window=window, enc_out=None,
                                           moe_exact=moe_exact,
                                           token_mask=token_mask,
-                                          ep_shard_ids=ep_shard_ids)
+                                          ep_shard_ids=ep_shard_ids,
+                                          ep_n_shards=ep_n_shards,
+                                          moe_packed=moe_packed)
     return logits, cache, aux, staged
 
 

@@ -44,6 +44,7 @@ from repro.core.controller import CascadeController, StaticKController
 from repro.core.planner import BatchSpecPlanner, PlannerConfig
 from repro.core.slo import RequestSLO
 from repro.models import transformer as T
+from repro.models.moe import packed_expert_cap
 
 from .drafter import Drafter, NGramDrafter
 from .sampler import greedy_verify, logits_to_probs, rejection_sample, sample_token
@@ -362,7 +363,8 @@ class BatchedEngine:
                  max_prefill_tokens_per_step: Optional[int] = None,
                  policy: Optional[str] = None,
                  planner: Optional[BatchSpecPlanner] = None,
-                 placement: Optional[cm.ExpertPlacement] = None):
+                 placement: Optional[cm.ExpertPlacement] = None,
+                 packed: bool = False):
         self.cfg = cfg
         self.params = params
         self.drafter_factory = drafter_factory or (lambda: NGramDrafter())
@@ -445,13 +447,36 @@ class BatchedEngine:
         self._prefill = jax.jit(
             lambda p, t, c, e: T.prefill(cfg, p, t, c, window=window,
                                          enc_out=e))
-        # measured routing uses primary homes; replicas are a pricing-side
-        # relief (cost_model._rebalance_replicas), not a serving-side path
-        sid = (tuple(self.placement.primary_shard_of) if self._ep else None)
-        self._decode = jax.jit(
-            lambda p, c, t, m: T.decode_step(cfg, p, c, t, window=window,
-                                             token_mask=m,
-                                             ep_shard_ids=sid))
+        #: union-packed verification path (models/moe.apply_moe(packed=
+        #: True)): bit-identical outputs, union-scaled weight traffic
+        self.packed = bool(packed)
+        #: online replica routing: with replicated experts the engine
+        #: re-routes each replicated expert to its currently-cheapest
+        #: replica (the serving-side realisation of the min-over-replicas
+        #: relief `cost_model._rebalance_replicas` already prices), so the
+        #: shard map becomes a traced argument instead of a static closure
+        #: constant — re-routing must not retrace the decode step.
+        self._replica_routes = None
+        self._shard_load = None   # EMA of measured per-shard activation
+        self.replica_moves = 0    # route flips across the run
+        if self._ep and self.placement.has_replication:
+            self._replica_routes = np.asarray(
+                self.placement.primary_shard_of, np.int32)
+            n_sh = self.placement.n_shards
+            self._decode = jax.jit(
+                lambda p, c, t, m, sid: T.decode_step(
+                    cfg, p, c, t, window=window, token_mask=m,
+                    ep_shard_ids=sid, ep_n_shards=n_sh,
+                    moe_packed=self.packed))
+        else:
+            # unreplicated routing uses the static primary homes
+            sid = (tuple(self.placement.primary_shard_of)
+                   if self._ep else None)
+            self._decode = jax.jit(
+                lambda p, c, t, m: T.decode_step(cfg, p, c, t, window=window,
+                                                 token_mask=m,
+                                                 ep_shard_ids=sid,
+                                                 moe_packed=self.packed))
         self._step_idx = 0
         self._req_counter = 0
         self._joined_since_step = 0
@@ -587,6 +612,26 @@ class BatchedEngine:
                 if cost["bytes"] else 1.0 / occupancy)
         return wall_verify * frac
 
+    def _update_replica_routes(self, shard_load) -> int:
+        """Fold a pass's measured per-shard activation [S] into the EMA and
+        point every replicated expert at its currently-coolest replica
+        (ties break toward the lower shard id, so routing is deterministic
+        and a balanced load keeps the primary homes). Returns the number of
+        experts whose route flipped — the next pass runs on the new map."""
+        old = self._shard_load
+        self._shard_load = (np.asarray(shard_load, np.float64) if old is None
+                            else 0.5 * old + 0.5 * shard_load)
+        moves = 0
+        for e, reps in enumerate(self.placement.shard_of):
+            if not isinstance(reps, tuple):
+                continue
+            best = min(reps, key=lambda s: (self._shard_load[s], s))
+            if best != self._replica_routes[e]:
+                self._replica_routes[e] = best
+                moves += 1
+        self.replica_moves += moves
+        return moves
+
     def _maybe_finish(self, s: _Slot, *, stopped: bool = False) -> None:
         """The one termination rule, shared by every path that advances a
         request (blocking join, decode feedback, chunked-prefill finish):
@@ -717,8 +762,14 @@ class BatchedEngine:
 
         # 3. shared verification pass
         t1 = time.perf_counter()
-        lo, new_cache, aux, staged = self._decode(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(mask))
+        if self._replica_routes is not None:
+            lo, new_cache, aux, staged = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(mask), jnp.asarray(self._replica_routes))
+        else:
+            lo, new_cache, aux, staged = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(mask))
         lo = np.asarray(lo, np.float32)            # [B, T_max, V]
         wall_verify = time.perf_counter() - t1
 
@@ -794,6 +845,13 @@ class BatchedEngine:
                 old = self._shard_profiles.get(i)
                 self._shard_profiles[i] = (prof if old is None
                                            else 0.5 * old + 0.5 * prof)
+        # online replica routing: fold this pass's measured per-shard
+        # activation into an EMA and re-point each replicated expert at its
+        # currently-coolest replica for the NEXT pass (the serving-side
+        # half of the min-over-replicas relief the oracle prices)
+        step_moves = 0
+        if self._replica_routes is not None and shard_mean is not None:
+            step_moves = self._update_replica_routes(np.asarray(shard_mean))
 
         # 7. feed back per request; advance token state
         emitted_by_slot = {}
@@ -890,7 +948,10 @@ class BatchedEngine:
             max_shard_experts=cost.get("max_shard_experts", 0.0),
             hot_shard=cost.get("hot_shard", -1),
             shard_imbalance=cost.get("imbalance", 1.0),
-            t_a2a=cost.get("t_a2a", 0.0))
+            t_a2a=cost.get("t_a2a", 0.0),
+            replica_moves=step_moves,
+            packed_experts=(packed_expert_cap(self.cfg, b * t_max)
+                            if self.packed else 0))
         self.telemetry.steps.append(step_tel)
         # every decode row experienced the WHOLE pass between its tokens —
         # the latency quantity SLOs bound (vs t_iter's attributed share)

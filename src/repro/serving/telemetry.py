@@ -70,6 +70,10 @@ class StepTelemetry:
     hot_shard: int = -1        # id of the gating shard (-1 = unsharded)
     shard_imbalance: float = 1.0   # max-shard / mean-shard occupancy
     t_a2a: float = 0.0         # all-to-all seconds priced into t_step
+    replica_moves: int = 0     # replicated experts re-routed to a cooler
+                               # replica after this pass (0 = no replicas)
+    packed_experts: int = 0    # U_pad of the union-packed verification
+                               # path (0 = dense path)
 
     @property
     def t_total(self) -> float:
@@ -230,6 +234,12 @@ class EngineTelemetry:
         return planner_aggregates(self.steps)["slo_denied"]
 
     @property
+    def replica_moves(self) -> int:
+        """Replicated-expert route flips across the run (the engine's
+        online cheapest-replica routing engaging; 0 without replicas)."""
+        return planner_aggregates(self.steps)["replica_moves"]
+
+    @property
     def mean_shard_imbalance(self) -> float:
         """Mean max-shard/mean-shard activated-expert ratio over sharded
         steps (1.0 = perfectly balanced, or no EP placement)."""
@@ -267,4 +277,5 @@ def planner_aggregates(steps) -> dict:
                                  / len(sharded) if sharded else 1.0),
         "hot_shard_frac": hot_frac,
         "slo_denied": sum(s.slo_denied for s in steps),
+        "replica_moves": sum(s.replica_moves for s in steps),
     }

@@ -11,7 +11,8 @@ from repro.kernels.decode_attention import (decode_attention,
 from repro.kernels.flash_attention import (flash_attention,
                                            flash_attention_ref)
 from repro.kernels.linear_scan import linear_scan, linear_scan_ref
-from repro.kernels.moe_gmm import moe_gmm, moe_gmm_ref
+from repro.kernels.moe_gmm import (moe_gmm, moe_gmm_fused,
+                                   moe_gmm_fused_ref, moe_gmm_ref)
 from repro.kernels.rwkv_scan import rwkv_scan, rwkv_scan_ref
 
 RNG = np.random.default_rng(0)
@@ -119,6 +120,141 @@ def test_moe_gmm_dead_experts_exact_zero():
     y = moe_gmm(x, w, counts, force_pallas=True, bc=8, bd=16, bf=8)
     assert float(jnp.abs(y[0]).max()) == 0.0
     assert float(jnp.abs(y[2]).max()) == 0.0
+
+
+@pytest.mark.parametrize("e,c,d,f,bc,bd,bf", [
+    (3, 10, 12, 20, 8, 8, 16),   # nothing divides: every axis padded
+    (4, 7, 16, 8, 8, 16, 8),     # C < bc
+    (2, 33, 8, 24, 16, 8, 16),   # C just over a tile boundary
+])
+def test_moe_gmm_non_divisible(e, c, d, f, bc, bd, bf):
+    """Regression for the former hard divisibility assert: the kernel now
+    pads C/d/F internally and slices the result back."""
+    counts = jnp.asarray(RNG.integers(0, c + 1, e), jnp.int32)
+    x = RNG.normal(0, 1, (e, c, d)).astype(np.float32)
+    for i, n in enumerate(np.asarray(counts)):
+        x[i, n:] = 0.0
+    x = jnp.asarray(x)
+    w = _r((e, d, f))
+    y1 = moe_gmm_ref(x, w, counts)
+    y2 = moe_gmm(x, w, counts, force_pallas=True, bc=bc, bd=bd, bf=bf)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+# --------------------------------------------------------------------- #
+# fused packed-union kernel (docs/kernels.md): interpret-mode Pallas vs
+# the jnp oracle vs the dense einsum chain the packed dispatch replaces
+# --------------------------------------------------------------------- #
+
+def _fused_inputs(u, c, d, f, activation, full=False):
+    counts = (np.full(u, c, np.int32) if full
+              else RNG.integers(0, c + 1, u).astype(np.int32))
+    x = RNG.normal(0, 1, (u, c, d)).astype(np.float32)
+    for i, n in enumerate(counts):
+        x[i, n:] = 0.0
+    wg = _r((u, d, f)) if activation == "swiglu" else None
+    wu, wd = _r((u, d, f)), _r((u, f, d))
+    return jnp.asarray(x), wg, wu, wd, jnp.asarray(counts)
+
+
+def _dense_chain(x, wg, wu, wd, counts, activation):
+    """The stacked-einsum FFN the packed dispatch path inlines — the
+    bit-level oracle `apply_moe(packed=True)` must match."""
+    up = jnp.einsum("ucd,udf->ucf", x, wu,
+                    preferred_element_type=jnp.float32)
+    if activation == "swiglu":
+        g = jnp.einsum("ucd,udf->ucf", x, wg,
+                       preferred_element_type=jnp.float32)
+        h = jax.nn.silu(g) * up
+    else:
+        h = jax.nn.gelu(up)
+    y = jnp.einsum("ucf,ufd->ucd", h, wd,
+                   preferred_element_type=jnp.float32)
+    mask = (jnp.arange(x.shape[1])[None, :] < counts[:, None])
+    return (y * mask[:, :, None]).astype(x.dtype)
+
+
+@pytest.mark.parametrize("u,c,d,f,bc,bf", [
+    (1, 8, 16, 16, 8, 8),        # U=1 corner (single activated expert)
+    (4, 16, 32, 24, 8, 8),
+    (8, 8, 16, 16, 8, 16),       # U=E-shaped full union
+    (3, 10, 12, 20, 8, 16),      # non-divisible C and F
+    (5, 7, 8, 8, 8, 8),
+])
+@pytest.mark.parametrize("activation", ["swiglu", "gelu"])
+def test_moe_gmm_fused_parity(u, c, d, f, bc, bf, activation):
+    x, wg, wu, wd, counts = _fused_inputs(u, c, d, f, activation)
+    y_ref = moe_gmm_fused_ref(x, wg, wu, wd, counts, activation=activation)
+    y_dense = _dense_chain(x, wg, wu, wd, counts, activation)
+    y_k = moe_gmm_fused(x, wg, wu, wd, counts, activation=activation,
+                        backend="interpret", bc=bc, bf=bf)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_dense),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_k),
+                               atol=1e-4)
+
+
+def test_moe_gmm_fused_full_union_parity():
+    """U = E corner with every slot saturated: no masking in play, pure
+    fused-matmul parity."""
+    x, wg, wu, wd, counts = _fused_inputs(6, 8, 16, 16, "swiglu", full=True)
+    y_ref = moe_gmm_fused_ref(x, wg, wu, wd, counts)
+    y_k = moe_gmm_fused(x, wg, wu, wd, counts, backend="interpret",
+                        bc=8, bf=8)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_k),
+                               atol=1e-4)
+
+
+def test_moe_gmm_fused_dead_slots_exact_zero():
+    """Padded union slots (counts == 0) must come out exactly zero — the
+    kernel's scalar-prefetch steering never initializes them with real
+    expert traffic."""
+    x, wg, wu, wd, _ = _fused_inputs(4, 8, 16, 8, "swiglu", full=True)
+    counts = jnp.asarray([0, 8, 0, 3], jnp.int32)
+    x = x.at[0].set(0).at[2].set(0).at[3, 3:].set(0)
+    y = moe_gmm_fused(x, wg, wu, wd, counts, backend="interpret",
+                      bc=8, bf=8)
+    assert float(jnp.abs(y[0]).max()) == 0.0
+    assert float(jnp.abs(y[2]).max()) == 0.0
+    assert float(jnp.abs(y[1]).max()) > 0.0
+
+
+def test_moe_gmm_backend_dispatch():
+    """Explicit backend selection: 'ref' and 'interpret' agree; unknown
+    backends and unknown tile kwargs are rejected loudly."""
+    x, wg, wu, wd, counts = _fused_inputs(2, 8, 8, 8, "swiglu")
+    y_ref = moe_gmm_fused(x, wg, wu, wd, counts, backend="ref")
+    y_int = moe_gmm_fused(x, wg, wu, wd, counts, backend="interpret")
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_int),
+                               atol=1e-4)
+    # force_pallas=True off-TPU lowers to interpret mode (the legacy knob)
+    y_fp = moe_gmm_fused(x, wg, wu, wd, counts, force_pallas=True)
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_fp),
+                               atol=1e-6)
+    with pytest.raises(ValueError):
+        moe_gmm_fused(x, wg, wu, wd, counts, backend="cuda")
+    with pytest.raises(TypeError):
+        moe_gmm_fused(x, wg, wu, wd, counts, backend="ref", bd=64)
+    with pytest.raises(ValueError):
+        moe_gmm(x[:, :, :8], wu[:, :8, :], counts, backend="rocm")
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_moe_gmm_fused_randomized(seed):
+    """Randomized U/C/d/F shapes (odd sizes on every axis) against the
+    oracle — the fuzz net for the internal-padding logic."""
+    rng = np.random.default_rng(seed)
+    u = int(rng.integers(1, 7))
+    c = int(rng.integers(1, 20))
+    d = int(rng.integers(4, 24))
+    f = int(rng.integers(4, 24))
+    activation = ["swiglu", "gelu"][seed % 2]
+    x, wg, wu, wd, counts = _fused_inputs(u, c, d, f, activation)
+    y_ref = moe_gmm_fused_ref(x, wg, wu, wd, counts, activation=activation)
+    y_k = moe_gmm_fused(x, wg, wu, wd, counts, activation=activation,
+                        backend="interpret", bc=8, bf=8)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_k),
+                               atol=1e-4)
 
 
 # --------------------------------------------------------------------- #

@@ -135,3 +135,65 @@ def test_vlm_mrope_positions(key):
     pos_img = pos3.at[1].set(pos3[1] // 2).at[2].set(pos3[2] % 3)
     lo_c, _ = T.train_forward(cfg, params, toks, rope_pos=pos_img)
     assert float(jnp.abs(lo_c - lo_a).max()) > 1e-4
+
+
+# ===================================================================== #
+# Union-packed MoE dispatch (docs/kernels.md)
+# ===================================================================== #
+
+def test_packed_apply_moe_bit_identical(tiny_moe):
+    """The packed path's inlined einsums use the dense path's exact
+    contraction structure and dtypes, so its output is bitwise equal —
+    across token counts spanning U=1-shaped unions to full saturation."""
+    from repro.models import moe
+    cfg, _ = tiny_moe
+    p = moe.init_moe(cfg, jax.random.PRNGKey(1), jnp.float32)
+    for t in (1, 2, 3, 8, 33):
+        x = jax.random.normal(jax.random.PRNGKey(t), (t, cfg.d_model),
+                              jnp.float32)
+        yd, auxd = moe.apply_moe(cfg, p, x, capacity_policy="exact")
+        yp, auxp = moe.apply_moe(cfg, p, x, capacity_policy="exact",
+                                 packed=True)
+        assert bool(jnp.all(yd == yp)), f"packed diverged at T={t}"
+        np.testing.assert_array_equal(np.asarray(auxd["unique_experts"]),
+                                      np.asarray(auxp["unique_experts"]))
+
+
+def test_packed_apply_moe_fused_kernel_close(tiny_moe):
+    """kernel_backend='interpret' runs the fused Pallas kernel in
+    interpret mode over the packed layout — numerically close to the
+    inline einsum path (not bit-equal: the kernel accumulates per-tile)."""
+    from repro.models import moe
+    cfg, _ = tiny_moe
+    p = moe.init_moe(cfg, jax.random.PRNGKey(1), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, cfg.d_model),
+                          jnp.float32)
+    y0, _ = moe.apply_moe(cfg, p, x, capacity_policy="exact", packed=True)
+    y1, _ = moe.apply_moe(cfg, p, x, capacity_policy="exact", packed=True,
+                          kernel_backend="interpret")
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=2e-3)
+
+
+def test_packed_expert_cap_and_counters(tiny_moe):
+    """The packed path's dry-run counters scale with the bucketed union
+    cap U_pad, not E: strictly below the dense counters while the union
+    is unsaturated, exactly equal once U_pad == E."""
+    from repro.models import moe
+    cfg, _ = tiny_moe
+    e, k = cfg.num_experts, cfg.experts_per_token
+    caps = [moe.packed_expert_cap(cfg, t) for t in (1, 2, 4, 64)]
+    assert caps[0] == min(2 ** (k - 1).bit_length(), e) or caps[0] <= e
+    assert all(c <= e for c in caps)
+    assert caps == sorted(caps)            # monotone in T
+    assert moe.packed_expert_cap(cfg, 64) == e
+    for t in (1, 2, 4, 64):
+        cd = moe.moe_pass_counters(cfg, t, capacity_policy="exact")
+        cp = moe.moe_pass_counters(cfg, t, capacity_policy="exact",
+                                   packed=True)
+        assert cp["capacity"] == cd["capacity"]
+        if moe.packed_expert_cap(cfg, t) < e:
+            assert cp["expert_weight_bytes"] < cd["expert_weight_bytes"]
+            assert cp["ffn_flops"] < cd["ffn_flops"]
+        else:
+            assert cp["expert_weight_bytes"] == cd["expert_weight_bytes"]
+            assert cp["ffn_flops"] == cd["ffn_flops"]

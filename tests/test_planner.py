@@ -333,3 +333,93 @@ def test_expected_emitted_series():
         assert expected_emitted(0.9, k) <= k + 1
         assert expected_emitted(0.9, k) <= expected_emitted(0.9, k + 1)
         assert expected_emitted(0.3, k) <= expected_emitted(0.6, k)
+
+
+# ===================================================================== #
+# Wall-clock calibration of the analytic cost model (docs/kernels.md)
+# ===================================================================== #
+
+def test_calibration_fit_recovers_scale_offset():
+    """Synthetic measured = s*pred + off is recovered exactly and the
+    post-fit residual collapses; the pre-fit residual is reported."""
+    from repro.core import Calibration
+    pred = [1e-3 * (i + 1) for i in range(20)]
+    meas = [0.7 * p + 2e-4 for p in pred]
+    cal = Calibration.fit(pred, meas)
+    assert cal.time_scale == pytest.approx(0.7, rel=1e-6)
+    assert cal.time_offset == pytest.approx(2e-4, rel=1e-6)
+    assert cal.resid_after < 1e-8 < cal.resid_before
+    for p, m in zip(pred, meas):
+        assert cal.apply(p) == pytest.approx(m, rel=1e-6)
+
+
+def test_calibration_fit_recovers_a2a_scale():
+    """With a nonzero all-to-all column the collective gets its own scale,
+    separate from the roofline's."""
+    from repro.core import Calibration
+    pred, a2a, meas = [], [], []
+    for i in range(30):
+        base = 1e-3 * (1 + (i % 7))
+        aa = 2e-4 * (i % 5)
+        pred.append(base + aa)
+        a2a.append(aa)
+        meas.append(0.8 * base + 1.5 * aa + 1e-4)
+    cal = Calibration.fit(pred, meas, a2a)
+    assert cal.time_scale == pytest.approx(0.8, rel=1e-5)
+    assert cal.a2a_scale == pytest.approx(1.5, rel=1e-5)
+    assert cal.time_offset == pytest.approx(1e-4, rel=1e-4)
+    assert cal.resid_after < 1e-5 < cal.resid_before
+
+
+def test_calibration_degenerate_falls_back_to_identity():
+    """A rank-deficient system (constant predictions) must not produce a
+    wild fit — the fallback is the identity transform."""
+    from repro.core import Calibration
+    cal = Calibration.fit([1e-3] * 8, [1.3e-3] * 8)
+    assert cal.apply(5e-3) >= 0.0
+    # either solved (constant maps to constant) or identity fallback
+    assert cal.apply(1e-3) == pytest.approx(1.3e-3, rel=1e-6) or \
+        cal.apply(1e-3) == pytest.approx(1e-3, rel=1e-6)
+
+
+def test_calibration_adapted_util_floor_monotone():
+    from repro.core import Calibration
+    import dataclasses
+    cal = Calibration.fit([1e-3 * (i + 1) for i in range(10)],
+                          [1.1e-3 * (i + 1) + 1e-5 for i in range(10)])
+    assert cal.adapted_util_floor(1.0) >= 1.0
+    worse = dataclasses.replace(cal, resid_after=0.5)
+    assert worse.adapted_util_floor(1.0) == pytest.approx(1.5)
+    assert worse.adapted_util_floor(1.2) == pytest.approx(1.8)
+
+
+def test_oracle_calibration_none_is_bit_identical():
+    """BatchCostOracle(calibration=None) must price passes bit-for-bit as
+    before the calibration hook existed (the planner-sweep drift gates
+    depend on it), and a supplied calibration must equal the manual
+    transform of the uncalibrated prediction."""
+    from repro.core import BatchCostOracle, Calibration
+    base = BatchCostOracle(CFG, TPU_V5E, [64, 128, 256])
+    none = BatchCostOracle(CFG, TPU_V5E, [64, 128, 256], calibration=None)
+    cal = Calibration(time_scale=0.75, time_offset=3e-4)
+    with_cal = BatchCostOracle(CFG, TPU_V5E, [64, 128, 256],
+                               calibration=cal)
+    for ns in ([1, 1, 1], [4, 0, 2], [8, 8, 8]):
+        t0 = base.t_batch(ns)
+        assert none.t_batch(ns) == t0                      # bit-identical
+        assert with_cal.t_batch(ns) == pytest.approx(
+            cal.apply(t0, 0.0), rel=1e-12)
+
+
+def test_planner_threads_calibration_into_oracle():
+    """BatchSpecPlanner(calibration=) reaches the oracle: predicted pass
+    times shrink under a <1 scale while grants stay grants."""
+    from repro.core import Calibration
+    cal = Calibration(time_scale=0.5, time_offset=0.0)
+    ctls0 = {i: CascadeController() for i in range(2)}
+    ctls1 = {i: CascadeController() for i in range(2)}
+    p0 = BatchSpecPlanner(CFG, TPU_V5E).plan(ctls0, [64, 64])
+    p1 = BatchSpecPlanner(CFG, TPU_V5E, calibration=cal).plan(
+        ctls1, [64, 64])
+    assert p1.t_predicted == pytest.approx(0.5 * p0.t_predicted, rel=1e-9)
+    assert p1.t_base == pytest.approx(0.5 * p0.t_base, rel=1e-9)
