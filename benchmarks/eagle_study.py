@@ -1,7 +1,17 @@
 """Paper Fig. 17 (§7.3): Cascade with an EAGLE-style learned drafter on
 Mixtral. EAGLE drafts are more accurate but drafting costs grow ~5% per
 unit K; the paper finds K=1 the best static setting and Cascade matching
-the best static-K on every task."""
+the best static-K on every task.
+
+Honesty note: this study is simulator-based end to end — `drafter="eagle"`
+selects `sim.simulator`'s *statistical model* of an EAGLE drafter
+(task-calibrated acceptance curves and a per-K draft-cost multiplier),
+not a trained draft head; no EAGLE weights exist in this repo and the
+real serving engine never runs here. The numbers reproduce the paper's
+*relative* claim (Cascade vs static-K under EAGLE-shaped acceptance),
+not EAGLE itself. Training a real learned drafter and folding its
+measured acceptance back into these curves is the ROADMAP's
+"learned-drafter acceptance curves" item."""
 
 from __future__ import annotations
 

@@ -16,7 +16,13 @@ engine (must agree within 1%).
 over the same grid, with two gates: joint tokens/s must be >= independent
 at B=8 (where the expert union saturates and uncoordinated trials tax the
 shared pass), and at B=1 the two policies must agree *exactly* (the
-planner bypass must be invisible, bit for bit)."""
+planner bypass must be invisible, bit for bit).
+
+Every sweep is one `SWEEPS` table entry: flag registration, dispatch, and
+the shared engine/scheduler/model-clock boilerplate (`_run_engine`) and
+gate evaluation (`_gate`) live in one place, so a new sweep (most
+recently `--offload-sweep`, docs/offload.md) is a function plus a table
+row, not a seventh copy of the entrypoint."""
 
 from __future__ import annotations
 
@@ -83,6 +89,30 @@ def main(fast: bool = False):
 
 
 # --------------------------------------------------------------------- #
+# Shared sweep runner: engine/scheduler boilerplate and gate evaluation
+# --------------------------------------------------------------------- #
+
+def _run_engine(cfg, params, reqs, *, controller=None, **engine_kw):
+    """One continuous-batching run on the deterministic model clock —
+    the shared body of every `SWEEPS` entry. Returns (engine, scheduler)
+    after the scheduler has drained `reqs`."""
+    engine_kw.setdefault("max_len", 512)
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                        temperature=0.0, clock="model", seed=0, **engine_kw)
+    sched = ContinuousBatchingScheduler(
+        eng, controller_factory=controller or (lambda: CascadeController()))
+    sched.run(reqs)
+    return eng, sched
+
+
+def _gate(ok: bool, msg: str):
+    """A sweep gate: falsy -> the run exits nonzero with `msg` (CI smoke
+    and the committed artifacts share the same gates)."""
+    if not ok:
+        raise SystemExit(msg)
+
+
+# --------------------------------------------------------------------- #
 # Continuous-batching sweep (model clock)
 # --------------------------------------------------------------------- #
 
@@ -120,12 +150,9 @@ def batch_sweep(fast: bool = False, batches=(1, 2, 4, 8)):
         # the measurement of what independent Cascade control does to
         # utility as the union saturates (the batch planner's motivation —
         # --planner-sweep measures the coordinated engine against it)
-        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
-                            max_batch=b, max_len=512, temperature=0.0,
-                            clock="model", seed=0, policy="independent")
-        sched = ContinuousBatchingScheduler(
-            eng, controller_factory=lambda: CascadeController())
-        sched.run(_sweep_requests(cfg, n_requests, max_new))
+        eng, sched = _run_engine(cfg, params,
+                                 _sweep_requests(cfg, n_requests, max_new),
+                                 max_batch=b, policy="independent")
         tel = eng.telemetry
         row = {
             "B": b,
@@ -155,9 +182,8 @@ def batch_sweep(fast: bool = False, batches=(1, 2, 4, 8)):
     save_json("serving_micro_batch_sweep",
               {"legacy_B1_tokens_per_s": leg_tps, "rows": rows,
                "b1_drift": drift})
-    if drift >= 0.01:
-        raise SystemExit(
-            f"B=1 tokens/s drifted {drift:.2%} from the legacy engine")
+    _gate(drift < 0.01,
+          f"B=1 tokens/s drifted {drift:.2%} from the legacy engine")
     return rows
 
 
@@ -196,12 +222,9 @@ def planner_sweep(fast: bool = False, batches=(1, 2, 4, 8)):
     tps = {}
     for policy in ("independent", "joint"):
         for b in batches:
-            eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
-                                max_batch=b, max_len=512, temperature=0.0,
-                                clock="model", seed=0, hw=hw, policy=policy)
-            sched = ContinuousBatchingScheduler(
-                eng, controller_factory=lambda: CascadeController())
-            sched.run(_sweep_requests(cfg, n_requests, max_new))
+            eng, sched = _run_engine(
+                cfg, params, _sweep_requests(cfg, n_requests, max_new),
+                max_batch=b, hw=hw, policy=policy)
             tel = eng.telemetry
             stats = sched.planner_stats()
             row = {
@@ -236,15 +259,13 @@ def planner_sweep(fast: bool = False, batches=(1, 2, 4, 8)):
                "max_new": max_new, "rows": rows,
                "deep_B": deep, "joint_over_independent": gain,
                "b1_policy_drift": drift})
-    if drift != 0.0:
-        raise SystemExit(
-            f"B=1 joint policy drifted {drift!r} tokens/s from the "
-            "independent controller path (must be exactly 0)")
-    if gain < 1.0:
-        raise SystemExit(
-            f"joint allocation lost to independent control at B={deep}: "
-            f"{tps[('joint', deep)]:.2f} vs "
-            f"{tps[('independent', deep)]:.2f} tokens/s (x{gain:.4f})")
+    _gate(drift == 0.0,
+          f"B=1 joint policy drifted {drift!r} tokens/s from the "
+          "independent controller path (must be exactly 0)")
+    _gate(gain >= 1.0,
+          f"joint allocation lost to independent control at B={deep}: "
+          f"{tps[('joint', deep)]:.2f} vs "
+          f"{tps[('independent', deep)]:.2f} tokens/s (x{gain:.4f})")
     return rows
 
 
@@ -303,14 +324,12 @@ def slo_sweep(fast: bool = False, batches=(4, 8)):
     max_new = 16 if fast else 32
 
     def run(b, bound, zero=False, neutral=False):
-        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
-                            max_batch=b, max_len=512, temperature=0.0,
-                            clock="model", seed=0, hw=hw)
-        fac = ((lambda: StaticKController(0)) if zero
-               else (lambda: CascadeController()))
-        sched = ContinuousBatchingScheduler(eng, controller_factory=fac)
-        res = sched.run(_slo_requests(cfg, n_requests, max_new, bound,
-                                      neutral=neutral))
+        fac = (lambda: StaticKController(0)) if zero else None
+        eng, sched = _run_engine(
+            cfg, params,
+            _slo_requests(cfg, n_requests, max_new, bound, neutral=neutral),
+            controller=fac, max_batch=b, hw=hw)
+        res = sched.results
         t_steps = sum(s.t_total for s in eng.telemetry.steps)
         tiers = {"latency": [], "throughput": []}
         for r in res:
@@ -341,12 +360,10 @@ def slo_sweep(fast: bool = False, batches=(4, 8)):
         # refactor leaks into unbounded traffic.
         free = run(b, None)
         neutral = run(b, None, neutral=True)
-        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
-                            max_batch=b, max_len=512, temperature=0.0,
-                            clock="model", seed=0, hw=hw)
-        sched = ContinuousBatchingScheduler(
-            eng, controller_factory=lambda: CascadeController())
-        bare_res = sched.run(_sweep_requests(cfg, n_requests, max_new))
+        eng, sched = _run_engine(cfg, params,
+                                 _sweep_requests(cfg, n_requests, max_new),
+                                 max_batch=b, hw=hw)
+        bare_res = sched.results
         bare_tps = sched.tokens_per_second()
         drift = abs(neutral["tokens_per_s"] - bare_tps)
         drift_max = max(drift_max, drift)
@@ -412,25 +429,21 @@ def slo_sweep(fast: bool = False, batches=(4, 8)):
                "max_new": max_new, "rows": rows, "deep_B": deep,
                "no_slo_drift": drift_max,
                "throughput_retention": retention})
-    if drift_max != 0.0:
-        raise SystemExit(
-            f"no-SLO tokens/s drifted {drift_max!r} from the bare planner "
-            "path (must be exactly 0: the constraint pipeline must be "
-            "invisible without bounds)")
+    _gate(drift_max == 0.0,
+          f"no-SLO tokens/s drifted {drift_max!r} from the bare planner "
+          "path (must be exactly 0: the constraint pipeline must be "
+          "invisible without bounds)")
     for row in rows:
-        if row["violations"] != 0:
-            raise SystemExit(
-                f"latency-tier TPOT bound violated at B={row['B']}: max "
-                f"{row['mixed_latency_tpot']:.5f} vs bound "
-                f"{row['bound']:.5f}")
-    if gates["slo_denied"] == 0:
-        raise SystemExit(
-            f"the bound never bound: planner denied 0 grants at B={deep} "
-            "(the latency gate would be vacuous)")
-    if retention < 0.95:
-        raise SystemExit(
-            f"throughput-tier tokens/s dropped to {retention:.3f}x the "
-            f"unconstrained planner at B={deep} (must be >= 0.95)")
+        _gate(row["violations"] == 0,
+              f"latency-tier TPOT bound violated at B={row['B']}: max "
+              f"{row['mixed_latency_tpot']:.5f} vs bound "
+              f"{row['bound']:.5f}")
+    _gate(gates["slo_denied"] > 0,
+          f"the bound never bound: planner denied 0 grants at B={deep} "
+          "(the latency gate would be vacuous)")
+    _gate(retention >= 0.95,
+          f"throughput-tier tokens/s dropped to {retention:.3f}x the "
+          f"unconstrained planner at B={deep} (must be >= 0.95)")
     return rows
 
 
@@ -488,6 +501,16 @@ def _ep_hw():
                     ici_bw=5e8)
 
 
+def _ep_controller():
+    """Fast-converging Cascade config for the trained-model sweeps:
+    synchronized joins at B=8 would otherwise stretch the trial phases
+    past the request lifetimes (the sweeps measure steady-state
+    allocation, not FSM exploration)."""
+    from repro.core import CascadeConfig
+    return CascadeController(CascadeConfig(
+        trial_len=2, max_trials=2, baseline_iters=2, set_len=64))
+
+
 def _ep_requests(cfg, n_requests: int, max_new: int):
     """Draftable periodic prompts over the trained vocab (the copy task the
     model learned), varying period so requests route differently."""
@@ -527,8 +550,8 @@ def ep_sweep(fast: bool = False, shards=(1, 2, 4),
       * the shard-aware planner must not lose to the global-union planner
         on the skewed placement at the deepest point (shards=4, zipf,
         B=max)."""
-    from repro.core import (BatchSpecPlanner, CascadeConfig,
-                            ExpertPlacement, PlannerConfig)
+    from repro.core import (BatchSpecPlanner, ExpertPlacement,
+                            PlannerConfig)
     cfg, params = _ep_model()
     hw = _ep_hw()
     if fast:
@@ -536,10 +559,7 @@ def ep_sweep(fast: bool = False, shards=(1, 2, 4),
         batches = tuple(b for b in batches if b in (1, max(batches)))
     n_requests = 2 * max(batches)
     max_new = 48
-
-    def controller():
-        return CascadeController(CascadeConfig(
-            trial_len=2, max_trials=2, baseline_iters=2, set_len=64))
+    controller = _ep_controller
 
     def run(placement, shard_aware, b):
         planner = BatchSpecPlanner(
@@ -547,14 +567,10 @@ def ep_sweep(fast: bool = False, shards=(1, 2, 4),
                                           shard_aware=shard_aware,
                                           stagger_tests=False),
             placement=placement)
-        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
-                            max_batch=b, max_len=512, temperature=0.0,
-                            clock="model", seed=0, hw=hw,
-                            placement=placement, planner=planner)
-        sched = ContinuousBatchingScheduler(
-            eng, controller_factory=controller)
-        sched.run(_ep_requests(cfg, n_requests, max_new))
-        return eng, sched
+        return _run_engine(cfg, params,
+                           _ep_requests(cfg, n_requests, max_new),
+                           controller=controller, max_batch=b, hw=hw,
+                           placement=placement, planner=planner)
 
     rows = []
     tps = {}
@@ -613,14 +629,173 @@ def ep_sweep(fast: bool = False, shards=(1, 2, 4),
                "num_experts": e, "max_new": max_new, "rows": rows,
                "s1_drift": drift, "deep_shards": deep_s, "deep_B": deep_b,
                "aware_over_global": gain})
-    if drift != 0.0:
-        raise SystemExit(
-            f"shards=1 tokens/s drifted {drift!r} from the placement-free "
-            "engine (must be exactly 0)")
-    if gain < 1.0:
-        raise SystemExit(
-            f"shard-aware planning lost to the global-union planner on the "
-            f"zipf placement at shards={deep_s}, B={deep_b}: x{gain:.4f}")
+    _gate(drift == 0.0,
+          f"shards=1 tokens/s drifted {drift!r} from the placement-free "
+          "engine (must be exactly 0)")
+    _gate(gain >= 1.0,
+          f"shard-aware planning lost to the global-union planner on the "
+          f"zipf placement at shards={deep_s}, B={deep_b}: x{gain:.4f}")
+    return rows
+
+
+# --------------------------------------------------------------------- #
+# Offload sweep (model clock): tiered expert residency with
+# speculation-guided prefetch (docs/offload.md)
+# --------------------------------------------------------------------- #
+
+def _offload_hw():
+    """The ep-sweep regime plus a host link (regime choice, not a
+    physical device): `host_bw` scaled so one expert's host->HBM fetch
+    (~786us here) is a real fraction of the reduced model's ~5ms pass —
+    small enough that the draft/sample + pre-MoE compute window can hide
+    a prefetched fetch, large enough that a demand miss on the critical
+    path costs visible tokens/s. On real hardware the same ratio comes
+    out of PCIe vs HBM figures (TPU_V5E.host_bw)."""
+    from repro.core import Hardware
+    return Hardware("tpu-v5e-offload-scaled", hbm_bw=1e9, peak_flops=1e10,
+                    ici_bw=5e8, host_bw=1e9)
+
+
+def _offload_requests(cfg, n_requests: int, max_new: int, n_slices: int = 6):
+    """Draftable periodic prompts over narrow vocab *slices* — each
+    request's tokens come from one of `n_slices` disjoint vocab bands, so
+    its routed expert set is a content-specific subset (measured: mean
+    per-pass working set ~2.4 of 8 experts per request at B=1, vs
+    near-saturated under full-vocab `_ep_requests`). Consecutive requests
+    use different bands, so the working set *rotates* at request boundaries
+    and within the mixed batch — the locality-transition regime where a
+    prefetcher can act (a fully saturated working set is a provable tie:
+    every resident is re-touched every pass, so no eviction is safe and
+    every policy pays the same forced fetches)."""
+    rng = np.random.default_rng(11)
+    v0, v1 = 3, cfg.vocab_size
+    out = []
+    for i in range(n_requests):
+        sl = i % n_slices
+        lo = v0 + sl * (v1 - v0) // n_slices
+        hi = v0 + (sl + 1) * (v1 - v0) // n_slices
+        period = 4 + 2 * (i % 3)
+        pat = [int(x) for x in rng.integers(lo, hi, period)]
+        out.append(Request(request_id=f"r{i}", prompt=pat * (32 // period),
+                           max_new=max_new, task=f"s{sl}"))
+    return out
+
+
+def offload_sweep(fast: bool = False, batches=(2, 4), slots: int = 5):
+    """Tiered-residency serving on the deterministic model clock
+    (docs/offload.md). The trained 8-expert model (`_ep_model`) runs with
+    EVERY expert demoted to the host tier and an HBM cap of `slots`
+    cache slots — the vocab-sliced workload's rotating working set
+    exceeds the cap, so misses are forced at every locality transition —
+    with the engine's router-probe prefetcher on vs off, under chunked
+    prefill (chunk=16: admissions enter the step loop, where the
+    prefetcher can see them). Two reference runs per batch size: `plain`
+    (no residency at all) and `all_hbm` (a ResidencyState tracking an
+    all-hbm placement — the pipeline fully threaded but the tier empty).
+
+    Gates (committed artifact + CI smoke):
+      * uncapped tier drift: `all_hbm` tokens/s == `plain` EXACTLY, per B
+        (the residency layer must be invisible without a host tier);
+      * per B: prefetch-on tokens/s > prefetch-off under the
+        miss-forcing cap (speculation's lookahead must buy real latency
+        hiding, not just move the fetches earlier).
+    Hit-rate / fetch-bytes / eviction telemetry lands in the artifact."""
+    from repro.core import (BatchSpecPlanner, ExpertPlacement,
+                            PlannerConfig, ResidencyState, expert_hbm_bytes)
+    cfg, params = _ep_model()
+    hw = _offload_hw()
+    e = cfg.num_experts
+    eb = expert_hbm_bytes(cfg)
+    if fast:
+        batches = tuple(b for b in batches if b == max(batches))
+    n_requests, max_new = (12, 16) if fast else (24, 24)
+    pl = ExpertPlacement.contiguous(e, 1)
+    host_ids = list(range(e))              # the whole expert population
+    tiered = pl.offload(host_ids)
+    cap = slots * eb                       # nothing pinned: cap == cache
+
+    def run(b, residency=None, prefetch=True):
+        planner = BatchSpecPlanner(
+            cfg, hw,
+            config=PlannerConfig(policy="joint", stagger_tests=False),
+            placement=pl if residency is None else None,
+            residency=residency)
+        return _run_engine(cfg, params,
+                           _offload_requests(cfg, n_requests, max_new),
+                           controller=_ep_controller, max_batch=b, hw=hw,
+                           chunk=16,
+                           placement=None if residency is not None else pl,
+                           residency=residency, prefetch=prefetch,
+                           planner=planner)
+
+    rows = []
+    tps = {}
+
+    def record(mode, b, eng, sched, rs=None):
+        tel = eng.telemetry
+        row = {"mode": mode, "B": b,
+               "tokens_per_s": sched.tokens_per_second(),
+               "mean_request_utility": sched.mean_request_utility(),
+               "prefetch_hit_rate": tel.prefetch_hit_rate,
+               "fetch_bytes": tel.fetch_bytes,
+               "evictions": tel.evictions,
+               "t_fetch_unhidden": sum(s.t_fetch for s in tel.steps),
+               "steps": len(tel.steps)}
+        if rs is not None:
+            row["residency"] = rs.snapshot()
+        rows.append(row)
+        tps[(mode, b)] = row["tokens_per_s"]
+        emit(f"serving_micro/offload_{mode}_B{b}_tokens_per_s",
+             row["tokens_per_s"],
+             f"hit={row['prefetch_hit_rate']:.3f};"
+             f"fetchMB={row['fetch_bytes'] / 1e6:.2f};"
+             f"evict={row['evictions']}")
+        return row
+
+    for b in batches:
+        eng, sched = run(b)
+        record("plain", b, eng, sched)
+        eng, sched = run(b, ResidencyState(pl, cfg))
+        record("all_hbm", b, eng, sched)
+        rs_on = ResidencyState(tiered, cfg, cap_bytes=cap)
+        eng, sched = run(b, rs_on)
+        record("prefetch_on", b, eng, sched, rs_on)
+        rs_off = ResidencyState(tiered, cfg, cap_bytes=cap)
+        eng, sched = run(b, rs_off, prefetch=False)
+        record("prefetch_off", b, eng, sched, rs_off)
+
+    drift = max(abs(tps[("all_hbm", b)] - tps[("plain", b)])
+                for b in batches)
+    gains = {b: (tps[("prefetch_on", b)] / tps[("prefetch_off", b)]
+                 if tps[("prefetch_off", b)] else 0.0) for b in batches}
+    emit("serving_micro/offload_all_hbm_drift", drift,
+         "must-be-exactly-0")
+    for b in batches:
+        emit(f"serving_micro/offload_B{b}_prefetch_on_over_off", gains[b],
+             "must-be>1")
+    on_rows = [r for r in rows if r["mode"] == "prefetch_on"]
+    save_json("serving_micro_offload_sweep",
+              {"hw": {"name": hw.name, "hbm_bw": hw.hbm_bw,
+                      "peak_flops": hw.peak_flops, "ici_bw": hw.ici_bw,
+                      "host_bw": hw.host_bw},
+               "num_experts": e, "host_experts": host_ids,
+               "expert_bytes": eb, "cap_bytes": cap, "slots": slots,
+               "max_new": max_new, "rows": rows,
+               "all_hbm_drift": drift,
+               "prefetch_on_over_off": {str(b): gains[b]
+                                        for b in batches}})
+    _gate(drift == 0.0,
+          f"all-hbm residency drifted {drift!r} tokens/s from the "
+          "residency-free engine (must be exactly 0)")
+    for b in batches:
+        _gate(gains[b] > 1.0,
+              f"prefetch did not pay at B={b} under the miss-forcing cap: "
+              f"on {tps[('prefetch_on', b)]:.2f} vs off "
+              f"{tps[('prefetch_off', b)]:.2f} tokens/s (x{gains[b]:.4f})")
+    _gate(all(r["prefetch_hit_rate"] > 0 and r["fetch_bytes"] > 0
+              for r in on_rows),
+          "prefetch-on rows show no cache traffic — the cap never forced "
+          "a fetch (sweep regime mis-configured)")
     return rows
 
 
@@ -667,12 +842,10 @@ def prefill_sweep(fast: bool = False, depths=(2, 8), chunks=None):
     rows = []
     for depth in depths:
         for chunk in chunks:
-            eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
-                                max_batch=4, max_len=512, temperature=0.0,
-                                clock="model", seed=0, chunk=chunk)
-            sched = ContinuousBatchingScheduler(
-                eng, controller_factory=lambda: CascadeController())
-            sched.run(_prefill_requests(cfg, depth, prompt_len, max_new))
+            eng, sched = _run_engine(
+                cfg, params,
+                _prefill_requests(cfg, depth, prompt_len, max_new),
+                max_batch=4, chunk=chunk)
             tel = eng.telemetry
             row = {
                 "depth": depth,
@@ -708,10 +881,9 @@ def prefill_sweep(fast: bool = False, depths=(2, 8), chunks=None):
                "max_batch": 4, "rows": rows,
                "deep_queue_ttft_gain": gain,
                "best_chunk": best["chunk"]})
-    if gain <= 1.0:
-        raise SystemExit(
-            f"chunked admission did not beat blocking TTFT at depth {deep} "
-            f"(gain {gain:.3f})")
+    _gate(gain > 1.0,
+          f"chunked admission did not beat blocking TTFT at depth {deep} "
+          f"(gain {gain:.3f})")
     return rows
 
 
@@ -784,26 +956,22 @@ def _occupancy_sweep(fast: bool = False):
              f"packed={row['packed_us']:.0f}us;dense={row['dense_us']:.0f}us")
 
     for r in rows:
-        if r["occupancy"] <= 0.25 and r["bytes_ratio"] > 0.35:
-            raise SystemExit(
-                f"packed path moved {r['bytes_ratio']:.2f}x the dense "
-                f"expert bytes at occupancy {r['occupancy']:.2f} "
-                "(gate: <= 0.35x at U/E <= 0.25)")
+        _gate(not (r["occupancy"] <= 0.25 and r["bytes_ratio"] > 0.35),
+              f"packed path moved {r['bytes_ratio']:.2f}x the dense "
+              f"expert bytes at occupancy {r['occupancy']:.2f} "
+              "(gate: <= 0.35x at U/E <= 0.25)")
     traffic = [r["packed_expert_bytes"] for r in rows]
-    if any(b2 < b1 for b1, b2 in zip(traffic, traffic[1:])):
-        raise SystemExit(f"packed expert traffic not monotone in U: "
-                         f"{traffic}")
+    _gate(not any(b2 < b1 for b1, b2 in zip(traffic, traffic[1:])),
+          f"packed expert traffic not monotone in U: {traffic}")
     full = [r for r in rows if r["u_cap"] == cfg.num_experts]
-    if not full:
-        raise SystemExit("occupancy sweep never reached U = E")
+    _gate(bool(full), "occupancy sweep never reached U = E")
     for r in full:
-        if (r["packed_expert_bytes"] != r["dense_expert_bytes"]
-                or r["packed_ffn_flops"] != r["dense_ffn_flops"]):
-            raise SystemExit(
-                f"packed != dense counters at U = E (T={r['tokens']}): "
-                f"{r['packed_expert_bytes']} vs {r['dense_expert_bytes']} "
-                f"bytes, {r['packed_ffn_flops']} vs "
-                f"{r['dense_ffn_flops']} FLOPs")
+        _gate(r["packed_expert_bytes"] == r["dense_expert_bytes"]
+              and r["packed_ffn_flops"] == r["dense_ffn_flops"],
+              f"packed != dense counters at U = E (T={r['tokens']}): "
+              f"{r['packed_expert_bytes']} vs {r['dense_expert_bytes']} "
+              f"bytes, {r['packed_ffn_flops']} vs "
+              f"{r['dense_ffn_flops']} FLOPs")
     return {"num_experts": cfg.num_experts,
             "experts_per_token": cfg.experts_per_token, "rows": rows}
 
@@ -817,21 +985,17 @@ def _packed_stream_check(fast: bool = False):
     max_new = 12 if fast else 24
 
     def streams(b, packed):
-        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
-                            max_batch=b, max_len=512, temperature=0.0,
-                            clock="model", seed=0, packed=packed)
-        sched = ContinuousBatchingScheduler(
-            eng, controller_factory=lambda: CascadeController())
-        sched.run(_sweep_requests(cfg, max(b, 4), max_new))
+        _, sched = _run_engine(cfg, params,
+                               _sweep_requests(cfg, max(b, 4), max_new),
+                               max_batch=b, packed=packed)
         return {r.telemetry.request_id: r.tokens for r in sched.results}
 
     for b in (1, 4):
         dense, packed = streams(b, False), streams(b, True)
-        if dense != packed:
-            diff = [k for k in dense if dense[k] != packed.get(k)]
-            raise SystemExit(
-                f"packed token streams diverged from dense at B={b} "
-                f"(requests {diff}) — numerics drift reached sampling")
+        diff = [k for k in dense if dense[k] != packed.get(k)]
+        _gate(dense == packed,
+              f"packed token streams diverged from dense at B={b} "
+              f"(requests {diff}) — numerics drift reached sampling")
         emit(f"serving_micro/packed_B{b}_bit_identical", 1.0,
              "must-be-1")
     return True
@@ -853,15 +1017,10 @@ def _calibrate_planner(fast: bool = False):
     max_new = 16 if fast else 32
 
     def run(planner=None):
-        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
-                            max_batch=b, max_len=512, temperature=0.0,
-                            clock="model", seed=0, hw=hw,
-                            policy=None if planner else "joint",
-                            planner=planner)
-        sched = ContinuousBatchingScheduler(
-            eng, controller_factory=lambda: CascadeController())
-        sched.run(_sweep_requests(cfg, b, max_new))
-        return eng, sched
+        return _run_engine(cfg, params, _sweep_requests(cfg, b, max_new),
+                           max_batch=b, hw=hw,
+                           policy=None if planner else "joint",
+                           planner=planner)
 
     eng0, sched0 = run()
     steps = [s for s in eng0.telemetry.steps
@@ -883,13 +1042,12 @@ def _calibrate_planner(fast: bool = False):
          f"scale={cal.time_scale:.4f};offset={cal.time_offset:.2e}")
     emit("serving_micro/calibrate_plan_time_error_after", err_after,
          "must-be<before")
-    if err_before <= 0:
-        raise SystemExit("uncalibrated run reported zero plan_time_error — "
-                         "nothing to calibrate (regime mis-configured?)")
-    if err_after >= err_before:
-        raise SystemExit(
-            f"calibration did not improve plan_time_error: "
-            f"{err_after:.4f} after vs {err_before:.4f} before")
+    _gate(err_before > 0,
+          "uncalibrated run reported zero plan_time_error — "
+          "nothing to calibrate (regime mis-configured?)")
+    _gate(err_after < err_before,
+          f"calibration did not improve plan_time_error: "
+          f"{err_after:.4f} after vs {err_before:.4f} before")
     return {
         "B": b, "max_new": max_new, "steps_fitted": len(steps),
         "time_scale": cal.time_scale, "time_offset": cal.time_offset,
@@ -914,39 +1072,43 @@ def calibrate(fast: bool = False):
     return {"occupancy": occupancy, "calibration": calibration}
 
 
+# --------------------------------------------------------------------- #
+# Sweep table: one row per entrypoint — flag, runner, help. Registration
+# and dispatch read this table; adding a sweep is adding a row.
+# --------------------------------------------------------------------- #
+
+SWEEPS = (
+    ("batch-sweep", batch_sweep,
+     "continuous-batching sweep over B in {1,2,4,8}"),
+    ("planner-sweep", planner_sweep,
+     "joint vs independent K allocation sweep"),
+    ("slo-sweep", slo_sweep,
+     "mixed-tier TPOT bounds: victim protection vs unconstrained joint "
+     "planning"),
+    ("ep-sweep", ep_sweep,
+     "EP shards x placement skew x B: shard-aware vs global-union "
+     "planning"),
+    ("offload-sweep", offload_sweep,
+     "tiered expert residency: all-hbm drift gate and prefetch-on vs "
+     "prefetch-off under a miss-forcing HBM cap"),
+    ("prefill-sweep", prefill_sweep,
+     "queue depth x chunk size -> TTFT/TPOT sweep"),
+    ("calibrate", calibrate,
+     "packed-vs-dense traffic by union occupancy, packed bit-identity, "
+     "and wall-clock calibration of the analytic cost model"),
+)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
-    ap.add_argument("--batch-sweep", action="store_true",
-                    help="continuous-batching sweep over B in {1,2,4,8}")
-    ap.add_argument("--planner-sweep", action="store_true",
-                    help="joint vs independent K allocation sweep")
-    ap.add_argument("--slo-sweep", action="store_true",
-                    help="mixed-tier TPOT bounds: victim protection vs "
-                         "unconstrained joint planning")
-    ap.add_argument("--ep-sweep", action="store_true",
-                    help="EP shards x placement skew x B: shard-aware vs "
-                         "global-union planning")
-    ap.add_argument("--prefill-sweep", action="store_true",
-                    help="queue depth x chunk size -> TTFT/TPOT sweep")
-    ap.add_argument("--calibrate", action="store_true",
-                    help="packed-vs-dense traffic by union occupancy, "
-                         "packed bit-identity, and wall-clock calibration "
-                         "of the analytic cost model")
     ap.add_argument("--no-micro", action="store_true",
                     help="skip the single-call microbenchmarks")
+    for flag, _, help_text in SWEEPS:
+        ap.add_argument(f"--{flag}", action="store_true", help=help_text)
     args = ap.parse_args()
     if not args.no_micro:
         main(fast=args.fast)
-    if args.batch_sweep:
-        batch_sweep(fast=args.fast)
-    if args.planner_sweep:
-        planner_sweep(fast=args.fast)
-    if args.slo_sweep:
-        slo_sweep(fast=args.fast)
-    if args.ep_sweep:
-        ep_sweep(fast=args.fast)
-    if args.prefill_sweep:
-        prefill_sweep(fast=args.fast)
-    if args.calibrate:
-        calibrate(fast=args.fast)
+    for flag, fn, _ in SWEEPS:
+        if getattr(args, flag.replace("-", "_")):
+            fn(fast=args.fast)

@@ -14,8 +14,10 @@ from .cost_model import (BatchCostOracle, Calibration, ExpertPlacement,
                          expected_unique_experts_sharded)
 from .manager import BASELINE, TEST, SET, CascadeConfig, SpeculationManager
 from .planner import (BatchPlan, BatchSpecPlanner, BreakEvenConstraint,
-                      DraftYieldModel, GrantConstraint, PlanDecision,
+                      DraftYieldModel, FetchDeadlineConstraint,
+                      GrantConstraint, MemoryCapConstraint, PlanDecision,
                       PlannerConfig, SLOTpotConstraint, greedy_allocate)
+from .residency import ResidencyState, expert_hbm_bytes
 from .slo import LATENCY, THROUGHPUT, RequestSLO, tpot_within
 from .utility import IterationRecord, UtilityAnalyzer
 
@@ -32,5 +34,7 @@ __all__ = [
     "ExpertPlacement", "expected_unique_experts_sharded", "a2a_bytes",
     "RequestSLO", "LATENCY", "THROUGHPUT", "tpot_within",
     "GrantConstraint", "BreakEvenConstraint", "SLOTpotConstraint",
+    "MemoryCapConstraint", "FetchDeadlineConstraint",
+    "ResidencyState", "expert_hbm_bytes",
     "DraftYieldModel",
 ]

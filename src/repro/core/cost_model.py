@@ -25,11 +25,21 @@ class Hardware:
     peak_flops: float        # FLOP/s at serving precision
     ici_bw: float = 0.0      # bytes/s per link (TPU interconnect)
     weight_bytes: int = 2    # serving precision (bf16/fp16 = 2)
+    #: host<->HBM link bandwidth (PCIe/DMA class) — the path an offloaded
+    #: (host-tier) expert's weights cross to become HBM-resident
+    #: (docs/offload.md). 0 = no offload path: fetch pricing raises.
+    host_bw: float = 0.0
+    #: HBM capacity in bytes (0 = unspecified). Informational for the
+    #: large-config sanity checks; residency caps are set per shard on
+    #: `ResidencyState`, not read from here.
+    hbm_bytes: float = 0.0
 
 
-TPU_V5E = Hardware("tpu-v5e", hbm_bw=819e9, peak_flops=197e12, ici_bw=50e9)
+TPU_V5E = Hardware("tpu-v5e", hbm_bw=819e9, peak_flops=197e12, ici_bw=50e9,
+                   host_bw=32e9, hbm_bytes=16e9)
 # the paper's workstation GPU (RTX 6000 Ada): ~960 GB/s GDDR6, ~91 TFLOP/s fp16
-RTX_6000_ADA = Hardware("rtx-6000-ada", hbm_bw=960e9, peak_flops=91e12)
+RTX_6000_ADA = Hardware("rtx-6000-ada", hbm_bw=960e9, peak_flops=91e12,
+                        host_bw=32e9, hbm_bytes=48e9)
 
 
 # --------------------------------------------------------------------- #
@@ -226,8 +236,21 @@ class ExpertPlacement:
     analytic per-shard union takes min-over-replicas (see
     `_rebalance_replicas` — it can only lower the gating shard, never
     raise it). The measured engine path keeps routing to primary homes
-    (`primary_shard_of`); serving-side replica routing is future work."""
+    (`primary_shard_of`); serving-side replica routing is future work.
+
+    Residency tiers (`tier_of`, docs/offload.md): each expert additionally
+    carries a memory tier — `"hbm"` (weights always device-resident, the
+    default) or `"host"` (weights live in host memory and must cross the
+    `Hardware.host_bw` link before the shard can stream them). `tier_of is
+    None` means all-`hbm` and degrades bit-exactly to the flat placement.
+    A replicated expert cannot be `host`-tier: replication exists to
+    relieve the gating shard, and a replica that might not be resident
+    would make the min-over-replicas relief unsound. Tiers do not change
+    homes — `shard_of`, `counts`, and the routed activation curve are
+    tier-blind; what changes is which activated experts cost a host fetch,
+    tracked dynamically by `ResidencyState` (core/residency.py)."""
     shard_of: Tuple
+    tier_of: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self):
         if not self.shard_of:
@@ -253,6 +276,21 @@ class ExpertPlacement:
         if resident != set(range(n)):
             raise ValueError("shard ids must cover 0..n_shards-1 with every "
                              f"shard non-empty, got {self.shard_of}")
+        if self.tier_of is not None:
+            tiers = tuple(str(t) for t in self.tier_of)
+            if len(tiers) != len(self.shard_of):
+                raise ValueError(f"{len(tiers)} tiers vs "
+                                 f"{len(self.shard_of)} experts")
+            bad = sorted({t for t in tiers if t not in ("hbm", "host")})
+            if bad:
+                raise ValueError(f"unknown tier(s) {bad}; expected "
+                                 f"'hbm' or 'host'")
+            for e, (s, t) in enumerate(zip(self.shard_of, tiers)):
+                if t == "host" and isinstance(s, tuple):
+                    raise ValueError(f"expert {e} is replicated and cannot "
+                                     "be host-tier (replica relief assumes "
+                                     "residency)")
+            object.__setattr__(self, "tier_of", tiers)
 
     @property
     def num_experts(self) -> int:
@@ -287,12 +325,46 @@ class ExpertPlacement:
 
     @property
     def resident_counts(self) -> Tuple[int, ...]:
-        """Expert weights resident per shard, replicas included (the HBM
-        footprint view; equals `counts` without replication)."""
+        """Expert weights *statically* HBM-resident per shard, replicas
+        included — the pinned HBM footprint view. Host-tier experts are
+        not counted: their residency is dynamic, tracked by
+        `ResidencyState.resident_counts` under a byte cap. Equals `counts`
+        for an all-hbm placement without replication."""
         c = [0] * self.n_shards
-        for s in self.shard_of:
+        tiers = self.tiers
+        for e, s in enumerate(self.shard_of):
+            if tiers[e] == "host":
+                continue
             for x in (s if isinstance(s, tuple) else (s,)):
                 c[x] += 1
+        return tuple(c)
+
+    @property
+    def tiers(self) -> Tuple[str, ...]:
+        """Per-expert tier, `tier_of` defaulted to all-`hbm`."""
+        return self.tier_of if self.tier_of is not None \
+            else ("hbm",) * len(self.shard_of)
+
+    @property
+    def has_host_tier(self) -> bool:
+        return self.tier_of is not None and "host" in self.tier_of
+
+    @property
+    def hbm_tier_counts(self) -> Tuple[int, ...]:
+        """Homed hbm-tier experts per shard (primary residence)."""
+        c = [0] * self.n_shards
+        for s, t in zip(self.primary_shard_of, self.tiers):
+            if t == "hbm":
+                c[s] += 1
+        return tuple(c)
+
+    @property
+    def host_tier_counts(self) -> Tuple[int, ...]:
+        """Homed host-tier experts per shard (primary residence)."""
+        c = [0] * self.n_shards
+        for s, t in zip(self.primary_shard_of, self.tiers):
+            if t == "host":
+                c[s] += 1
         return tuple(c)
 
     @property
@@ -374,7 +446,19 @@ class ExpertPlacement:
                 raise ValueError(f"expert {e}: replica shard beyond the "
                                  f"placement's {self.n_shards} shards")
             new[e] = merged
-        return ExpertPlacement(tuple(new))
+        return ExpertPlacement(tuple(new), self.tier_of)
+
+    def offload(self, expert_ids) -> "ExpertPlacement":
+        """A new placement with `expert_ids` demoted to the host tier
+        (docs/offload.md). Homes are unchanged; replicated experts cannot
+        be offloaded (ValueError via __post_init__)."""
+        tiers = list(self.tiers)
+        for e in expert_ids:
+            if not 0 <= int(e) < self.num_experts:
+                raise ValueError(f"expert {e} outside "
+                                 f"0..{self.num_experts - 1}")
+            tiers[int(e)] = "host"
+        return ExpertPlacement(self.shard_of, tuple(tiers))
 
 
 def _hot_shard(per_shard) -> int:
@@ -404,7 +488,7 @@ def _normalized_shard_weights(counts, n_requests: int, shard_weights):
     return ws
 
 
-def _rebalance_replicas(per_shard, counts, groups):
+def _rebalance_replicas(per_shard, counts, groups, capacity=None):
     """Min-over-replicas pricing relief (hot-expert replication): a
     replicated expert group's activated load can be served from whichever
     of its replica shards is coolest, so activated mass may move off the
@@ -415,7 +499,15 @@ def _rebalance_replicas(per_shard, counts, groups):
     mass OFF the argmax shard and lands the target strictly below the old
     max, so the gating count is non-increasing — replication can only
     relieve the gating shard, never create a hotter one (property-tested).
-    Shard totals are conserved, so the union is unchanged."""
+    Shard totals are conserved, so the union is unchanged.
+
+    `capacity` ([S] expert-count headroom, from
+    `ResidencyState.capacity_experts` under a residency cap): a shard
+    whose activated load already meets its residency capacity cannot
+    absorb rebalanced mass — serving a replica from it would force weights
+    it has no room to keep resident — so moves are clamped to the target's
+    remaining headroom and full shards are skipped. None (no residency
+    cap) is bit-identical to the uncapped rebalance."""
     loads = list(per_shard)
     # movable parcels: [mass, shard-it-sits-on, full replica set]
     parcels = []
@@ -429,6 +521,9 @@ def _rebalance_replicas(per_shard, counts, groups):
             if src != hot or m <= 1e-12:
                 continue
             for a in reps:
+                if capacity is not None and \
+                        loads[a] >= capacity[a] - 1e-12:
+                    continue  # no residency headroom on this target
                 if loads[a] < loads[hot] - 1e-12 and (
                         best is None or loads[a] < loads[best[1]]):
                     best = (idx, a)
@@ -437,6 +532,8 @@ def _rebalance_replicas(per_shard, counts, groups):
         idx, tgt = best
         m, src, reps = parcels[idx]
         delta = min(m, (loads[src] - loads[tgt]) / 2.0)
+        if capacity is not None:
+            delta = min(delta, capacity[tgt] - loads[tgt])
         loads[src] -= delta
         loads[tgt] += delta
         parcels[idx][0] = m - delta
@@ -445,12 +542,15 @@ def _rebalance_replicas(per_shard, counts, groups):
 
 
 def _sharded_union(num_experts: int, top_k: int, ns, counts, norm_ws,
-                   affinity: float, replica_groups=None) -> dict:
+                   affinity: float, replica_groups=None,
+                   capacity=None) -> dict:
     """Core per-shard curve over pre-normalized profiles (see
     `expected_unique_experts_sharded` for the derivation and the public
     normalizing entry point). `replica_groups` (from
     `ExpertPlacement.replication_groups`) applies the min-over-replicas
-    relief after the primary-home curve."""
+    relief after the primary-home curve; `capacity` bounds what the relief
+    may land on each shard (residency headroom, see
+    `_rebalance_replicas`)."""
     s_n = len(counts)
     total = sum(ns)
     if num_experts == 0 or total == 0:
@@ -475,7 +575,8 @@ def _sharded_union(num_experts: int, top_k: int, ns, counts, norm_ws,
         val = floor + (rand - floor) * (1.0 - affinity)
         per_shard.append(min(max(val, 0.0), e_s))
     if replica_groups:
-        per_shard = _rebalance_replicas(per_shard, counts, replica_groups)
+        per_shard = _rebalance_replicas(per_shard, counts, replica_groups,
+                                        capacity)
     hot = _hot_shard(per_shard)
     return {"per_shard": per_shard, "union": sum(per_shard),
             "max_shard": per_shard[hot], "hot_shard": hot, "n_shards": s_n}
@@ -485,7 +586,8 @@ def expected_unique_experts_sharded(num_experts: int, top_k: int,
                                     tokens_per_request,
                                     placement: Optional[ExpertPlacement],
                                     affinity: float = 0.0,
-                                    shard_weights=None) -> dict:
+                                    shard_weights=None,
+                                    capacity=None) -> dict:
     """Per-EP-shard expected distinct-expert activations for B requests
     jointly verifying sum(n_i) tokens in one shared pass.
 
@@ -519,7 +621,8 @@ def expected_unique_experts_sharded(num_experts: int, top_k: int,
     norm_ws = _normalized_shard_weights(counts, len(ns), shard_weights)
     return _sharded_union(num_experts, top_k, ns, counts, norm_ws, affinity,
                           replica_groups=placement.replication_groups
-                          if placement.has_replication else None)
+                          if placement.has_replication else None,
+                          capacity=capacity)
 
 
 def a2a_bytes(cfg, n_tokens: int, n_shards: int, wb: int = 2) -> float:
@@ -537,12 +640,19 @@ def a2a_bytes(cfg, n_tokens: int, n_shards: int, wb: int = 2) -> float:
 def _a2a_time(cfg, hw: "Hardware", n_tokens: int, n_shards: int,
               wb: int = 2) -> float:
     """Seconds the collective adds to the pass: per-shard egress (the total
-    volume spreads across S links) over the interconnect bandwidth (HBM
-    bandwidth when the hardware has no ici figure)."""
+    volume spreads across S links) over the interconnect bandwidth.
+    Hardware without an interconnect figure cannot host a multi-shard
+    placement — this used to silently fall back to HBM bandwidth, which
+    priced the collective absurdly cheap on ici-less parts like
+    `RTX_6000_ADA`; now it is an explicit error."""
     if n_shards <= 1:
         return 0.0
-    link_bw = hw.ici_bw if hw.ici_bw > 0 else hw.hbm_bw
-    return a2a_bytes(cfg, n_tokens, n_shards, wb) / (link_bw * n_shards)
+    if hw.ici_bw <= 0:
+        raise ValueError(
+            f"hardware {hw.name!r} has no interconnect (ici_bw=0) but the "
+            f"placement spans {n_shards} shards; give the Hardware an "
+            "ici_bw figure to price multi-shard all-to-all")
+    return a2a_bytes(cfg, n_tokens, n_shards, wb) / (hw.ici_bw * n_shards)
 
 
 # --------------------------------------------------------------------- #
@@ -679,6 +789,38 @@ def iteration_time(cfg, hw: Hardware, n_tokens: int, context_len: int,
             "flops": f, "unique_experts": b["unique_experts"]}
 
 
+def _fetch_time(residency, hw: Hardware, per_shard_active, per_shard_miss,
+                fetch_hide: float):
+    """Host->HBM fetch pricing of one pass under a residency tier
+    (docs/offload.md): `miss_s` host-tier experts missing from shard s's
+    HBM must cross the host link before the shard can stream them. Shards
+    fetch over independent links, so the pass-level fetch time is the max
+    over shards; `fetch_hide` seconds of it overlap work the pass performs
+    anyway (the draft+sample window the prefetcher uses), leaving
+    `t_unhidden` on the critical path. Misses come measured
+    (`per_shard_miss`, [S]) or from the residency's analytic miss curve
+    over the per-shard activated counts. The ONE implementation shared by
+    `batch_iteration_time` and `BatchCostOracle.t_batch` so the two stay
+    float-exact. Returns (miss [S], t_fetch, t_unhidden)."""
+    if hw.host_bw <= 0:
+        raise ValueError(
+            f"hardware {hw.name!r} has no host link (host_bw=0) but the "
+            "placement has host-tier experts; give the Hardware a host_bw "
+            "figure to price offload fetches")
+    if per_shard_miss is not None:
+        miss = [max(float(m), 0.0) for m in per_shard_miss]
+        if len(miss) != len(per_shard_active):
+            raise ValueError(f"{len(miss)} miss counts vs "
+                             f"{len(per_shard_active)} shards")
+    else:
+        miss = residency.expected_misses(per_shard_active)
+    t_fetch = max(miss) * residency.expert_bytes / hw.host_bw
+    t_unhidden = t_fetch - fetch_hide
+    if t_unhidden < 0.0:
+        t_unhidden = 0.0
+    return miss, t_fetch, t_unhidden
+
+
 def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
                          context_lens, *, unique_experts: float = None,
                          per_request_unique=None, affinity: float = 0.0,
@@ -687,7 +829,9 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
                          placement: Optional[ExpertPlacement] = None,
                          shard_weights=None, per_shard_unique=None,
                          assume_balanced: bool = False,
-                         calibration: Optional[Calibration] = None) -> dict:
+                         calibration: Optional[Calibration] = None,
+                         residency=None, per_shard_miss=None,
+                         fetch_hide: float = 0.0) -> dict:
     """Seconds for one *shared* verification pass over B requests, request i
     contributing n_i = tokens_per_request[i] in-flight tokens against its own
     context_lens[i]-token KV cache.
@@ -731,11 +875,22 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
     skewed routing). `placement=None` / n_shards=1 degrades bit-exactly to
     the unsharded model above.
 
+    Residency (`residency`, a `ResidencyState` over a host-tiered
+    placement, docs/offload.md): activated host-tier experts missing from
+    HBM add a non-overlapped host-fetch term — `t_fetch_unhidden`, the max
+    over shards of miss-count * expert_bytes / host_bw minus the
+    `fetch_hide` overlap window — applied AFTER calibration (the
+    calibration was fit on fetch-free passes). `per_shard_miss` ([S])
+    overrides the analytic miss curve with measured counts, the residency
+    analogue of `per_shard_unique`. `residency=None` (or an all-hbm
+    placement) is bit-identical to the fetch-free model.
+
     Returns iteration_time's keys plus `per_request` (list of dicts with
     t_attr / bytes_attr / marginal_experts) and `n_requests`; sharded
     passes additionally report `shard_unique` [S], `max_shard_experts`,
     `hot_shard`, `imbalance` (max/mean over shards), `t_a2a`, and
-    `n_shards`."""
+    `n_shards`; residency-priced passes additionally report `fetch_miss`
+    [S], `t_fetch`, `t_fetch_unhidden`, and `fetch_bytes`."""
     wb = 2
     ns = [max(int(n), 0) for n in tokens_per_request]
     cls = list(context_lens)
@@ -756,12 +911,16 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
     weights = _weight_read_bytes(cfg, wb)
     sharded = (placement is not None and placement.n_shards > 1
                and cfg.is_moe)
+    fetch_active = (residency is not None and cfg.is_moe
+                    and residency.has_host_tier)
+    capacity = residency.capacity_experts if fetch_active else None
     shard_info = {}
     if sharded:
         # the hottest shard gates the pass: its local activated experts are
         # the expert stream on the critical path, not the global union
         shard_unique, hot = _resolve_shard_unique(
-            cfg, ns, placement, affinity, shard_weights, per_shard_unique)
+            cfg, ns, placement, affinity, shard_weights, per_shard_unique,
+            capacity=capacity)
         gate = (sum(shard_unique) / placement.n_shards if assume_balanced
                 else shard_unique[hot])
         experts = _expert_read_bytes(cfg, gate, wb)
@@ -796,11 +955,25 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
     if calibration is not None:
         # prediction-side wall-clock correction; None is bit-identical
         t = calibration.apply(t, t_a2a)
+    fetch_info = {}
+    if fetch_active:
+        # non-overlapped host fetch rides on top of the calibrated pass:
+        # the calibration was fit on fetch-free passes, so the fetch term
+        # must not be scaled by it
+        act = shard_info["shard_unique"] if sharded else [union]
+        f_miss, t_fetch, t_unhid = _fetch_time(residency, hw, act,
+                                               per_shard_miss, fetch_hide)
+        t = t + t_unhid
+        fetch_info = {"fetch_miss": f_miss, "t_fetch": t_fetch,
+                      "t_fetch_unhidden": t_unhid,
+                      "fetch_bytes": sum(f_miss) * residency.expert_bytes}
 
     # ---- marginal-bytes attribution -------------------------------------
     # non-bytes terms (fixed overhead + the sharded pass's collective) are
     # split evenly — every live request needs them, none owns them
     non_bytes = fixed_overhead + t_a2a if sharded else fixed_overhead
+    if fetch_active:
+        non_bytes = non_bytes + fetch_info["t_fetch_unhidden"]
     live = [i for i, n in enumerate(ns) if n > 0]
     n_live = max(len(live), 1)
     if per_request_unique is not None:
@@ -832,16 +1005,18 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
            "unique_experts": union, "n_requests": b_req,
            "n_tokens": total_tokens, "per_request": per_request}
     out.update(shard_info)
+    out.update(fetch_info)
     return out
 
 
 def _resolve_shard_unique(cfg, ns, placement: ExpertPlacement,
                           affinity: float, shard_weights,
-                          per_shard_unique):
+                          per_shard_unique, capacity=None):
     """Per-shard activated-expert counts for a sharded pass: measured
     counts when the caller has them, the analytic sharded union otherwise.
     Returns (shard_unique [S], hot_shard). Ties break on the lowest shard
-    id, keeping the gating shard deterministic."""
+    id, keeping the gating shard deterministic. `capacity` bounds the
+    analytic replica relief to shards with residency headroom."""
     if per_shard_unique is not None:
         shard_unique = [max(float(u), 0.0) for u in per_shard_unique]
         if len(shard_unique) != placement.n_shards:
@@ -850,7 +1025,7 @@ def _resolve_shard_unique(cfg, ns, placement: ExpertPlacement,
         return shard_unique, _hot_shard(shard_unique)
     est = expected_unique_experts_sharded(
         cfg.num_experts, cfg.experts_per_token, ns, placement,
-        affinity, shard_weights)
+        affinity, shard_weights, capacity=capacity)
     return est["per_shard"], est["hot_shard"]
 
 
@@ -873,14 +1048,22 @@ class BatchCostOracle:
     (None entries -> uniform). `assume_balanced=True` keeps the placement's
     shard count but spreads the union evenly — the global-union comparator
     planner of docs/expert_parallel.md. Both agree float-exactly with
-    `batch_iteration_time` under the same arguments."""
+    `batch_iteration_time` under the same arguments.
+
+    `residency` (a `ResidencyState` over a host-tiered placement) adds the
+    analytic non-overlapped fetch term under a `fetch_hide` overlap window
+    — same `_fetch_time` implementation as `batch_iteration_time`, so the
+    float-exactness contract extends to fetch-priced passes. The planner's
+    residency constraints query `shard_unique(ns)` / `fetch_unhidden(ns)`
+    for the cap and deadline checks (docs/offload.md)."""
 
     def __init__(self, cfg, hw: Hardware, context_lens, *,
                  affinity: float = 0.0, window: int = 0,
                  fixed_overhead: float = 2e-4, prefill_tokens=None,
                  placement: Optional[ExpertPlacement] = None,
                  shard_weights=None, assume_balanced: bool = False,
-                 calibration: Optional[Calibration] = None):
+                 calibration: Optional[Calibration] = None,
+                 residency=None, fetch_hide: float = 0.0):
         wb = 2
         self.calibration = calibration
         self.cfg = cfg
@@ -900,6 +1083,15 @@ class BatchCostOracle:
                          and cfg.is_moe)
         if placement is not None and cfg.is_moe:
             placement.validate_experts(cfg.num_experts)
+        self.residency = residency
+        self.fetch_hide = fetch_hide
+        self._fetch = (residency is not None and cfg.is_moe
+                       and residency.has_host_tier)
+        if self._fetch and hw.host_bw <= 0:
+            raise ValueError(
+                f"hardware {hw.name!r} has no host link (host_bw=0) but "
+                "the placement has host-tier experts")
+        self._capacity = residency.capacity_experts if self._fetch else None
         if shard_weights is not None and len(shard_weights) != b:
             raise ValueError(f"{len(shard_weights)} shard profiles vs "
                              f"{b} contexts")
@@ -936,7 +1128,8 @@ class BatchCostOracle:
             est = _sharded_union(cfg.num_experts, cfg.experts_per_token,
                                  ns, self._counts, self._norm_sw,
                                  self.affinity,
-                                 replica_groups=self._replica_groups)
+                                 replica_groups=self._replica_groups,
+                                 capacity=self._capacity)
             gate = (sum(est["per_shard"]) / self.placement.n_shards
                     if self.assume_balanced else est["max_shard"])
             experts = _expert_read_bytes(cfg, gate, 2)
@@ -960,7 +1153,42 @@ class BatchCostOracle:
             t_a2a = 0.0
         if self.calibration is not None:
             t = self.calibration.apply(t, t_a2a)
+        if self._fetch:
+            act = est["per_shard"] if self._sharded else [union]
+            _, _, t_unhid = _fetch_time(self.residency, hw, act, None,
+                                        self.fetch_hide)
+            t = t + t_unhid
         return t
+
+    def shard_unique(self, tokens_per_request) -> list:
+        """Predicted per-shard activated-expert counts at this allocation
+        ([S]; the global union as a 1-list for unsharded placements) —
+        what `MemoryCapConstraint` checks against the residency capacity."""
+        ns = [max(int(n), 0) for n in tokens_per_request]
+        cfg = self.cfg
+        if self._sharded:
+            est = _sharded_union(cfg.num_experts, cfg.experts_per_token,
+                                 ns, self._counts, self._norm_sw,
+                                 self.affinity,
+                                 replica_groups=self._replica_groups,
+                                 capacity=self._capacity)
+            return list(est["per_shard"])
+        total = sum(ns)
+        union = (expected_unique_experts(cfg.num_experts,
+                                         cfg.experts_per_token, total,
+                                         self.affinity)
+                 if cfg.is_moe and total > 0 else 0.0)
+        return [union]
+
+    def fetch_unhidden(self, tokens_per_request) -> float:
+        """Predicted non-overlapped host-fetch seconds at this allocation
+        (0.0 without a host tier) — what `FetchDeadlineConstraint` bounds."""
+        if not self._fetch:
+            return 0.0
+        act = self.shard_unique(tokens_per_request)
+        _, _, t_unhid = _fetch_time(self.residency, self.hw, act, None,
+                                    self.fetch_hide)
+        return t_unhid
 
     def predicted_tpot(self, tokens_per_request, emitted_per_request
                        ) -> list:

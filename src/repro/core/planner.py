@@ -38,8 +38,16 @@ constraint, and the loop stops when no admissible candidate remains.
     the move does not worsen it. No per-request gate can see this: the
     victim's own controller never asked for the grant that hurts it.
 
-Future constraints (replication steering, memory caps) plug into the same
-pipeline — `greedy_allocate(constraints=[...])` is the extension point.
+  * `MemoryCapConstraint` / `FetchDeadlineConstraint` — residency
+    protection under a host-tiered placement (docs/offload.md): deny
+    grants whose predicted per-shard activated union exceeds what the
+    residency cap can keep HBM-resident, or whose host-fetch time can no
+    longer hide behind the draft+sample window. Both carry the same
+    don't-worsen escape clause as the SLO constraint, so an already
+    over-capacity base state cannot freeze the batch.
+
+Future constraints (replication steering) plug into the same pipeline —
+`greedy_allocate(constraints=[...])` is the extension point.
 
 Trial hygiene: the planner staggers Cascade TEST phases so at most one
 request trials an off-policy K per shared pass (`SpeculationManager.hold`)
@@ -271,6 +279,94 @@ class SLOTpotConstraint(GrantConstraint):
 
 
 @dataclass
+class MemoryCapConstraint(GrantConstraint):
+    """Residency-cap protection (docs/offload.md): deny a grant when the
+    predicted per-shard activated union after it exceeds the shard's
+    residency capacity (pinned hbm-tier residents + host-tier cache
+    slots, `ResidencyState.capacity_experts`) — the pass would activate
+    more experts than the shard can keep HBM-resident, forcing streamed
+    re-fetches the prefetcher cannot amortize. Same don't-worsen escape
+    clause as `SLOTpotConstraint`: a shard already over capacity in the
+    base state does not freeze the batch, only grants that push it
+    further are denied."""
+    residency: object = None
+
+    name = "memory_cap"
+    _eps = 1e-9
+
+    def _over(self, per_shard, capacity):
+        return [max(u - c, 0.0) for u, c in zip(per_shard, capacity)]
+
+    def admits(self, cand: GrantCandidate, ctx: AllocationContext) -> bool:
+        cap = self.residency.capacity_experts
+        ns_after = list(ctx.ns)
+        ns_after[cand.row] += 1
+        after = ctx.oracle.shard_unique(ns_after)
+        cur = None
+        for s, c in enumerate(cap):
+            if after[s] <= c + self._eps:
+                continue
+            if cur is None:
+                cur = ctx.oracle.shard_unique(ctx.ns)
+            if after[s] > cur[s] + self._eps:
+                return False
+        return True
+
+    def admits_pinned(self, ctx: AllocationContext) -> bool:
+        if not ctx.fixed:
+            return True
+        cap = self.residency.capacity_experts
+        base_ns = list(ctx.ns)
+        for i in ctx.fixed:
+            base_ns[i] -= ctx.alloc[i]
+        cur = ctx.oracle.shard_unique(ctx.ns)
+        base = None
+        for s, c in enumerate(cap):
+            if cur[s] <= c + self._eps:
+                continue
+            if base is None:
+                base = ctx.oracle.shard_unique(base_ns)
+            if cur[s] > base[s] + self._eps:
+                return False
+        return True
+
+
+@dataclass
+class FetchDeadlineConstraint(GrantConstraint):
+    """Fetch-hiding protection (docs/offload.md): a grant is only worth
+    its bytes if the host fetches it induces still hide behind the
+    draft+sample window the oracle prices with (`fetch_hide`). Deny a
+    candidate whose predicted non-overlapped fetch time
+    (`BatchCostOracle.fetch_unhidden`) is positive AND worse than the
+    current allocation's — speculation that adds un-hideable fetch
+    latency has flipped from latency hiding back to latency adding, the
+    exact boundary the offload tier's utility calculus cares about."""
+    residency: object = None
+
+    name = "fetch_deadline"
+    _eps = 1e-12
+
+    def admits(self, cand: GrantCandidate, ctx: AllocationContext) -> bool:
+        ns_after = list(ctx.ns)
+        ns_after[cand.row] += 1
+        after = ctx.oracle.fetch_unhidden(ns_after)
+        if after <= self._eps:
+            return True
+        return not (after > ctx.oracle.fetch_unhidden(ctx.ns) + self._eps)
+
+    def admits_pinned(self, ctx: AllocationContext) -> bool:
+        if not ctx.fixed:
+            return True
+        cur = ctx.oracle.fetch_unhidden(ctx.ns)
+        if cur <= self._eps:
+            return True
+        base_ns = list(ctx.ns)
+        for i in ctx.fixed:
+            base_ns[i] -= ctx.alloc[i]
+        return not (cur > ctx.oracle.fetch_unhidden(base_ns) + self._eps)
+
+
+@dataclass
 class PlanDecision:
     """One request's slice of the step plan."""
     slot: int
@@ -411,7 +507,8 @@ class BatchSpecPlanner:
     def __init__(self, cfg, hw: cm.Hardware = None, *, affinity: float = 0.0,
                  window: int = 0, config: Optional[PlannerConfig] = None,
                  placement: Optional[cm.ExpertPlacement] = None,
-                 calibration: Optional[cm.Calibration] = None):
+                 calibration: Optional[cm.Calibration] = None,
+                 residency=None):
         self.cfg = cfg
         self.hw = hw or cm.TPU_V5E
         self.affinity = affinity
@@ -421,13 +518,23 @@ class BatchSpecPlanner:
         #: by --calibrate) applied to every oracle this planner prices
         #: with; None is bit-identical to the uncalibrated planner
         self.calibration = calibration
+        if residency is not None and placement is None:
+            placement = residency.placement
         if placement is not None:
             if not cfg.is_moe:
                 raise ValueError(
                     f"ExpertPlacement supplied for the dense (non-MoE) "
                     f"config {cfg.name!r} — there are no experts to shard")
             placement.validate_experts(cfg.num_experts)
+        if residency is not None and \
+                residency.placement.shard_of != placement.shard_of:
+            raise ValueError("residency tracks a different placement than "
+                             "the planner prices with")
         self.placement = placement
+        #: core.residency.ResidencyState over a host-tiered placement —
+        #: switches oracles to fetch-aware pricing and arms the residency
+        #: constraints; None is bit-identical to the flat planner
+        self.residency = residency
         self._stagger_tick = 0   # round-robin fairness across trialing rows
 
     # ------------------------------------------------------------------ #
@@ -458,9 +565,14 @@ class BatchSpecPlanner:
             weights = lat or None
         bounds = {i: slos[i].tpot for i in decode
                   if i in slos and slos[i].tpot is not None}
-        return [BreakEvenConstraint(util_floor=cfgp.util_floor,
-                                    weights=weights),
-                SLOTpotConstraint(bounds=bounds)]
+        cons: List[GrantConstraint] = [
+            BreakEvenConstraint(util_floor=cfgp.util_floor,
+                                weights=weights),
+            SLOTpotConstraint(bounds=bounds)]
+        if self.residency is not None and self.residency.has_host_tier:
+            cons.append(MemoryCapConstraint(residency=self.residency))
+            cons.append(FetchDeadlineConstraint(residency=self.residency))
+        return cons
 
     def plan(self, controllers: Dict[int, object], context_lens, *,
              prefill_tokens: Optional[Dict[int, int]] = None,
@@ -522,13 +634,25 @@ class BatchSpecPlanner:
         sw = None
         if self.placement is not None and shard_weights:
             sw = [shard_weights.get(i) for i in range(b)]
+        fetch_hide = 0.0
+        if self.residency is not None and self.residency.has_host_tier:
+            # the overlap window a fetch can hide behind: drafting and
+            # rejection sampling happen off the verification pass's
+            # critical path, so the longest row's draft+sample span (at
+            # its *asked* K — grants are not known yet) bounds what the
+            # prefetcher overlaps (docs/offload.md)
+            fetch_hide = max(
+                (cm.draft_time(self.hw, requested[i])
+                 + cm.sample_time(requested[i]) for i in decode),
+                default=0.0)
         oracle = cm.BatchCostOracle(
             self.cfg, self.hw, context_lens, affinity=self.affinity,
             window=self.window,
             prefill_tokens=[pre.get(i, 0) for i in range(b)],
             placement=self.placement, shard_weights=sw,
             assume_balanced=not cfgp.shard_aware,
-            calibration=self.calibration)
+            calibration=self.calibration,
+            residency=self.residency, fetch_hide=fetch_hide)
 
         # -- allocate ----------------------------------------------------
         # bypass: independent policy, or a single-span pass (B=1 — the

@@ -1,0 +1,307 @@
+"""Tiered expert residency: what is actually HBM-resident, under a cap.
+
+`ExpertPlacement.tier_of` says where each expert's weights *live* (hbm =
+always device-resident, host = offloaded behind `Hardware.host_bw`);
+`ResidencyState` tracks which host-tier experts are *currently* HBM-
+resident under a per-shard byte cap, the analytic miss curve the cost
+model prices fetches with, and the LRU-by-EMA-load eviction policy the
+engine's prefetch stage uses (docs/offload.md).
+
+The motivating regime: production MoEs (deepseek_v2_236b, kimi_k2_1t_a32b
+in configs/) whose expert weights alone exceed any single device's HBM —
+without a host tier those configs are unservable by this stack, and with
+one, speculation's drafted lookahead becomes a *prefetch oracle* (SP-MoE,
+arXiv 2510.10302): the router applied to drafted tokens predicts the
+verification union one pass ahead, hiding fetch latency behind the
+draft+sample window.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+__all__ = ["ResidencyState", "expert_hbm_bytes"]
+
+
+def expert_hbm_bytes(cfg, weight_bytes: int = 2) -> float:
+    """HBM bytes of ONE expert across all MoE layers — the unit of
+    residency accounting (an expert is fetched/evicted whole: its slice in
+    every MoE layer moves together, matching the per-expert granularity of
+    `_expert_read_bytes`)."""
+    if not cfg.is_moe:
+        return 0.0
+    mult = 3 if cfg.activation == "swiglu" else 2
+    n_moe = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
+    return float(n_moe * mult * cfg.d_model * cfg.moe_d_ff * weight_bytes)
+
+
+class ResidencyState:
+    """Per-shard HBM residency of a host-tiered `ExpertPlacement`.
+
+    Each shard pins its hbm-tier experts (primaries and replicas — those
+    are always resident) and holds `slots` cache slots for its homed
+    host-tier experts, where ``slots = (cap_bytes - pinned_bytes) //
+    expert_bytes``. `cap_bytes` may be a scalar (same cap every shard) or
+    a per-shard sequence; None means uncapped (every host expert fits, no
+    evictions, zero analytic misses — the bit-exact degradation tier).
+
+    Three consumers share this object:
+
+    * the cost model (`batch_iteration_time` / `BatchCostOracle`) prices
+      passes with `expected_misses` — the steady-state random-cache miss
+      curve — and `capacity_experts` bounds replica rebalancing;
+    * the planner's `MemoryCapConstraint` / `FetchDeadlineConstraint`
+      read `capacity_experts` and the oracle's fetch predictions;
+    * the engine's prefetch stage mutates the cache: `fetch(stage=True)`
+      streams predicted experts into a per-shard staging buffer before
+      the pass, `access` classifies the pass's activated host experts
+      into hits (cached or staged) and demand misses, `fetch` installs
+      the misses (evicting the coldest by (EMA load, last use) when
+      full), and `note_step` decays the EMA and drains the staging
+      buffer (used experts installed, unused discarded).
+
+    Counters (`hits`, `misses`, `evictions`, `bytes_fetched`) feed
+    `StepTelemetry` and the sweep artifacts."""
+
+    def __init__(self, placement, cfg=None, *,
+                 expert_bytes: Optional[float] = None,
+                 cap_bytes=None, ema_decay: float = 0.8):
+        if expert_bytes is None:
+            if cfg is None:
+                raise ValueError("need cfg or expert_bytes to size experts")
+            expert_bytes = expert_hbm_bytes(cfg)
+        if expert_bytes <= 0:
+            raise ValueError(f"non-positive expert_bytes {expert_bytes}")
+        if not 0.0 <= ema_decay < 1.0:
+            raise ValueError(f"ema_decay {ema_decay} outside [0, 1)")
+        self.placement = placement
+        self.expert_bytes = float(expert_bytes)
+        self.ema_decay = float(ema_decay)
+        s_n = placement.n_shards
+        tiers = placement.tiers
+        # pinned hbm-tier residents per shard (replicas included)
+        self._pinned = [0] * s_n
+        for e, s in enumerate(placement.shard_of):
+            if tiers[e] == "hbm":
+                for x in (s if isinstance(s, tuple) else (s,)):
+                    self._pinned[x] += 1
+        # host-tier experts homed per shard (host experts are never
+        # replicated, so the home is a plain int)
+        self._host_of_shard = [[] for _ in range(s_n)]
+        self._home = {}
+        for e, (s, t) in enumerate(zip(placement.primary_shard_of, tiers)):
+            if t == "host":
+                self._host_of_shard[s].append(e)
+                self._home[e] = s
+        caps = self._normalize_caps(cap_bytes, s_n)
+        self._slots = []
+        for s in range(s_n):
+            if caps[s] is None:
+                self._slots.append(len(self._host_of_shard[s]))
+                continue
+            pinned_b = self._pinned[s] * self.expert_bytes
+            if caps[s] < pinned_b:
+                raise ValueError(
+                    f"shard {s}: cap {caps[s]:.3e} B below the pinned "
+                    f"hbm-tier footprint {pinned_b:.3e} B")
+            self._slots.append(
+                min(int((caps[s] - pinned_b) // self.expert_bytes),
+                    len(self._host_of_shard[s])))
+        self.cap_bytes = caps
+        # cache: per shard, resident host experts -> last-use step
+        self._cache = [dict() for _ in range(s_n)]
+        # staging buffer: prefetched-not-yet-installed experts per shard
+        # (drained every pass by note_step)
+        self._staged = [set() for _ in range(s_n)]
+        self._staged_used = [set() for _ in range(s_n)]
+        self._ema = {e: 0.0 for e in self._home}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes_fetched = 0.0
+
+    @staticmethod
+    def _normalize_caps(cap_bytes, s_n):
+        if cap_bytes is None:
+            return [None] * s_n
+        if isinstance(cap_bytes, (int, float)):
+            return [float(cap_bytes)] * s_n
+        caps = [None if c is None else float(c) for c in cap_bytes]
+        if len(caps) != s_n:
+            raise ValueError(f"{len(caps)} caps vs {s_n} shards")
+        return caps
+
+    # ---- static views ------------------------------------------------- #
+
+    @property
+    def has_host_tier(self) -> bool:
+        return self.placement.has_host_tier
+
+    @property
+    def n_shards(self) -> int:
+        return self.placement.n_shards
+
+    @property
+    def slots(self):
+        """Cache slots for host-tier experts per shard (capped at the
+        shard's host population)."""
+        return tuple(self._slots)
+
+    @property
+    def capacity_experts(self):
+        """Max simultaneously HBM-resident experts per shard — pinned
+        hbm-tier residents plus host-tier cache slots. The activated-load
+        ceiling replica rebalancing must respect (`_rebalance_replicas`)."""
+        return [float(p + sl) for p, sl in zip(self._pinned, self._slots)]
+
+    @property
+    def resident_counts(self):
+        """Experts *currently* HBM-resident per shard: pinned + cached —
+        the live counterpart of `ExpertPlacement.resident_counts`."""
+        return tuple(p + len(c) for p, c in zip(self._pinned, self._cache))
+
+    def is_resident(self, expert: int) -> bool:
+        """True when `expert`'s weights are in HBM right now (hbm-tier
+        experts always are)."""
+        s = self._home.get(expert)
+        if s is None:
+            return True
+        return expert in self._cache[s]
+
+    # ---- analytic miss curve (cost-model side) ------------------------ #
+
+    def expected_misses(self, per_shard_active):
+        """Steady-state expected host-fetch count per shard when the pass
+        activates `per_shard_active[s]` experts on shard s: a fraction
+        H_s/E_s of the activated set is host-tier (routing is tier-blind),
+        and a random host expert is resident with probability
+        slots_s/H_s, so  miss_s = acts_s * (H_s/E_s) * (1 - slots_s/H_s).
+        Uncapped shards (slots_s == H_s) miss nothing — the degradation
+        tier the drift gates pin."""
+        if len(per_shard_active) != self.n_shards:
+            raise ValueError(f"{len(per_shard_active)} activation counts "
+                             f"vs {self.n_shards} shards")
+        counts = self.placement.counts
+        miss = []
+        for s, acts in enumerate(per_shard_active):
+            h_s = len(self._host_of_shard[s])
+            e_s = counts[s]
+            if h_s == 0 or e_s == 0 or acts <= 0:
+                miss.append(0.0)
+                continue
+            resident_frac = min(self._slots[s] / h_s, 1.0)
+            m = float(acts) * (h_s / e_s) * (1.0 - resident_frac)
+            miss.append(max(m, 0.0))
+        return miss
+
+    # ---- cache mutation (engine side) --------------------------------- #
+
+    def access(self, experts, step: int):
+        """Classify activated experts at pass time: host-tier residents
+        are hits (LRU-touched), staged experts are hits too (the pass
+        reads them straight from the staging buffer — the conversion a
+        prefetch exists for) and are marked for installation, host-tier
+        absentees are demand misses the caller should `fetch`. Returns
+        (hit_ids, missing_ids)."""
+        hit, missing = [], []
+        for e in experts:
+            s = self._home.get(int(e))
+            if s is None:
+                continue
+            e = int(e)
+            if e in self._cache[s]:
+                self._cache[s][e] = step
+                hit.append(e)
+            elif e in self._staged[s]:
+                self._staged_used[s].add(e)
+                hit.append(e)
+            else:
+                missing.append(e)
+        self.hits += len(hit)
+        self.misses += len(missing)
+        return hit, missing
+
+    def fetch(self, experts, step: int, *, stage=False):
+        """Bring host-tier `experts` over the host link (demand or
+        prefetch). Returns {"fetched": n, "per_shard": [S], "bytes": f}.
+
+        Demand mode (stage=False): the expert is installed in its
+        shard's cache immediately, evicting the coldest resident — min
+        (EMA load, last use, id) — when the slots are full. A shard with
+        zero slots streams the weights through without retaining them
+        (the fetch still crosses the link and is still billed).
+
+        Staging mode (stage=True, the engine's prefetch path): the
+        expert lands in the shard's *staging buffer* — the same bounce
+        buffer every streamed fetch flows through — so nothing is
+        evicted at prediction time. The pass reads staged weights as
+        hits (`access`), and `note_step` then installs the ones the pass
+        actually used with post-pass recency while discarding the rest.
+        Evicting at prediction time is what this avoids: the predictor
+        sees pre-pass recency, so its victims are systematically worse
+        than the demand path's post-pass choices, and a mispredicted
+        fetch would perturb the cache trajectory instead of costing only
+        its (hidden) bytes."""
+        per_shard = [0] * self.n_shards
+        fetched = 0
+        for e in experts:
+            e = int(e)
+            s = self._home.get(e)
+            if s is None or e in self._cache[s] or e in self._staged[s]:
+                continue
+            per_shard[s] += 1
+            fetched += 1
+            if stage:
+                self._staged[s].add(e)
+                continue
+            if self._slots[s] > 0 and len(self._cache[s]) >= self._slots[s]:
+                victim = min(self._cache[s],
+                             key=lambda v: (self._ema[v],
+                                            self._cache[s][v], v))
+                del self._cache[s][victim]
+                self.evictions += 1
+            if self._slots[s] <= 0:
+                continue  # streamed, not retained
+            self._cache[s][e] = step
+        self.bytes_fetched += fetched * self.expert_bytes
+        return {"fetched": fetched, "per_shard": per_shard,
+                "bytes": fetched * self.expert_bytes}
+
+    def note_step(self, active_experts, step: int) -> None:
+        """End-of-pass bookkeeping: decay every host expert's EMA load
+        toward 0 and bump the ones this pass activated — the coldness
+        signal `fetch`'s eviction policy ranks by — then drain the
+        staging buffer: staged experts the pass actually read are
+        installed in the cache with post-pass recency (evicting the
+        coldest resident, exactly as a demand fetch would have), unused
+        ones are discarded (their only cost was the billed prefetch
+        bytes — the cache trajectory stays untouched)."""
+        active = {int(e) for e in active_experts}
+        d = self.ema_decay
+        for e in self._ema:
+            self._ema[e] = d * self._ema[e] + \
+                (0.0 if e not in active else (1.0 - d))
+        for s in range(self.n_shards):
+            if self._slots[s] > 0:
+                for e in sorted(self._staged_used[s]):
+                    if e in self._cache[s]:
+                        continue
+                    if len(self._cache[s]) >= self._slots[s]:
+                        victim = min(self._cache[s],
+                                     key=lambda v: (self._ema[v],
+                                                    self._cache[s][v], v))
+                        del self._cache[s][victim]
+                        self.evictions += 1
+                    self._cache[s][e] = step
+            self._staged[s].clear()
+            self._staged_used[s].clear()
+
+    def snapshot(self) -> dict:
+        """Counters + live residency for telemetry/artifacts."""
+        denom = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "bytes_fetched": self.bytes_fetched,
+                "hit_rate": (self.hits / denom) if denom else 1.0,
+                "resident_counts": list(self.resident_counts),
+                "slots": list(self.slots)}

@@ -354,6 +354,15 @@ def _attn_block(cfg, p, x, lc, ctx, kind):
             aux["unique_experts_row"] = per_row
             if ctx.get("token_mask") is not None:
                 aux["unique_experts"] = union
+            # per-expert activation bitmap [E] for residency tracking
+            # (docs/offload.md): padding routes to the sentinel bucket e
+            e = cfg.num_experts
+            flat = idx_btk
+            if ctx.get("token_mask") is not None:
+                flat = jnp.where(ctx["token_mask"][:, :, None], idx_btk, e)
+            hits = jnp.zeros((e + 1,), jnp.int32).at[
+                flat.reshape(-1)].add(1)
+            aux["experts_active"] = hits[:e] > 0
             sid = ctx.get("ep_shard_ids")
             if sid is not None:
                 # EP-shard accounting: the hottest shard's local activated
@@ -369,6 +378,7 @@ def _attn_block(cfg, p, x, lc, ctx, kind):
         aux["unique_experts"] = jnp.zeros((), jnp.int32)
         if mode == "decode":
             aux["unique_experts_row"] = jnp.zeros((x.shape[0],), jnp.int32)
+            aux["experts_active"] = jnp.zeros((cfg.num_experts,), bool)
             sid = ctx.get("ep_shard_ids")
             if sid is not None:
                 s_n = (int(ctx["ep_n_shards"]) if ctx.get("ep_n_shards")
@@ -615,6 +625,8 @@ def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
         aux["unique_experts"] = ys["aux"]["unique_experts"]  # [L]
         if "unique_experts_row" in ys["aux"]:
             aux["unique_experts_row"] = ys["aux"]["unique_experts_row"]  # [L,B]
+        if "experts_active" in ys["aux"]:
+            aux["experts_active"] = ys["aux"]["experts_active"]  # [L,E]
         if "unique_experts_shard" in ys["aux"]:
             aux["unique_experts_shard"] = \
                 ys["aux"]["unique_experts_shard"]            # [L,S]

@@ -97,6 +97,34 @@ def _truncate_at_stop(emitted: List[int], stop_token: Optional[int]
     return emitted[:emitted.index(stop_token) + 1], True
 
 
+def _stacked_routers(params):
+    """[L_moe, d, E] router weights, whichever way the blocks are stored
+    (vmap-stacked `blocks` or per-layer `blocks_list`)."""
+    if "blocks" in params:
+        return params["blocks"]["moe"]["router"]
+    return jnp.stack([bl["moe"]["router"] for bl in params["blocks_list"]
+                      if "moe" in bl])
+
+
+def _router_probe(cfg, params, toks, mask):
+    """Predicted expert-activation counts [E] of a span batch (routed
+    (token, layer) slots per expert — the prefetcher's nomination signal
+    and confidence ordering): embed the tokens and run every MoE layer's
+    router over the raw embeddings —
+    the speculation-guided prefetch predictor (docs/offload.md). An
+    approximation by construction (the real pass routes each layer's
+    hidden state, not the embedding); prediction errors surface as demand
+    misses, never as wrong tokens. Padding routes to the sentinel bucket."""
+    routers = _stacked_routers(params)                    # [L, d, E]
+    x = params["embed"]["embedding"][toks].astype(jnp.float32)   # [B,T,d]
+    logits = jnp.einsum("btd,lde->lbte", x, routers.astype(jnp.float32))
+    _, idx = jax.lax.top_k(logits, cfg.experts_per_token)  # [L,B,T,k]
+    e = cfg.num_experts
+    idx = jnp.where(mask[None, :, :, None], idx, e)
+    hits = jnp.zeros((e + 1,), jnp.int32).at[idx.reshape(-1)].add(1)
+    return hits[:e]
+
+
 def _prefill_clock(cfg, hw, clock: str, n_tokens: int, wall: float, *,
                    affinity: float, window: int) -> float:
     """Prefill seconds on the engine's clock: wall seconds under
@@ -347,7 +375,19 @@ class BatchedEngine:
     per-row-per-shard activation telemetry, and the planner steers grants
     away from requests concentrating load on the gating shard via an EMA
     of each row's shard profile. `placement=None` (default) and
-    n_shards=1 are the unsharded engine, bit for bit."""
+    n_shards=1 are the unsharded engine, bit for bit.
+
+    `residency` (a `core.residency.ResidencyState` over a host-tiered
+    placement, docs/offload.md) models an offload tier: after drafting,
+    the engine routes the packed span tokens through the stacked routers
+    (`prefetch=True`, the SP-MoE speculation-guided prefetch) to predict
+    the verification union and fetches predicted-missing host-tier experts
+    during the draft+sample window; activated host experts still missing
+    at pass time are demand-fetched, the coldest residents are evicted
+    LRU-by-EMA-load, and the pass is priced with the measured per-shard
+    fetch counts (`per_shard_miss`) under the window's `fetch_hide`
+    overlap. An all-hbm residency (or `residency=None`) is the flat
+    engine, bit for bit — token streams and per-step telemetry."""
 
     def __init__(self, cfg, params, drafter_factory: Callable = None, *,
                  max_batch: int = 8,
@@ -364,7 +404,9 @@ class BatchedEngine:
                  policy: Optional[str] = None,
                  planner: Optional[BatchSpecPlanner] = None,
                  placement: Optional[cm.ExpertPlacement] = None,
-                 packed: bool = False):
+                 packed: bool = False,
+                 residency=None,
+                 prefetch: bool = True):
         self.cfg = cfg
         self.params = params
         self.drafter_factory = drafter_factory or (lambda: NGramDrafter())
@@ -401,6 +443,14 @@ class BatchedEngine:
             raise ValueError(f"unknown planner policy {policy!r} "
                              "(expected 'joint' or 'independent')")
         self.policy = policy
+        if residency is not None:
+            if placement is None:
+                placement = residency.placement
+            elif (residency.placement.shard_of != placement.shard_of
+                  or residency.placement.tiers != placement.tiers):
+                raise ValueError(
+                    "residency tracks a different placement than the "
+                    "engine serves — homes and tiers must agree")
         if placement is not None:
             if not cfg.is_moe:
                 raise ValueError(
@@ -425,6 +475,12 @@ class BatchedEngine:
                 raise ValueError(
                     f"engine placement {ours} contradicts the supplied "
                     f"planner's placement {theirs}")
+            if getattr(planner, "residency", None) is not None \
+                    and planner.residency is not residency:
+                raise ValueError(
+                    "the supplied planner tracks a different residency "
+                    "state than the engine mutates — they must share one "
+                    "ResidencyState object")
         #: measured shard accounting is live only when >1 shard exists —
         #: a 1-shard placement must be indistinguishable from None
         self._ep = (self.placement is not None
@@ -434,7 +490,20 @@ class BatchedEngine:
         self._shard_profiles: dict = {}
         self.planner = planner or BatchSpecPlanner(
             cfg, hw, affinity=affinity, window=window,
-            config=PlannerConfig(policy=policy), placement=self.placement)
+            config=PlannerConfig(policy=policy), placement=self.placement,
+            residency=residency)
+        #: offload tier: live only when the placement actually has
+        #: host-tier experts — an all-hbm residency must be invisible
+        self.residency = residency
+        self.prefetch = bool(prefetch)
+        #: minimum predicted (token, layer) routing slots before an
+        #: expert is staged. Staging means a misprediction costs only
+        #: its (hidden) link bytes — never the cache trajectory — so the
+        #: default keeps every nomination; raise it on workloads where
+        #: the probe's single-slot predictions are noise, trading
+        #: hit-rate for link traffic.
+        self.prefetch_min_count = 1
+        self._offload = residency is not None and residency.has_host_tier
         #: engine clock: virtual seconds under clock="model" (cost-model
         #: priced steps + blocking prefills), wall seconds under "wall".
         #: Queue-delay and TTFT telemetry are measured on this clock.
@@ -477,6 +546,29 @@ class BatchedEngine:
                                                  token_mask=m,
                                                  ep_shard_ids=sid,
                                                  moe_packed=self.packed))
+        #: speculation-guided prefetch probe (docs/offload.md): embed the
+        #: packed span tokens and apply every MoE layer's router to them —
+        #: a one-einsum approximation of the verification pass's routing
+        #: (SP-MoE style: the drafted lookahead IS the prediction window).
+        #: Top-k indices are what the cache needs; they are invariant to
+        #: the router's sigmoid/softmax squashing, so raw logits suffice.
+        self._probe = None
+        if self._offload and self.prefetch:
+            self._probe = jax.jit(
+                lambda p, t, m: _router_probe(cfg, p, t, m))
+        #: fraction of a pass that runs before the FIRST MoE layer
+        #: consumes expert weights — prefetch DMA issued at step start
+        #: overlaps embed + leading dense layers + the first MoE layer's
+        #: own attention block (the +0.5: expert weights are read by the
+        #: FFN sub-layer, roughly half a layer after its attention
+        #: starts) in addition to the draft/sample window. Demand
+        #: misses, discovered at routing time inside the pass, get
+        #: neither credit.
+        kinds = cfg.layer_kinds()
+        moe_idx = [i for i, k in enumerate(kinds) if k in ("A", "X")]
+        self._pre_moe_frac = ((moe_idx[0] + 0.5) / len(kinds)
+                              if moe_idx else 0.0)
+        self._last_t_iter = 0.0
         self._step_idx = 0
         self._req_counter = 0
         self._joined_since_step = 0
@@ -760,6 +852,61 @@ class BatchedEngine:
             toks[i, :len(span)] = span
             mask[i, :len(span)] = True
 
+        # 2b. speculation-guided prefetch (docs/offload.md): this step's
+        # spans are a window into the verification union — route them
+        # through the routers NOW and stream predicted host-tier experts
+        # into the residency staging buffer while drafting/sampling and
+        # the pre-MoE dense compute run, so the fetch hides behind work
+        # the pass performs anyway (`fetch_hide` prices exactly that
+        # window). Every span row nominates — the spans ARE this pass's
+        # routing inputs, so any predicted-but-absent expert is a demand
+        # miss about to happen — and staging (vs installing) keeps
+        # mispredictions out of the eviction path: an unused staged
+        # expert is discarded at pass end, so the cache trajectory
+        # matches the prefetch-off run except for the conversions
+        # (residency.fetch(stage=True) docstring)
+        prefetch_counts = None
+        fetch_hide = 0.0
+        if self._offload:
+            if self.prefetch:
+                # the model-clock draft+sample window of this step — what
+                # a prefetched byte can hide behind (same expressions as
+                # stage 7's t_overhead, known here because K_i are fixed)
+                fetch_hide = max(
+                    (cm.draft_time(self.hw, len(drafts[i]),
+                                   slots[i].drafter.active_params)
+                     + cm.sample_time(len(drafts[i]))
+                     for i in decode_rows), default=0.0)
+                # ... plus the dense compute ahead of the first MoE
+                # layer: the DMA issued now keeps streaming while embed
+                # + leading layers run, and the weights are only needed
+                # when that layer routes (previous pass's priced t_iter
+                # is the compute estimate, the (first MoE layer + its
+                # attention block) / n_layers prefix is the fraction)
+                fetch_hide += self._pre_moe_frac * self._last_t_iter
+            if self._probe is not None:
+                pred = np.asarray(self._probe(self.params,
+                                              jnp.asarray(toks),
+                                              jnp.asarray(mask)))
+                # most-confident first: experts routed by more predicted
+                # (token, layer) slots stage before marginal ones (the
+                # ordering the min-count filter and hide window reward)
+                nominated = sorted(
+                    (int(e) for e in np.nonzero(pred)[0]
+                     if pred[e] >= self.prefetch_min_count),
+                    key=lambda e: (-int(pred[e]), e))
+                pf = self.residency.fetch(nominated, self._step_idx,
+                                          stage=True)
+                prefetch_counts = pf["per_shard"]
+                # honest hide: the draft+sample window only hides bytes
+                # that were actually prefetched during it — demand misses
+                # are discovered at pass time and can never hide, so cap
+                # the credit at the prefetched fetch time
+                fetch_hide = min(
+                    fetch_hide,
+                    max(prefetch_counts) * self.residency.expert_bytes
+                    / self.hw.host_bw)
+
         # 3. shared verification pass
         t1 = time.perf_counter()
         if self._replica_routes is not None:
@@ -818,6 +965,28 @@ class BatchedEngine:
                                             np.float64), axis=0)   # [S]
             row_shard = np.mean(np.asarray(aux["unique_experts_row_shard"],
                                            np.float64), axis=0)    # [B,S]
+        # residency bookkeeping: classify the pass's ACTUAL activated
+        # host-tier experts into prefetch hits and demand misses, fetch
+        # the misses (discovered too late to hide), evict-and-admit, and
+        # price the pass with the measured per-shard fetch counts
+        per_shard_miss = None
+        n_hits = n_miss = step_evictions = 0
+        step_fetch_bytes = 0.0
+        if self._offload:
+            active_ids = []
+            if "experts_active" in aux:
+                act = np.asarray(aux["experts_active"])      # [L, E]
+                active_ids = np.nonzero(act.any(axis=0))[0]
+            ev0 = self.residency.evictions
+            hit, missing = self.residency.access(active_ids, self._step_idx)
+            df = self.residency.fetch(missing, self._step_idx)
+            pc = prefetch_counts or [0] * self.residency.n_shards
+            per_shard_miss = [p + d for p, d in zip(pc, df["per_shard"])]
+            self.residency.note_step(active_ids, self._step_idx)
+            n_hits, n_miss = len(hit), len(missing)
+            step_evictions = self.residency.evictions - ev0
+            step_fetch_bytes = sum(per_shard_miss) * \
+                self.residency.expert_bytes
         tokens_per_row = [int(mask[i].sum()) for i in range(b)]
         cost = cm.batch_iteration_time(
             self.cfg, self.hw, tokens_per_row, list(lengths_before),
@@ -829,7 +998,10 @@ class BatchedEngine:
             prefill_tokens=[chunk_plan.get(i, 0) for i in range(b)],
             placement=self.placement,
             per_shard_unique=(None if shard_mean is None
-                              else list(shard_mean)))
+                              else list(shard_mean)),
+            residency=self.residency, per_shard_miss=per_shard_miss,
+            fetch_hide=fetch_hide)
+        self._last_t_iter = float(cost["t_iter"])
         t_verify_shared = (wall_verify if self.clock == "wall"
                            else cost["t_iter"])
 
@@ -951,7 +1123,12 @@ class BatchedEngine:
             t_a2a=cost.get("t_a2a", 0.0),
             replica_moves=step_moves,
             packed_experts=(packed_expert_cap(self.cfg, b * t_max)
-                            if self.packed else 0))
+                            if self.packed else 0),
+            prefetch_hits=n_hits,
+            prefetch_misses=n_miss,
+            evictions=step_evictions,
+            fetch_bytes=step_fetch_bytes,
+            t_fetch=cost.get("t_fetch_unhidden", 0.0))
         self.telemetry.steps.append(step_tel)
         # every decode row experienced the WHOLE pass between its tokens —
         # the latency quantity SLOs bound (vs t_iter's attributed share)

@@ -74,6 +74,12 @@ class StepTelemetry:
                                # replica after this pass (0 = no replicas)
     packed_experts: int = 0    # U_pad of the union-packed verification
                                # path (0 = dense path)
+    # -- residency/offload fields (defaults = all-hbm placement) ---------- #
+    prefetch_hits: int = 0     # activated host-tier experts found resident
+    prefetch_misses: int = 0   # activated host-tier experts demand-fetched
+    evictions: int = 0         # host-tier residents evicted this step
+    fetch_bytes: float = 0.0   # host->HBM bytes fetched (prefetch + demand)
+    t_fetch: float = 0.0       # non-overlapped fetch seconds in t_step
 
     @property
     def t_total(self) -> float:
@@ -251,6 +257,24 @@ class EngineTelemetry:
         of sharded steps (0.0 when the deployment is unsharded)."""
         return planner_aggregates(self.steps)["hot_shard_frac"]
 
+    @property
+    def prefetch_hit_rate(self) -> float:
+        """Activated host-tier experts found HBM-resident at pass time /
+        all activated host-tier experts (1.0 = every fetch was hidden by
+        the prefetcher, or no host tier; docs/offload.md)."""
+        return planner_aggregates(self.steps)["prefetch_hit_rate"]
+
+    @property
+    def fetch_bytes(self) -> float:
+        """Total host->HBM bytes fetched across the run (0 without a
+        host tier)."""
+        return planner_aggregates(self.steps)["fetch_bytes"]
+
+    @property
+    def evictions(self) -> int:
+        """Host-tier cache evictions across the run."""
+        return planner_aggregates(self.steps)["evictions"]
+
 
 def planner_aggregates(steps) -> dict:
     """Batch-planner decision aggregates over a step-telemetry list — the
@@ -259,6 +283,8 @@ def planner_aggregates(steps) -> dict:
     its own run before aggregating)."""
     req = sum(s.k_requested for s in steps)
     gr = sum(s.k_granted for s in steps)
+    hits = sum(s.prefetch_hits for s in steps)
+    misses = sum(s.prefetch_misses for s in steps)
     errs = [abs(s.t_step_predicted - s.t_step) / s.t_step
             for s in steps if s.t_step > 0 and s.t_step_predicted]
     sharded = [s for s in steps if s.hot_shard >= 0]
@@ -278,4 +304,8 @@ def planner_aggregates(steps) -> dict:
         "hot_shard_frac": hot_frac,
         "slo_denied": sum(s.slo_denied for s in steps),
         "replica_moves": sum(s.replica_moves for s in steps),
+        "prefetch_hit_rate": (hits / (hits + misses)
+                              if (hits + misses) else 1.0),
+        "fetch_bytes": sum(s.fetch_bytes for s in steps),
+        "evictions": sum(s.evictions for s in steps),
     }

@@ -23,9 +23,12 @@ from repro.core import (BatchCostOracle, BatchSpecPlanner, CascadeController,
                         expected_unique_experts_sharded, greedy_allocate)
 
 CFG = get_config("mixtral-8x7b").reduced()          # 4 experts, top-2
+# every regime carries an ici figure: these tests pair the hardware with
+# multi-shard placements, and an ici-less Hardware now refuses to price
+# multi-shard all-to-all instead of silently impersonating HBM bandwidth
 HWS = [TPU_V5E,
-       Hardware("slowmem", hbm_bw=1e9, peak_flops=197e12),
-       Hardware("slowflops", hbm_bw=819e9, peak_flops=2e9),
+       Hardware("slowmem", hbm_bw=1e9, peak_flops=197e12, ici_bw=1e9),
+       Hardware("slowflops", hbm_bw=819e9, peak_flops=2e9, ici_bw=50e9),
        Hardware("crossover", hbm_bw=1e9, peak_flops=6e9, ici_bw=5e8)]
 
 

@@ -1,0 +1,538 @@
+"""Tiered expert residency (docs/offload.md): the `ExpertPlacement` tier
+contract, `ResidencyState`'s cache / analytic-miss-curve / capacity
+semantics, fetch pricing float-exactness between `batch_iteration_time`
+and `BatchCostOracle`, bit-exact degradation of the all-hbm tier through
+the whole `BatchedEngine` (token streams AND per-step telemetry), the
+planner's residency constraints, and the motivating-regime facts: the
+production MoE configs whose expert weights alone exceed a single
+device's HBM."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic in-repo fallback (requirements-dev.txt)
+    from tests._hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core import (BatchCostOracle, BatchSpecPlanner, CascadeController,
+                        ExpertPlacement, FetchDeadlineConstraint, Hardware,
+                        MemoryCapConstraint, ResidencyState, TPU_V5E,
+                        batch_iteration_time, expert_hbm_bytes,
+                        expected_unique_experts_sharded, greedy_allocate)
+
+CFG = get_config("mixtral-8x7b").reduced()          # 4 experts, top-2
+EB = expert_hbm_bytes(CFG)
+HOST_HW = Hardware("offload-test", hbm_bw=1e9, peak_flops=1e10,
+                   ici_bw=5e8, host_bw=1e9)
+
+
+def _tiered(n_shards=1, host=None):
+    """A contiguous placement on CFG with `host` experts demoted."""
+    pl = ExpertPlacement.contiguous(CFG.num_experts, n_shards)
+    return pl.offload(host if host is not None
+                      else [CFG.num_experts - 1])
+
+
+# ===================================================================== #
+# ExpertPlacement tier contract
+# ===================================================================== #
+
+def test_tier_contract_and_validation():
+    pl = ExpertPlacement.contiguous(4, 2)
+    assert pl.tier_of is None
+    assert pl.tiers == ("hbm",) * 4 and not pl.has_host_tier
+
+    off = pl.offload([3])
+    assert off.tiers == ("hbm", "hbm", "hbm", "host")
+    assert off.has_host_tier
+    # homes and routed populations are tier-blind...
+    assert off.shard_of == pl.shard_of and off.counts == pl.counts
+    # ...but the pinned-HBM footprint view drops the host expert
+    assert pl.resident_counts == (2, 2)
+    assert off.resident_counts == (2, 1)
+    assert off.hbm_tier_counts == (2, 1)
+    assert off.host_tier_counts == (0, 1)
+
+    with pytest.raises(ValueError):
+        ExpertPlacement((0, 0, 1, 1), ("hbm", "hbm", "host"))  # wrong len
+    with pytest.raises(ValueError):
+        ExpertPlacement((0, 0, 1, 1), ("hbm", "hbm", "hbm", "disk"))
+    with pytest.raises(ValueError):
+        pl.offload([7])                                        # no such expert
+
+
+def test_host_tier_cannot_be_replicated():
+    pl = ExpertPlacement.contiguous(4, 2)
+    rep = pl.replicate({0: 1})
+    # replication preserves tiers; offloading the replicated expert raises
+    off = rep.offload([3])
+    assert off.tiers[3] == "host" and off.has_replication
+    with pytest.raises(ValueError):
+        rep.offload([0])
+    # and the constructor enforces it directly
+    with pytest.raises(ValueError):
+        ExpertPlacement(((0, 1), 0, 1, 1), ("host", "hbm", "hbm", "hbm"))
+    # replicate() carries tier_of through
+    assert pl.offload([3]).replicate({0: 1}).tiers[3] == "host"
+
+
+def test_production_moes_exceed_single_device_hbm():
+    """The motivating regime (ISSUE / ROADMAP offload item): the big MoE
+    configs' expert weights ALONE exceed one device's HBM — without a
+    host tier those models are unservable on a single accelerator."""
+    for name in ("deepseek_v2_236b", "kimi_k2_1t_a32b"):
+        cfg = get_config(name)
+        eb = expert_hbm_bytes(cfg)
+        assert eb > 0
+        total = cfg.num_experts * eb
+        assert total > TPU_V5E.hbm_bytes
+        assert total > 4 * TPU_V5E.hbm_bytes  # not marginal: >4 devices
+    # the reduced test config comfortably fits (the tests' all-hbm tier)
+    assert CFG.num_experts * EB < TPU_V5E.hbm_bytes
+
+
+# ===================================================================== #
+# ResidencyState: slots, caps, cache mechanics
+# ===================================================================== #
+
+def test_residency_slots_and_caps():
+    off = _tiered(2, host=[2, 3])          # shard 1 homes 2 host experts
+    rs = ResidencyState(off, CFG)          # uncapped: every host expert fits
+    assert rs.slots == (0, 2)
+    assert rs.capacity_experts == [2.0, 2.0]
+    assert rs.expected_misses([2.0, 2.0]) == [0.0, 0.0]
+
+    capped = ResidencyState(off, CFG, cap_bytes=[2 * EB, 1.5 * EB])
+    assert capped.slots == (0, 1)          # shard 1: 1 slot after 0 pinned
+    # shard 0 pins 2 hbm experts > cap -> loud error, not silent clamp
+    with pytest.raises(ValueError):
+        ResidencyState(off, CFG, cap_bytes=[EB, 2 * EB])
+    # per-shard caps; None entries mean uncapped
+    mixed = ResidencyState(off, CFG, cap_bytes=[None, EB])
+    assert mixed.slots == (0, 1)
+    with pytest.raises(ValueError):
+        ResidencyState(off, CFG, cap_bytes=[EB])   # 1 cap vs 2 shards
+    with pytest.raises(ValueError):
+        ResidencyState(off, expert_bytes=0.0)
+    with pytest.raises(ValueError):
+        ResidencyState(off)                # neither cfg nor expert_bytes
+
+
+def test_residency_miss_curve():
+    off = _tiered(1, host=[2, 3])          # E=4, H=2 on one shard
+    for slots, want_frac in ((2, 0.0), (1, 0.5), (0, 1.0)):
+        rs = ResidencyState(off, CFG, cap_bytes=2 * EB + slots * EB)
+        assert rs.slots == (slots,)
+        # miss = acts * (H/E) * (1 - slots/H)
+        assert rs.expected_misses([4.0]) == \
+            pytest.approx([4.0 * 0.5 * want_frac])
+    rs = ResidencyState(off, CFG, cap_bytes=2 * EB)
+    assert rs.expected_misses([0.0]) == [0.0]
+    with pytest.raises(ValueError):
+        rs.expected_misses([1.0, 1.0])     # wrong shard count
+
+
+def test_residency_cache_hits_misses_eviction():
+    off = _tiered(1, host=[2, 3])
+    rs = ResidencyState(off, CFG, cap_bytes=2 * EB + EB)   # 1 slot
+    assert rs.resident_counts == (2,)      # only the pinned hbm pair
+    hit, missing = rs.access([0, 2], step=0)
+    assert hit == [] and missing == [2]    # hbm expert 0 is not tracked
+    out = rs.fetch(missing, step=0)
+    assert out["fetched"] == 1 and out["per_shard"] == [1]
+    assert out["bytes"] == EB and rs.is_resident(2)
+    assert rs.resident_counts == (3,)
+    hit, missing = rs.access([2], step=1)
+    assert hit == [2] and missing == []
+    # fetching the other host expert evicts the coldest (slot pressure)
+    rs.fetch([3], step=2)
+    assert rs.is_resident(3) and not rs.is_resident(2)
+    assert rs.evictions == 1
+    # hbm-tier experts are always resident; re-fetching a resident is free
+    assert rs.is_resident(0)
+    assert rs.fetch([3], step=3)["fetched"] == 0
+    snap = rs.snapshot()
+    assert snap["hits"] == 1 and snap["misses"] == 1
+    assert snap["evictions"] == 1 and snap["bytes_fetched"] == 2 * EB
+    assert snap["hit_rate"] == pytest.approx(0.5)
+
+
+def test_residency_eviction_prefers_cold_ema():
+    off = _tiered(1, host=[1, 2, 3])
+    rs = ResidencyState(off, CFG, cap_bytes=EB + 2 * EB)   # 2 slots
+    rs.fetch([1, 2], step=0)
+    # expert 2 is hot (activated every step), expert 1 never again
+    for step in range(1, 5):
+        rs.access([2], step)
+        rs.note_step([2], step)
+    rs.fetch([3], step=5)
+    assert rs.is_resident(2) and rs.is_resident(3)
+    assert not rs.is_resident(1)           # the EMA-cold one got evicted
+
+
+def test_residency_zero_slots_streams_without_retaining():
+    off = _tiered(1, host=[2, 3])
+    rs = ResidencyState(off, CFG, cap_bytes=2 * EB)        # 0 slots
+    out = rs.fetch([2, 3], step=0)
+    assert out["fetched"] == 2 and out["bytes"] == 2 * EB
+    assert not rs.is_resident(2) and rs.evictions == 0
+    assert rs.resident_counts == (2,)      # nothing retained
+    _, missing = rs.access([2], step=1)    # still a miss next pass
+    assert missing == [2]
+
+
+def test_residency_staging_install_used_discard_unused():
+    """The prefetch contract: staging bills bytes but touches nothing at
+    prediction time; staged reads are hits; note_step installs only what
+    the pass used (post-pass recency) and discards the rest."""
+    off = _tiered(1, host=[1, 2, 3])
+    rs = ResidencyState(off, CFG, cap_bytes=EB + 2 * EB)   # 2 slots
+    out = rs.fetch([1, 2], step=0, stage=True)
+    assert out["fetched"] == 2 and out["bytes"] == 2 * EB
+    assert not rs.is_resident(1)           # staged, not installed
+    assert rs.resident_counts == (1,)      # cache untouched by staging
+    hit, missing = rs.access([1, 3], step=0)
+    assert hit == [1] and missing == [3]   # staged read counts as a hit
+    rs.fetch(missing, step=0)              # demand miss installs directly
+    assert rs.is_resident(3)
+    rs.note_step([1, 3], step=0)
+    assert rs.is_resident(1)               # used staged expert installed
+    assert not rs.is_resident(2)           # unused staged expert discarded
+    assert rs.resident_counts == (3,) and rs.evictions == 0
+    # the discarded one re-bills; a now-resident one stages for free
+    assert rs.fetch([1, 2], step=1, stage=True)["fetched"] == 1
+    # draining into a full cache evicts the coldest, like a demand fetch
+    rs.access([2], step=1)
+    rs.note_step([2], step=1)
+    assert rs.is_resident(2) and rs.evictions == 1
+    assert not rs.is_resident(1)           # EMA-coldest (id tiebreak) out
+
+
+# ===================================================================== #
+# Fetch pricing: degradation, float-exactness, monotonicity
+# ===================================================================== #
+
+def test_all_hbm_residency_prices_bit_identically():
+    """The degradation clause: an all-hbm ResidencyState (or none) leaves
+    every batch_iteration_time output bit-identical — key for key."""
+    pl = ExpertPlacement.contiguous(CFG.num_experts, 2)
+    rs = ResidencyState(pl, CFG)
+    for ns in ([3, 2], [0, 5], [1, 1]):
+        ref = batch_iteration_time(CFG, HOST_HW, ns, [64, 64], placement=pl)
+        got = batch_iteration_time(CFG, HOST_HW, ns, [64, 64], placement=pl,
+                                   residency=rs)
+        assert set(ref) == set(got)
+        for k in ref:
+            assert np.all(ref[k] == got[k]), k
+
+
+@settings(max_examples=40, deadline=None)
+@given(ns=st.lists(st.integers(0, 9), min_size=1, max_size=4),
+       slots_b=st.integers(0, 2), hide=st.floats(0.0, 1e-3),
+       shards=st.integers(1, 2))
+def test_oracle_matches_batch_iteration_time_with_fetch(ns, slots_b, hide,
+                                                        shards):
+    """The PR-4/PR-6 float-exactness contract extends to fetch pricing:
+    `BatchCostOracle.t_batch` == `batch_iteration_time`'s t_iter at every
+    allocation, residency and fetch_hide included (shared `_fetch_time`)."""
+    host = [2, 3] if shards == 1 else [3]  # host experts on the last shard
+    off = _tiered(shards, host=host)
+    pinned = sum(off.resident_counts)
+    rs = ResidencyState(off, CFG,
+                        cap_bytes=[c * EB + (slots_b * EB if s == shards - 1
+                                             else 0.0)
+                                   for s, c in enumerate(off.resident_counts)])
+    ctx = [64] * len(ns)
+    orc = BatchCostOracle(CFG, HOST_HW, ctx, placement=off, residency=rs,
+                          fetch_hide=hide)
+    ref = batch_iteration_time(CFG, HOST_HW, ns, ctx, placement=off,
+                               residency=rs, fetch_hide=hide)
+    assert orc.t_batch(ns) == ref["t_iter"]
+    assert ref["t_fetch_unhidden"] == orc.fetch_unhidden(ns)
+    assert np.isfinite(ref["t_iter"])
+    del pinned
+
+
+def test_fetch_pricing_monotone_in_cap_and_attributed():
+    """More cache slots -> fewer analytic misses -> cheaper pass, down to
+    exactly the uncapped (zero-fetch) price; the fetch term lands in the
+    output keys (t_fetch / t_fetch_unhidden / fetch_bytes)."""
+    off = _tiered(1, host=[2, 3])
+    ns, ctx = [4, 3], [64, 64]
+    base = batch_iteration_time(CFG, HOST_HW, ns, ctx, placement=off)
+    prev = None
+    for slots in (0, 1, 2):
+        rs = ResidencyState(off, CFG, cap_bytes=2 * EB + slots * EB)
+        out = batch_iteration_time(CFG, HOST_HW, ns, ctx, placement=off,
+                                   residency=rs)
+        assert np.isfinite(out["t_iter"])
+        assert out["t_fetch"] >= out["t_fetch_unhidden"] >= 0.0
+        assert out["fetch_bytes"] == pytest.approx(
+            sum(out["fetch_miss"]) * EB)
+        if prev is not None:
+            assert out["t_iter"] <= prev + 1e-15
+        prev = out["t_iter"]
+    # uncapped host tier: zero analytic misses, the base price exactly
+    rs = ResidencyState(off, CFG)
+    out = batch_iteration_time(CFG, HOST_HW, ns, ctx, placement=off,
+                               residency=rs)
+    assert out["t_fetch"] == 0.0 and out["t_iter"] == base["t_iter"]
+    # fetch_hide only ever shrinks the unhidden term
+    capped = ResidencyState(off, CFG, cap_bytes=2 * EB)
+    full = batch_iteration_time(CFG, HOST_HW, ns, ctx, placement=off,
+                                residency=capped)
+    hid = batch_iteration_time(CFG, HOST_HW, ns, ctx, placement=off,
+                               residency=capped, fetch_hide=1.0)
+    assert hid["t_fetch"] == full["t_fetch"]
+    assert hid["t_fetch_unhidden"] == 0.0
+    assert hid["t_iter"] == pytest.approx(full["t_iter"]
+                                          - full["t_fetch_unhidden"])
+
+
+def test_measured_misses_override_analytic_curve():
+    off = _tiered(1, host=[2, 3])
+    rs = ResidencyState(off, CFG)          # uncapped: analytic misses = 0
+    out = batch_iteration_time(CFG, HOST_HW, [4], [64], placement=off,
+                               residency=rs, per_shard_miss=[2.0])
+    assert out["fetch_miss"] == [2.0]
+    assert out["t_fetch"] == pytest.approx(2.0 * EB / HOST_HW.host_bw)
+    with pytest.raises(ValueError):
+        batch_iteration_time(CFG, HOST_HW, [4], [64], placement=off,
+                             residency=rs, per_shard_miss=[1.0, 1.0])
+
+
+def test_host_tier_requires_host_bw():
+    no_host = Hardware("no-host", hbm_bw=1e9, peak_flops=1e10, ici_bw=5e8)
+    off = _tiered(1, host=[3])
+    rs = ResidencyState(off, CFG)
+    with pytest.raises(ValueError):
+        batch_iteration_time(CFG, no_host, [3], [64], placement=off,
+                             residency=rs)
+    with pytest.raises(ValueError):
+        BatchCostOracle(CFG, no_host, [64], placement=off, residency=rs)
+    # all-hbm placements never touch the host link: no error
+    pl = ExpertPlacement.contiguous(CFG.num_experts, 1)
+    assert BatchCostOracle(CFG, no_host, [64], placement=pl,
+                           residency=ResidencyState(pl, CFG)).t_batch([3]) > 0
+
+
+def test_a2a_requires_ici():
+    """The silent-fallback fix: an ici-less Hardware must refuse to price
+    multi-shard all-to-all instead of impersonating HBM bandwidth."""
+    no_ici = Hardware("no-ici", hbm_bw=1e9, peak_flops=1e10)
+    pl2 = ExpertPlacement.contiguous(CFG.num_experts, 2)
+    with pytest.raises(ValueError, match="ici_bw"):
+        batch_iteration_time(CFG, no_ici, [3, 2], [64, 64], placement=pl2)
+    with pytest.raises(ValueError, match="ici_bw"):
+        BatchCostOracle(CFG, no_ici, [64, 64], placement=pl2).t_batch([3, 2])
+    # one shard never crosses the interconnect: still fine
+    pl1 = ExpertPlacement.contiguous(CFG.num_experts, 1)
+    out = batch_iteration_time(CFG, no_ici, [3], [64], placement=pl1)
+    assert out.get("t_a2a", 0.0) == 0.0 and np.isfinite(out["t_iter"])
+
+
+def test_rebalance_respects_residency_capacity():
+    """Replica relief must not rebalance onto a shard without residency
+    headroom: capping the relief target's capacity at its current load
+    pins the gating shard where the uncapped rebalance would have
+    relieved it."""
+    import dataclasses
+    cfg8 = dataclasses.replace(CFG, num_experts=8)
+    pl = ExpertPlacement.contiguous(8, 2).replicate({0: 1, 1: 1})
+    ns = [6, 6]
+    sw = [[1.0, 0.0], [1.0, 0.0]]          # all routing mass on shard 0
+    free = expected_unique_experts_sharded(8, 2, ns, pl, 0.0,
+                                           shard_weights=sw)
+    cap1 = free["per_shard"][1] / 2        # headroom below the free relief
+    tight = expected_unique_experts_sharded(
+        8, 2, ns, pl, 0.0, shard_weights=sw, capacity=[8.0, cap1])
+    assert free["max_shard"] < tight["max_shard"]      # relief was blocked
+    assert tight["per_shard"][1] <= cap1 + 1e-9        # clamped to headroom
+
+
+# ===================================================================== #
+# Planner: residency constraints
+# ===================================================================== #
+
+def _oracle(residency, fetch_hide=0.0, b=2):
+    return BatchCostOracle(CFG, HOST_HW, [64] * b,
+                           placement=residency.placement,
+                           residency=residency, fetch_hide=fetch_hide)
+
+
+def test_memory_cap_constraint_denies_over_capacity_grants():
+    off = _tiered(1, host=[2, 3])
+    rs = ResidencyState(off, CFG, cap_bytes=2 * EB)        # capacity 2.0
+    orc = _oracle(rs)
+    decode, caps, accepts = [0, 1], {0: 6, 1: 6}, {0: 0.95, 1: 0.95}
+    a_free, _ = greedy_allocate(orc, [1, 1], decode, caps, accepts)
+    a_cap, info = greedy_allocate(
+        orc, [1, 1], decode, caps, accepts,
+        constraints=[MemoryCapConstraint(residency=rs)])
+    assert sum(a_cap.values()) < sum(a_free.values())
+    assert 0 in info["denied"].get("memory_cap", set()) \
+        or 1 in info["denied"].get("memory_cap", set())
+    # the base [1,1] already predicts a union of 3 > capacity 2, so the
+    # don't-worsen clause governs: grants must not grow the union at all
+    ns = [1 + a_cap[0], 1 + a_cap[1]]
+    assert orc.shard_unique(ns)[0] <= orc.shard_unique([1, 1])[0] + 1e-9
+
+
+def test_memory_cap_escape_clause_never_freezes_the_batch():
+    """A base state already over capacity (tiny cap, big batch) must not
+    deny everything forever — the don't-worsen clause still admits grants
+    that leave the predicted union where it is (saturated)."""
+    off = _tiered(1, host=[2, 3])
+    rs = ResidencyState(off, CFG, cap_bytes=2 * EB)
+    orc = _oracle(rs, b=4)
+    decode = [0, 1, 2, 3]
+    ns0 = [8, 8, 8, 8]                     # union saturated at E=4 > cap
+    a, _ = greedy_allocate(orc, ns0, decode, {i: 4 for i in decode},
+                           {i: 0.99 for i in decode},
+                           constraints=[MemoryCapConstraint(residency=rs)])
+    assert sum(a.values()) > 0             # saturated growth still admitted
+
+
+def test_fetch_deadline_constraint_bounds_unhidden_fetch():
+    off = _tiered(1, host=[2, 3])
+    rs = ResidencyState(off, CFG, cap_bytes=2 * EB)        # every act misses
+    decode, caps, accepts = [0, 1], {0: 6, 1: 6}, {0: 0.95, 1: 0.95}
+    # zero hide window: any grant that grows the predicted union grows
+    # unhidden fetch -> denied from the start
+    tight = _oracle(rs, fetch_hide=0.0)
+    a_tight, info = greedy_allocate(
+        tight, [1, 1], decode, caps, accepts,
+        constraints=[FetchDeadlineConstraint(residency=rs)])
+    # a hide window big enough to swallow every fetch admits everything
+    wide = _oracle(rs, fetch_hide=1.0)
+    a_wide, _ = greedy_allocate(
+        wide, [1, 1], decode, caps, accepts,
+        constraints=[FetchDeadlineConstraint(residency=rs)])
+    free, _ = greedy_allocate(wide, [1, 1], decode, caps, accepts)
+    assert sum(a_tight.values()) < sum(a_wide.values())
+    assert a_wide == free
+    assert info["denied"].get("fetch_deadline")
+    # the admitted allocation's unhidden fetch never exceeds the base's
+    ns = [1 + a_tight[0], 1 + a_tight[1]]
+    assert tight.fetch_unhidden(ns) <= tight.fetch_unhidden([1, 1]) + 1e-12
+
+
+def test_planner_wires_residency_through():
+    off = _tiered(1, host=[3])
+    rs = ResidencyState(off, CFG, cap_bytes=3 * EB)
+    planner = BatchSpecPlanner(CFG, HOST_HW, residency=rs)
+    assert planner.placement is off        # adopted from the residency
+    names = [c.name for c in planner.build_constraints([0, 1], {0: 3, 1: 3}, {})]
+    assert "memory_cap" in names and "fetch_deadline" in names
+    ctls = {i: CascadeController() for i in range(2)}
+    plan = planner.plan(ctls, [64, 64])
+    assert plan.t_base > 0 and np.isfinite(plan.t_predicted)
+    # a residency tracking a different placement than the planner's is a
+    # pricing-contract violation, loudly
+    other = ExpertPlacement.contiguous(CFG.num_experts, 2)
+    with pytest.raises(ValueError):
+        BatchSpecPlanner(CFG, HOST_HW, placement=other, residency=rs)
+    # without a host tier the pipeline stays exactly the PR-5 one
+    pl = ExpertPlacement.contiguous(CFG.num_experts, 1)
+    vanilla = BatchSpecPlanner(CFG, HOST_HW,
+                               residency=ResidencyState(pl, CFG))
+    names = [c.name for c in vanilla.build_constraints([0], {0: 3}, {})]
+    assert "memory_cap" not in names and "fetch_deadline" not in names
+
+
+# ===================================================================== #
+# Engine: all-hbm drift gate and tiered telemetry
+# ===================================================================== #
+
+def _run_sched(cfg, params, residency, n_req=4, max_batch=3, prefetch=True):
+    from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
+                               NGramDrafter, Request)
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                        max_batch=max_batch, max_len=256,
+                        temperature=0.0, clock="model", seed=0,
+                        residency=residency, prefetch=prefetch)
+    sched = ContinuousBatchingScheduler(
+        eng, controller_factory=lambda: CascadeController())
+    reqs = [Request(request_id=f"r{i}", prompt=[3 + i, 4 + i, 5 + i] * 6,
+                    max_new=10 + 2 * i) for i in range(n_req)]
+    res = sched.run(reqs)
+    return res, eng
+
+
+@pytest.mark.parametrize("max_batch", [1, 4])
+def test_engine_all_hbm_residency_identical_to_none(tiny_moe, max_batch):
+    """The acceptance property at B in {1, 4}: an all-hbm ResidencyState
+    must leave the BatchedEngine's token streams AND per-step telemetry
+    bit-identical to the residency-free engine — every field, the new
+    prefetch counters at their zero defaults."""
+    cfg, params = tiny_moe
+    pl = ExpertPlacement.contiguous(cfg.num_experts, 1)
+    r_none, e_none = _run_sched(cfg, params, None, max_batch=max_batch)
+    r_hbm, e_hbm = _run_sched(cfg, params, ResidencyState(pl, cfg),
+                              max_batch=max_batch)
+    assert [r.tokens for r in r_none] == [r.tokens for r in r_hbm]
+    assert len(e_none.telemetry.steps) == len(e_hbm.telemetry.steps)
+    for a, b in zip(e_none.telemetry.steps, e_hbm.telemetry.steps):
+        assert a == b          # dataclass equality: every field
+    for ra, rb in zip(r_none, r_hbm):
+        assert ra.telemetry.iterations == rb.telemetry.iterations
+        assert ra.telemetry.ttft == rb.telemetry.ttft
+    assert e_hbm.telemetry.prefetch_hit_rate == 1.0
+    assert e_hbm.telemetry.fetch_bytes == 0.0
+
+
+def test_engine_tiered_residency_telemetry(tiny_moe):
+    """A miss-forcing cap on a host-tiered placement: the engine fetches,
+    the telemetry shows it, and greedy token streams stay lossless (the
+    tier changes pricing, never routing)."""
+    cfg, params = tiny_moe
+    pl = ExpertPlacement.contiguous(cfg.num_experts, 1)
+    eb = expert_hbm_bytes(cfg)
+    off = pl.offload([cfg.num_experts - 2, cfg.num_experts - 1])
+    cap = (cfg.num_experts - 2) * eb + eb  # one cache slot for two experts
+    r_ref, _ = _run_sched(cfg, params, None)
+    rs = ResidencyState(off, cfg, cap_bytes=cap)
+    r_t, e_t = _run_sched(cfg, params, rs)
+    assert [r.tokens for r in r_ref] == [r.tokens for r in r_t]
+    tel = e_t.telemetry
+    steps = tel.steps
+    assert any(s.prefetch_misses > 0 for s in steps)
+    assert any(s.t_fetch > 0 for s in steps)
+    assert tel.fetch_bytes > 0 and tel.evictions > 0
+    assert 0.0 <= tel.prefetch_hit_rate <= 1.0
+    snap = rs.snapshot()
+    assert snap["bytes_fetched"] == pytest.approx(tel.fetch_bytes)
+    # prefetch off: same tokens, zero probe work, demand fetches only
+    r_off, e_off = _run_sched(cfg, params,
+                              ResidencyState(off, cfg, cap_bytes=cap),
+                              prefetch=False)
+    assert [r.tokens for r in r_ref] == [r.tokens for r in r_off]
+    assert e_off.telemetry.fetch_bytes > 0
+
+
+def test_engine_rejects_residency_placement_mismatch(tiny_moe):
+    from repro.serving import BatchedEngine, NGramDrafter
+    cfg, params = tiny_moe
+    pl2 = ExpertPlacement.contiguous(cfg.num_experts, 2)
+    rs = ResidencyState(ExpertPlacement.contiguous(cfg.num_experts, 1), cfg)
+    with pytest.raises(ValueError):
+        BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=1,
+                      max_len=128, placement=pl2, residency=rs)
+    naked = BatchSpecPlanner(cfg)
+    with pytest.raises(ValueError):
+        BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=1,
+                      max_len=128, residency=rs, planner=naked)
+
+
+# ===================================================================== #
+# Satellite: benchmark entrypoints import clean (eagle_study docstring)
+# ===================================================================== #
+
+def test_benchmark_modules_import():
+    import benchmarks.eagle_study as eagle
+    import benchmarks.serving_micro as sm
+    assert "simulator" in (eagle.__doc__ or "").lower()
+    assert callable(eagle.main)
+    assert callable(sm.main)
