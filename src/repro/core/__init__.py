@@ -13,12 +13,16 @@ from .cost_model import (BatchCostOracle, Calibration, ExpertPlacement,
                          expected_emitted_curve,
                          expected_unique_experts_sharded)
 from .manager import BASELINE, TEST, SET, CascadeConfig, SpeculationManager
-from .planner import (BatchPlan, BatchSpecPlanner, BreakEvenConstraint,
-                      DraftYieldModel, FetchDeadlineConstraint,
-                      GrantConstraint, MemoryCapConstraint, PlanDecision,
-                      PlannerConfig, SLOTpotConstraint, greedy_allocate)
+from .planner import (ADMIT, DEFER, SHED, AdmissionConstraint,
+                      AdmissionDecision, BatchPlan, BatchSpecPlanner,
+                      BreakEvenConstraint, DraftYieldModel,
+                      FetchDeadlineConstraint, GrantConstraint,
+                      MemoryCapConstraint, PlanDecision, PlannerConfig,
+                      PredictiveTTFTAdmission, SLOTpotConstraint,
+                      greedy_allocate)
 from .residency import ResidencyState, expert_hbm_bytes
-from .slo import LATENCY, THROUGHPUT, RequestSLO, tpot_within
+from .slo import (LATENCY, THROUGHPUT, RequestSLO, tpot_within,
+                  ttft_violated)
 from .utility import IterationRecord, UtilityAnalyzer
 
 __all__ = [
@@ -32,9 +36,11 @@ __all__ = [
     "BatchSpecPlanner", "BatchPlan", "PlanDecision", "PlannerConfig",
     "expected_emitted", "expected_emitted_curve", "greedy_allocate",
     "ExpertPlacement", "expected_unique_experts_sharded", "a2a_bytes",
-    "RequestSLO", "LATENCY", "THROUGHPUT", "tpot_within",
+    "RequestSLO", "LATENCY", "THROUGHPUT", "tpot_within", "ttft_violated",
     "GrantConstraint", "BreakEvenConstraint", "SLOTpotConstraint",
     "MemoryCapConstraint", "FetchDeadlineConstraint",
+    "AdmissionConstraint", "AdmissionDecision", "PredictiveTTFTAdmission",
+    "ADMIT", "DEFER", "SHED",
     "ResidencyState", "expert_hbm_bytes",
     "DraftYieldModel",
 ]

@@ -366,6 +366,88 @@ class FetchDeadlineConstraint(GrantConstraint):
         return not (cur > ctx.oracle.fetch_unhidden(base_ns) + self._eps)
 
 
+# -- admission-side constraints (docs/serving_load.md) ------------------- #
+#
+# The GrantConstraint pipeline above vets +1-draft grants to rows already
+# IN the batch. Under open-loop load the symmetric decision happens one
+# level earlier: should a queued request join the batch at all?  Same
+# shape — a predicted cost, a bound, an escape clause — applied to joins
+# instead of grants.
+
+#: admission verdicts: ADMIT joins the request now; DEFER holds it at the
+#: queue head until the batch drains (backpressure); SHED drops it and
+#: records the drop as first-class telemetry (a bounded shed request IS a
+#: TTFT violation — `slo.ttft_violated`).
+ADMIT, DEFER, SHED = "admit", "defer", "shed"
+
+
+@dataclass
+class AdmissionDecision:
+    """One join verdict, with the prediction that produced it."""
+    action: str                # ADMIT | DEFER | SHED
+    predicted_ttft: float = 0.0  # queue delay so far + predicted service
+    reason: str = ""
+
+
+class AdmissionConstraint:
+    """One rule of the admission pipeline — the join-side analogue of
+    `GrantConstraint`. `decide` vets a single queued request about to
+    join; it must be a pure read (no engine or scheduler state mutated),
+    so an admission pipeline that always returns ADMIT is bit-identical
+    to running without one. Subclass and hand to
+    `ContinuousBatchingScheduler(admission=...)`."""
+
+    name = "admission"
+
+    def decide(self, slo, *, queue_delay: float, service_time: float,
+               deferrals: int = 0) -> AdmissionDecision:
+        return AdmissionDecision(ADMIT, queue_delay + service_time)
+
+
+@dataclass
+class PredictiveTTFTAdmission(AdmissionConstraint):
+    """Shed (or defer) joins whose TTFT is already doomed: the request's
+    accrued queue delay plus the `BatchCostOracle`-predicted service time
+    to its first token (`BatchedEngine.predicted_service_time` — prefill
+    passes priced at the CURRENT batch state) already exceeds its TTFT
+    bound, so admitting it burns prefill capacity on a guaranteed SLO
+    violation and lengthens the shared pass for everyone behind it.
+
+    The escape clause mirrors the grant constraints' don't-worsen rule:
+    requests without a TTFT bound are never touched, and a bound met
+    within `headroom` admits immediately — under light load the
+    constraint never engages and the token streams are bit-identical to
+    the unconstrained scheduler. `on_doomed` picks the overload
+    behavior: "shed" drops doomed requests (load shedding), "defer"
+    holds them at the queue head for up to `max_defers` admission
+    rounds (backpressure) before admitting anyway — deferral must never
+    become livelock, so the defer budget is the liveness valve."""
+    on_doomed: str = "shed"    # "shed" | "defer"
+    max_defers: int = 8
+    headroom: float = 1.0     # admit when predicted <= headroom * bound
+
+    name = "predictive_ttft"
+
+    def __post_init__(self):
+        if self.on_doomed not in (SHED, DEFER):
+            raise ValueError(f"on_doomed={self.on_doomed!r} "
+                             f"(expected {SHED!r} or {DEFER!r})")
+
+    def decide(self, slo, *, queue_delay: float, service_time: float,
+               deferrals: int = 0) -> AdmissionDecision:
+        bound = getattr(slo, "ttft", None)
+        predicted = queue_delay + service_time
+        if bound is None or predicted <= self.headroom * bound:
+            return AdmissionDecision(ADMIT, predicted)
+        if self.on_doomed == DEFER and deferrals < self.max_defers:
+            return AdmissionDecision(DEFER, predicted,
+                                     "predicted TTFT past bound")
+        return AdmissionDecision(
+            SHED if self.on_doomed == SHED else ADMIT, predicted,
+            "predicted TTFT past bound" if self.on_doomed == SHED
+            else "defer budget exhausted")
+
+
 @dataclass
 class PlanDecision:
     """One request's slice of the step plan."""
@@ -395,6 +477,9 @@ class BatchPlan:
     held: int = 0              # TEST trials postponed this step
     preempted: int = 0         # requests granted 0 while asking > 0
     slo_denied: int = 0        # rows whose grants an SLO constraint capped
+    priced: bool = False       # the oracle actually priced this pass (any
+                               # tokens planned) — telemetry's calibration-
+                               # sample filter, robust to a predicted 0.0
 
     @property
     def requested_total(self) -> int:
@@ -693,4 +778,4 @@ class BatchSpecPlanner:
             tokens_predicted=sum(ym.emitted(i, alloc[i]) for i in decode),
             held=len(held),
             preempted=sum(1 for d in decisions.values() if d.preempted),
-            slo_denied=len(slo_capped))
+            slo_denied=len(slo_capped), priced=any_tokens)

@@ -34,6 +34,21 @@ def tpot_within(bound: Optional[float], tpot: Optional[float]) -> bool:
     return tpot <= bound
 
 
+def ttft_violated(bound: Optional[float], ttft: Optional[float]) -> bool:
+    """True when a request's TTFT violated its bound. TTFT is an *outcome*,
+    not an estimate, so the no-data rule is the OPPOSITE of `tpot_within`:
+    a bounded request that never produced a first token (shed, or still
+    queued at the replay horizon — ttft None or <= 0) has by construction
+    blown any finite TTFT bound. Mapping "never served" to "no violation"
+    is exactly the silent-zero-violation failure mode this predicate
+    exists to close. No bound still always passes."""
+    if bound is None:
+        return False
+    if ttft is None or ttft <= 0:
+        return True
+    return ttft > bound
+
+
 @dataclass(frozen=True)
 class RequestSLO:
     """Per-request latency objective.

@@ -98,3 +98,25 @@ def request_stream(mix: str, n: int, seed: int = 0, **kw):
     rng = np.random.default_rng(seed)
     tasks = MIXES[mix]
     return [make_sample(tasks[i % len(tasks)], rng, **kw) for i in range(n)]
+
+
+def sample_length(rng: np.random.Generator, dist: str = "lognormal", *,
+                  median: float = 32.0, sigma: float = 0.6,
+                  alpha: float = 1.5, lo: int = 4, hi: int = 256) -> int:
+    """One long-tailed length draw for production-shaped traffic
+    (docs/serving_load.md): real prompt/output length distributions are
+    right-skewed — most requests short, a heavy tail of huge ones — and
+    the tail is what fills cache rows and queues. "lognormal" draws
+    exp(N(ln median, sigma²)) (median `median`, tail weight `sigma`);
+    "pareto" draws lo·(1+Pareto(alpha)) (the heavier power-law tail,
+    infinite variance at alpha <= 2). Clamped to [lo, hi] — hi mirrors
+    the serving cap (`max_len` / `max_new`), where real traffic truncates
+    too."""
+    if dist == "lognormal":
+        x = median * float(np.exp(sigma * rng.standard_normal()))
+    elif dist == "pareto":
+        x = lo * (1.0 + float(rng.pareto(alpha)))
+    else:
+        raise ValueError(f"unknown length distribution {dist!r} "
+                         "(expected 'lognormal' or 'pareto')")
+    return int(min(max(round(x), lo), hi))

@@ -5,7 +5,9 @@ from repro.core.slo import RequestSLO
 
 from .drafter import Drafter, DraftModelDrafter, NGramDrafter
 from .engine import BatchedEngine, GenerationResult, ServingEngine
+from .load import (LoadSpec, build_trace, diurnal_arrivals,
+                   poisson_arrivals, run_load, summarize)
 from .sampler import greedy_verify, rejection_sample
 from .scheduler import ContinuousBatchingScheduler, Request, Scheduler
 from .telemetry import (EngineTelemetry, IterationTelemetry,
-                        RequestTelemetry, StepTelemetry)
+                        RequestTelemetry, StepTelemetry, percentile)

@@ -584,6 +584,49 @@ class BatchedEngine:
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
+    def predicted_service_time(self, prompt_len: int) -> float:
+        """Predicted seconds from joining NOW to this prompt's first
+        output token, on the model clock — the admission-side counterpart
+        of the planner's pass predictions, and what
+        `PredictiveTTFTAdmission` adds to a queued request's accrued delay
+        to decide whether its TTFT bound is already doomed
+        (docs/serving_load.md). Blocking admission (chunk=0) is one full
+        prefill pass. Chunked admission prices one decode-shaped shared
+        pass carrying a `chunk`-token prefill row alongside the CURRENT
+        batch state (1 committed token per live decode row — the
+        conservative no-speculation floor) via `BatchCostOracle`, then
+        charges one such pass per chunk of this prompt — or more, when
+        the prefill backlog already queued ahead of it exceeds the
+        admission budget. A pure prediction: reads engine state, mutates
+        nothing."""
+        n = max(int(prompt_len), 1)
+        if self.chunk <= 0:
+            return cm.prefill_time(self.cfg, self.hw, n,
+                                   affinity=self.affinity,
+                                   window=self.window)["t_iter"]
+        lens = [int(x) for x in np.asarray(self.cache["lengths"])]
+        chunk = min(self.chunk, n)
+        oracle = cm.BatchCostOracle(
+            self.cfg, self.hw, lens + [0], affinity=self.affinity,
+            window=self.window,
+            prefill_tokens=[0] * len(lens) + [chunk],
+            placement=self.placement,
+            calibration=getattr(self.planner, "calibration", None),
+            residency=self.residency)
+        ns = [0] * (len(lens) + 1)
+        backlog = 0
+        for i in self.active_slots:
+            s = self.slots[i]
+            if s.phase == "prefill":
+                backlog += max(len(s.prompt) - s.prefill_pos, 0)
+            else:
+                ns[i] = 1
+        ns[-1] = chunk
+        t_pass = oracle.t_batch(ns)
+        budget = max(self.max_prefill_tokens_per_step, chunk)
+        n_passes = max(-(-n // chunk), -(-(backlog + n) // budget))
+        return n_passes * t_pass
+
     def join(self, prompt: List[int], max_new: int = 128, *,
              controller=None, request_id: str = "", task: str = "",
              stop_token: Optional[int] = None, enc_out=None,
@@ -1115,6 +1158,7 @@ class BatchedEngine:
             t_step_predicted=plan.t_predicted,
             t_base_predicted=plan.t_base,
             tokens_predicted=plan.tokens_predicted,
+            planned=plan.priced,
             slo_denied=plan.slo_denied,
             shard_experts=tuple(cost.get("shard_unique", ())),
             max_shard_experts=cost.get("max_shard_experts", 0.0),

@@ -3,8 +3,22 @@ utility analyzer feeds on (the paper's 'utility analysis telemetry', §6)."""
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Sequence
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile: the smallest element covering a q-fraction
+    of the sorted sample (q in (0, 1]; 0 of an empty sample). The ONE
+    percentile rule shared by `ContinuousBatchingScheduler.tier_stats` and
+    the load harness's p50/p95/p99 latency figures — two ad-hoc index
+    formulas disagreeing at the tail is how p95 regressions hide."""
+    if not values:
+        return 0.0
+    vs = sorted(values)
+    rank = math.ceil(q * len(vs))
+    return vs[min(max(rank, 1), len(vs)) - 1]
 
 
 @dataclass
@@ -63,6 +77,9 @@ class StepTelemetry:
     t_step_predicted: float = 0.0  # planner's predicted pass seconds
     t_base_predicted: float = 0.0  # predicted no-speculation pass seconds
     tokens_predicted: float = 0.0  # planner's predicted decode emissions
+    planned: bool = False      # the planner actually priced this pass —
+                               # the calibration-sample filter (a predicted
+                               # 0.0 is a sample, not an absence of one)
     slo_denied: int = 0        # rows whose grants an SLO constraint capped
     # -- EP-shard fields (defaults = unsharded deployment) ---------------- #
     shard_experts: tuple = ()  # per-shard activated experts (mean layers)
@@ -110,6 +127,11 @@ class RequestTelemetry:
     tier: str = "throughput"   # scheduling tier ("latency" | "throughput")
     slo_tpot: Optional[float] = None   # TPOT bound of the request, if any
     slo_ttft: Optional[float] = None   # TTFT bound of the request, if any
+    # -- overload outcome (docs/serving_load.md) -------------------------- #
+    shed: bool = False         # admission shed the request before it ever
+                               # reached a slot; t_queue holds the wait it
+                               # accrued, ttft stays 0 (and a TTFT bound on
+                               # a shed request counts as violated)
 
     # ------------------------------------------------------------------ #
 
@@ -154,9 +176,14 @@ class RequestTelemetry:
 
     @property
     def slo_ttft_violated(self) -> bool:
-        from repro.core.slo import tpot_within
-        return not tpot_within(self.slo_ttft, self.ttft if self.ttft > 0
-                               else None)
+        """True when this request's TTFT blew its bound — including the
+        never-served case (shed, or still queued at a replay horizon):
+        a bounded request with no first token IS a violation, not an
+        unknown (`slo.ttft_violated`'s rule; mapping ttft == 0 to "no
+        violation" silently zeroed the violation counters under
+        overload)."""
+        from repro.core.slo import ttft_violated
+        return ttft_violated(self.slo_ttft, self.ttft)
 
     @property
     def etr(self) -> float:
@@ -285,8 +312,11 @@ def planner_aggregates(steps) -> dict:
     gr = sum(s.k_granted for s in steps)
     hits = sum(s.prefetch_hits for s in steps)
     misses = sum(s.prefetch_misses for s in steps)
+    # filter on "a plan priced this pass", not on the prediction's
+    # truthiness — a predicted 0.0 is a (terrible) calibration sample the
+    # error must count, not a missing one
     errs = [abs(s.t_step_predicted - s.t_step) / s.t_step
-            for s in steps if s.t_step > 0 and s.t_step_predicted]
+            for s in steps if s.t_step > 0 and s.planned]
     sharded = [s for s in steps if s.hot_shard >= 0]
     hot_frac = 0.0
     if sharded:

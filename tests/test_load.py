@@ -1,0 +1,360 @@
+"""Open-loop load harness (docs/serving_load.md): arrival-stamped queue
+delay, the admission starvation guard, censored-vs-drained throughput
+accounting, shed-request violation accounting, arrival-process sanity,
+and the predictive TTFT admission constraint's deny/defer semantics and
+escape clause."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (ADMIT, DEFER, SHED, CascadeController,
+                        PredictiveTTFTAdmission, RequestSLO, ttft_violated)
+from repro.core.slo import LATENCY, THROUGHPUT
+from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
+                           NGramDrafter, Request, percentile)
+from repro.serving.load import (LoadSpec, build_trace, diurnal_arrivals,
+                                poisson_arrivals, run_load, summarize)
+from repro.serving.telemetry import StepTelemetry, planner_aggregates
+
+
+def _sched(tiny_moe, *, max_batch=2, chunk=0, **kw):
+    cfg, params = tiny_moe
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                        max_batch=max_batch, max_len=256, temperature=0.0,
+                        clock="model", seed=0, chunk=chunk)
+    return ContinuousBatchingScheduler(
+        eng, controller_factory=lambda: CascadeController(), **kw)
+
+
+def _req(rid, *, max_new=6, slo=None, seed=3):
+    return Request(request_id=rid, prompt=[seed, seed + 1, seed + 2] * 4,
+                   max_new=max_new, slo=slo)
+
+
+# ===================================================================== #
+# arrival-stamped queue delay
+# ===================================================================== #
+
+def test_trace_queue_delay_reflects_arrival_time(tiny_moe):
+    """Two requests arrive at t=0 with one slot: the queued one's t_queue
+    must cover its wait from ARRIVAL (≈ the first request's service
+    time), not from the submit() call the replay loop happened to make
+    later."""
+    sched = _sched(tiny_moe, max_batch=1)
+    sched.run_trace([(0.0, _req("a")), (0.0, _req("b", seed=5))])
+    tel = {r.telemetry.request_id: r.telemetry for r in sched.results}
+    assert tel["a"].t_queue == 0.0
+    assert tel["b"].t_queue > 0.0
+    # b waited out a's entire occupancy: its delay is on the order of the
+    # clock when it was admitted, not epsilon-above-zero
+    assert tel["b"].t_queue >= tel["a"].ttft
+
+def test_trace_idle_engine_fast_forwards_clock(tiny_moe):
+    """A request arriving long after the previous one drained must not be
+    charged phantom queue delay: the idle engine jumps its clock to the
+    arrival."""
+    sched = _sched(tiny_moe, max_batch=1)
+    sched.run_trace([(0.0, _req("a")), (50.0, _req("b", seed=5))])
+    tel = {r.telemetry.request_id: r.telemetry for r in sched.results}
+    assert tel["b"].t_queue == 0.0
+    assert sched.engine.now > 50.0
+
+
+def test_closed_loop_submit_unchanged(tiny_moe):
+    """submit() without `at` stamps the engine clock — the closed-loop
+    behavior run() depends on keeps byte-identity with the pre-trace
+    scheduler."""
+    sched = _sched(tiny_moe)
+    sched.submit(_req("a"))
+    assert sched._submit_time["a"] == sched.engine.now
+
+
+# ===================================================================== #
+# starvation guard
+# ===================================================================== #
+
+def _starvation_delays(tiny_moe, guard):
+    """Saturating latency-tier stream, one throughput probe behind the
+    first few arrivals; returns the probe's queue delay."""
+    sched = _sched(tiny_moe, max_batch=1, max_queue_jumps=guard)
+    trace = [(i * 1e-4, _req(f"lat-{i}", slo=RequestSLO.latency(),
+                             seed=3 + i))
+             for i in range(10)]
+    trace.append((2.5e-4, _req("probe", seed=30)))
+    sched.run_trace(trace)
+    tel = {r.telemetry.request_id: r.telemetry for r in sched.results}
+    return tel["probe"].t_queue, sched
+
+
+def test_starvation_guard_bounds_probe_delay(tiny_moe):
+    """Unguarded (max_queue_jumps=None), every later latency arrival
+    jumps the waiting throughput probe — it is served dead last. The
+    bounded-jump guard admits it after at most `max_queue_jumps` jumps,
+    cutting its queue delay."""
+    unguarded, su = _starvation_delays(tiny_moe, None)
+    guarded, sg = _starvation_delays(tiny_moe, 2)
+    assert guarded < unguarded
+    # unguarded: the probe outlasted every latency request
+    lat_delays = [r.telemetry.t_queue for r in su.results
+                  if r.telemetry.request_id.startswith("lat-")]
+    assert unguarded > max(lat_delays)
+    # everything was still served in both runs
+    assert len(su.results) == len(sg.results) == 11
+
+
+def test_no_latency_traffic_is_plain_fifo(tiny_moe):
+    """With no latency-tier request waiting, the guard is inert: results
+    arrive in FIFO order whether the guard is on, off, or disabled."""
+    orders = []
+    for guard in (8, None, 0):
+        sched = _sched(tiny_moe, max_batch=1, max_queue_jumps=guard)
+        sched.run([_req(f"r{i}", seed=3 + i) for i in range(4)])
+        orders.append([r.telemetry.request_id for r in sched.results])
+    assert orders[0] == orders[1] == orders[2] == [f"r{i}"
+                                                  for i in range(4)]
+
+
+# ===================================================================== #
+# censored vs drained throughput
+# ===================================================================== #
+
+@pytest.mark.parametrize("chunk", [0, 8])
+def test_drained_run_throughput_identical(tiny_moe, chunk):
+    """On a fully drained run the censored-corrected figure and the
+    finished-only figure are the same quantity — equal to the float."""
+    sched = _sched(tiny_moe, chunk=chunk)
+    sched.run([_req(f"r{i}", seed=3 + i) for i in range(4)])
+    stats = sched.throughput_stats()
+    assert stats["censored"] is False
+    assert stats["inflight_tokens"] == 0
+    assert stats["tokens_per_s"] == stats["drained_tokens_per_s"]
+    assert sched.tokens_per_second() == stats["tokens_per_s"]
+    assert stats["tokens_per_s"] > 0
+
+
+def test_horizon_cut_throughput_counts_inflight(tiny_moe):
+    """Cut the replay at a step horizon with requests still in flight:
+    the corrected figure must count their emissions (the drained figure
+    censors them away)."""
+    sched = _sched(tiny_moe, max_batch=2, chunk=8)
+    trace = [(0.0, _req(f"r{i}", max_new=12, seed=3 + i))
+             for i in range(4)]
+    sched.run_trace(trace, max_steps=6)
+    stats = sched.throughput_stats()
+    assert stats["censored"] is True
+    assert stats["inflight_tokens"] > 0
+    assert stats["tokens_per_s"] > stats["drained_tokens_per_s"]
+    assert sched.tokens_per_second() == stats["tokens_per_s"]
+
+
+# ===================================================================== #
+# shed-request violation accounting
+# ===================================================================== #
+
+def test_shed_bounded_request_counts_as_ttft_violation(tiny_moe):
+    """A TTFT-bounded request the admission pipeline sheds must surface
+    in tier_stats/slo_violations — never-served is a violation, not a
+    silent zero. Unbounded requests ride through untouched (the escape
+    clause)."""
+    sched = _sched(tiny_moe, chunk=8,
+                   admission=PredictiveTTFTAdmission())
+    doomed = _req("doomed", slo=RequestSLO.latency(ttft=1e-12))
+    free = _req("free", seed=9)
+    sched.run([doomed, free])
+    assert [r.telemetry.request_id for r in sched.results] == ["free"]
+    assert [r.telemetry.request_id
+            for r in sched.shed_results] == ["doomed"]
+    shed_tel = sched.shed_results[0].telemetry
+    assert shed_tel.shed and shed_tel.ttft == 0.0
+    assert shed_tel.slo_ttft_violated
+    stats = sched.tier_stats()
+    assert stats[LATENCY]["shed"] == 1
+    assert stats[LATENCY]["n"] == 0
+    assert stats[LATENCY]["ttft_violations"] == 1
+    assert sched.slo_violations() >= 1
+
+
+def test_ttft_violated_predicate():
+    assert not ttft_violated(None, None)
+    assert not ttft_violated(None, 123.0)
+    assert ttft_violated(0.5, None)       # bounded, never served
+    assert ttft_violated(0.5, 0.0)        # bounded, no first token
+    assert ttft_violated(0.5, 0.6)
+    assert not ttft_violated(0.5, 0.5)
+
+
+# ===================================================================== #
+# arrival processes + long-tail traces
+# ===================================================================== #
+
+def test_poisson_arrival_statistics():
+    rng = np.random.default_rng(0)
+    ats = poisson_arrivals(rng, rate=50.0, n=4000)
+    assert len(ats) == 4000
+    assert all(b > a for a, b in zip(ats, ats[1:]))
+    gaps = np.diff([0.0] + ats)
+    assert abs(gaps.mean() - 1 / 50.0) / (1 / 50.0) < 0.1
+    # exponential gaps: std == mean (CV = 1)
+    assert abs(gaps.std() / gaps.mean() - 1.0) < 0.1
+
+
+def test_diurnal_arrivals_modulate_but_keep_mean_rate():
+    rng = np.random.default_rng(1)
+    rate, period = 50.0, 4.0
+    ats = diurnal_arrivals(rng, rate, 4000, amplitude=0.9, period=period)
+    assert len(ats) == 4000
+    assert all(b > a for a, b in zip(ats, ats[1:]))
+    assert abs(len(ats) / ats[-1] - rate) / rate < 0.25
+    # counts in peak-phase vs trough-phase period halves must differ
+    phase = (np.asarray(ats) % period) / period
+    peak = np.sum(phase < 0.5)      # sin > 0 half
+    trough = len(ats) - peak
+    assert peak > 1.3 * trough
+
+
+def test_build_trace_deterministic_and_long_tailed():
+    spec = LoadSpec(n_requests=200, rate=100.0, seed=5, latency_frac=0.4,
+                    latency_ttft=1.0)
+    t1, t2 = build_trace(spec), build_trace(spec)
+    assert [(at, r.request_id, r.prompt) for at, r in t1] \
+        == [(at, r.request_id, r.prompt) for at, r in t2]
+    lens = [len(r.prompt) for _, r in t1]
+    assert min(lens) >= spec.prompt_lo
+    assert max(lens) <= spec.prompt_hi + 1      # +1: BOS
+    assert np.mean(lens) > np.median(lens)      # right-skewed tail
+    tiers = [r.slo.tier for _, r in t1 if r.slo is not None]
+    assert tiers and all(t == LATENCY for t in tiers)
+    assert 0.2 < len(tiers) / len(t1) < 0.6
+
+
+# ===================================================================== #
+# predictive admission semantics
+# ===================================================================== #
+
+def test_predictive_admission_decide_semantics():
+    slo = RequestSLO.latency(ttft=1.0)
+    shed = PredictiveTTFTAdmission()
+    # escape clause: no bound, or bound met, always admits
+    assert shed.decide(None, queue_delay=99, service_time=99).action \
+        == ADMIT
+    assert shed.decide(slo, queue_delay=0.4,
+                       service_time=0.5).action == ADMIT
+    # doomed: accrued delay + predicted service past the bound
+    assert shed.decide(slo, queue_delay=0.8,
+                       service_time=0.5).action == SHED
+    d = PredictiveTTFTAdmission(on_doomed="defer", max_defers=2)
+    assert d.decide(slo, queue_delay=2.0, service_time=0.5,
+                    deferrals=0).action == DEFER
+    assert d.decide(slo, queue_delay=2.0, service_time=0.5,
+                    deferrals=1).action == DEFER
+    # the defer budget is the liveness valve: exhausted -> admit anyway
+    assert d.decide(slo, queue_delay=2.0, service_time=0.5,
+                    deferrals=2).action == ADMIT
+    # headroom scales the bound
+    roomy = PredictiveTTFTAdmission(headroom=2.0)
+    assert roomy.decide(slo, queue_delay=0.8,
+                        service_time=0.5).action == ADMIT
+    with pytest.raises(ValueError):
+        PredictiveTTFTAdmission(on_doomed="explode")
+
+
+def test_predictive_admission_invisible_when_not_engaged(tiny_moe):
+    """Closed-loop run with generous bounds: the admission pipeline
+    decides ADMIT everywhere and the token streams are identical to the
+    unconstrained scheduler."""
+    def run(admission):
+        sched = _sched(tiny_moe, chunk=8, admission=admission)
+        reqs = [_req(f"r{i}", seed=3 + i,
+                     slo=RequestSLO.latency(ttft=1e6)) for i in range(4)]
+        return sched.run(reqs), sched
+    r_base, _ = run(None)
+    r_pred, s_pred = run(PredictiveTTFTAdmission())
+    assert [r.tokens for r in r_base] == [r.tokens for r in r_pred]
+    assert s_pred.shed_results == [] and s_pred.deferred == 0
+
+
+def test_defer_mode_backpressures_then_serves(tiny_moe):
+    """on_doomed="defer": a doomed request is held at the queue head
+    while the batch drains (deferred counter ticks) but is eventually
+    served — deferral must never become livelock."""
+    sched = _sched(tiny_moe, max_batch=2, chunk=8,
+                   admission=PredictiveTTFTAdmission(on_doomed="defer",
+                                                     max_defers=3))
+    # `tight` must arrive while the engine is busy — DEFER against an
+    # idle engine is treated as ADMIT (the clock only moves with the
+    # batch, so holding a request there would never resolve)
+    trace = [(0.0, _req("a", max_new=12)),
+             (1e-9, _req("tight", seed=9,
+                         slo=RequestSLO.latency(ttft=1e-12)))]
+    sched.run_trace(trace)
+    assert {r.telemetry.request_id for r in sched.results} \
+        == {"a", "tight"}
+    assert sched.shed_results == []
+    assert sched.deferred >= 1
+
+
+# ===================================================================== #
+# shared percentile + calibration-sample filter
+# ===================================================================== #
+
+def test_percentile_nearest_rank():
+    vals = list(range(1, 101))
+    assert percentile(vals, 0.50) == 50
+    assert percentile(vals, 0.95) == 95
+    assert percentile(vals, 0.99) == 99
+    assert percentile(vals, 1.0) == 100
+    assert percentile([7.0], 0.99) == 7.0
+    assert percentile([], 0.95) == 0.0
+    assert percentile([3, 1, 2], 0.5) == 2    # sorts internally
+
+
+def test_planner_aggregates_counts_zero_predictions():
+    """The calibration-error filter keys on "a plan priced this pass"
+    (`planned`), not on the prediction's truthiness — an exactly-0.0
+    prediction is a sample with error 1.0, not a missing sample."""
+    steps = [StepTelemetry(step=0, occupancy=1, tokens_in_flight=1,
+                           padded_tokens=0, t_step=1.0,
+                           t_step_predicted=0.0, planned=True),
+             StepTelemetry(step=1, occupancy=1, tokens_in_flight=1,
+                           padded_tokens=0, t_step=1.0,
+                           t_step_predicted=0.5, planned=True),
+             # unplanned step: excluded no matter what the field says
+             StepTelemetry(step=2, occupancy=1, tokens_in_flight=1,
+                           padded_tokens=0, t_step=1.0,
+                           t_step_predicted=0.9, planned=False)]
+    err = planner_aggregates(steps)["plan_time_error"]
+    assert err == pytest.approx((1.0 + 0.5) / 2)
+
+
+def test_engine_steps_are_planned(tiny_moe):
+    sched = _sched(tiny_moe)
+    sched.run([_req("a")])
+    steps = sched.engine.telemetry.steps
+    assert steps and all(s.planned for s in steps)
+
+
+# ===================================================================== #
+# the full harness, miniaturized
+# ===================================================================== #
+
+def test_run_load_report_shape(tiny_moe):
+    cfg, params = tiny_moe
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(), max_batch=2,
+                        max_len=256, temperature=0.0, clock="model",
+                        seed=0, chunk=16)
+    sched = ContinuousBatchingScheduler(
+        eng, controller_factory=lambda: CascadeController())
+    spec = LoadSpec(n_requests=6, rate=200.0, seed=2, latency_frac=0.5,
+                    prompt_median=12.0, prompt_hi=32, out_median=4.0,
+                    out_hi=8)
+    rep = run_load(sched, spec)
+    assert rep["n_served"] == 6 and rep["n_shed"] == 0
+    assert rep["p99_ttft"] >= rep["p95_ttft"] >= rep["p50_ttft"] > 0
+    assert rep["makespan"] > 0 and rep["tokens"] > 0
+    assert rep["goodput_frac"] == 1.0     # no binding bounds anywhere
+    assert rep["queue_depth_max"] >= 0 and rep["occupancy_mean"] > 0
+    assert len(rep["timeline"]) > 0
+    assert rep["throughput"]["censored"] is False
+    assert {LATENCY, THROUGHPUT} >= set(rep["tier_stats"])
