@@ -36,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import CascadeController
+from repro.core import cost_model as cm
 from repro.core.utility import IterationRecord
 from repro.models import transformer as T
 from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
@@ -1001,6 +1002,189 @@ def _packed_stream_check(fast: bool = False):
     return True
 
 
+# --------------------------------------------------------------------- #
+# Quantized expert path sweep (docs/quantization.md)
+# --------------------------------------------------------------------- #
+
+def _measured_union_probe(cfg, params):
+    """Memoized n -> measured mean-per-layer unique experts: run the REAL
+    router (a fresh-cache prefill over a draftable periodic prompt of
+    length n) and read the union the pass actually routed — the measured
+    counterpart of `expected_unique_experts`, and what distinguishes the
+    measured crossover from the predicted one."""
+    rng = np.random.default_rng(11)
+    pat = [int(x) for x in rng.integers(3, cfg.vocab_size, 8)]
+    memo = {}
+
+    def union(n):
+        if n not in memo:
+            toks = jnp.asarray([(pat * (n // 8 + 1))[:n]], jnp.int32)
+            cache = T.init_cache(cfg, 1, max(n, 8))
+            _, _, aux = T.prefill(cfg, params, toks, cache)
+            memo[n] = float(np.asarray(aux["unique_experts"],
+                                       np.float64).mean())
+        return memo[n]
+
+    return union
+
+
+def _fine_crossover(cfg, hw, precision=None, union=None,
+                    max_chunk: int = 512) -> int:
+    """`cm.prefill_crossover_tokens` at integer (not pow-2) resolution:
+    bracket by doubling, then bisect `prefill_time`'s compute_bound flag.
+    `union` (from `_measured_union_probe`) substitutes measured expert
+    unions for the analytic model at every probe point — the doubling
+    bracket keeps probes near the crossover so the measured variant never
+    prefills far beyond it."""
+    def bound(n):
+        u = union(n) if union else None
+        return cm.prefill_time(cfg, hw, n, unique_experts=u,
+                               precision=precision)["compute_bound"]
+
+    if bound(1):
+        return 1
+    lo = hi = 1
+    while hi < max_chunk and not bound(hi * 2):
+        hi *= 2
+        lo = hi
+    hi *= 2
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if bound(mid):
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def quant_sweep(fast: bool = False):
+    """Quantized expert paths end to end (docs/quantization.md): the
+    trained reduced Mixtral served bf16, int8 (true quantized storage,
+    dequant on the packed path), and fp8 (fake-quant numerics, same
+    1 byte/param pricing), all under the `_ep_hw` memory-bound regime
+    where expert bytes dominate the pass.
+
+    Gates (committed artifact + CI smoke):
+      * OFF == DEFAULT, bit for bit: `precision=None` and
+        `cm.Precision()` runs emit identical token streams and per-step
+        telemetry, with zero `expert_bytes_saved` — quantization off is
+        the pre-quantization engine exactly;
+      * int8 tokens/s >= bf16 tokens/s at equal acceptance (within 2pp;
+        the trained copy task's greedy argmax survives absmax int8, so
+        the comparison is bytes vs bytes, not acceptance vs acceptance);
+      * the predicted bf16->int8 roofline-crossover shift
+        (`_fine_crossover` under analytic unions) matches the shift
+        re-measured with the real router's unions, within the planner's
+        measured `plan_time_error` band (floored at 0.25 — crossovers
+        are integer-quantized)."""
+    from repro.models.moe import quantize_transformer_experts
+    cfg, params = _ep_model()
+    hw = _ep_hw()
+    qp = quantize_transformer_experts(params, "int8")
+    fp = quantize_transformer_experts(params, "fp8")
+    b = 4 if fast else 8
+    max_new = 12 if fast else 24
+    n_requests = 2 * b
+
+    def run(p, prec):
+        return _run_engine(cfg, p, _ep_requests(cfg, n_requests, max_new),
+                           controller=_ep_controller, max_batch=b, hw=hw,
+                           packed=True, precision=prec)
+
+    def accept_rate(sched):
+        its = [it for r in sched.results for it in r.telemetry.iterations]
+        drafted = sum(it.k_drafted for it in its)
+        return (sum(it.tokens_emitted - 1 for it in its) / drafted
+                if drafted else 0.0)
+
+    def row(tag, eng, sched):
+        return {
+            "precision": tag,
+            "tokens_per_s": sched.tokens_per_second(),
+            "accept_rate": accept_rate(sched),
+            "expert_bytes_saved": eng.telemetry.expert_bytes_saved,
+            "plan_time_error": sched.planner_stats()["plan_time_error"],
+        }
+
+    # -- gate: quantization off == explicit default, bit for bit -------- #
+    eng0, sched0 = run(params, None)
+    eng1, sched1 = run(params, cm.Precision())
+    streams0 = {r.telemetry.request_id: r.tokens for r in sched0.results}
+    streams1 = {r.telemetry.request_id: r.tokens for r in sched1.results}
+    tel0 = [(s.t_step, s.t_step_predicted, s.union_experts,
+             s.k_granted, s.expert_bytes_saved) for s in
+            eng0.telemetry.steps]
+    tel1 = [(s.t_step, s.t_step_predicted, s.union_experts,
+             s.k_granted, s.expert_bytes_saved) for s in
+            eng1.telemetry.steps]
+    _gate(streams0 == streams1,
+          "precision=None vs Precision() token streams diverged — "
+          "quantization-off is not the pre-quantization engine")
+    _gate(tel0 == tel1,
+          "precision=None vs Precision() per-step telemetry diverged")
+    _gate(eng0.telemetry.expert_bytes_saved == 0.0,
+          "unquantized run reported nonzero expert_bytes_saved")
+    emit("serving_micro/quant_off_bit_identical", 1.0, "must-be-1")
+
+    # -- gate: int8 tokens/s >= bf16 at equal acceptance ---------------- #
+    rows = [row("bf16", eng0, sched0)]
+    eng_i8, sched_i8 = run(qp, cm.Precision.int8_experts())
+    eng_f8, sched_f8 = run(fp, cm.Precision.fp8_experts())
+    rows.append(row("int8-experts", eng_i8, sched_i8))
+    rows.append(row("fp8-experts", eng_f8, sched_f8))
+    bf, i8 = rows[0], rows[1]
+    for r in rows:
+        emit(f"serving_micro/quant_{r['precision']}_tokens_per_s",
+             r["tokens_per_s"],
+             f"acc={r['accept_rate']:.3f};"
+             f"saved={r['expert_bytes_saved']:.2e}")
+    d_acc = abs(i8["accept_rate"] - bf["accept_rate"])
+    _gate(d_acc <= 0.02,
+          f"int8 acceptance drifted {d_acc:.3f} from bf16 — the "
+          "throughput comparison would be confounded (quantization "
+          "numerics reached rejection sampling)")
+    _gate(i8["tokens_per_s"] >= bf["tokens_per_s"],
+          f"int8 tokens/s {i8['tokens_per_s']:.1f} lost to bf16 "
+          f"{bf['tokens_per_s']:.1f} at equal acceptance")
+
+    # -- gate: predicted crossover shift matches measured --------------- #
+    max_chunk = 256 if fast else 512
+    i8_prec = cm.Precision.int8_experts()
+    xo = {
+        "predicted_bf16": _fine_crossover(cfg, hw, max_chunk=max_chunk),
+        "predicted_int8": _fine_crossover(cfg, hw, i8_prec,
+                                          max_chunk=max_chunk),
+        "measured_bf16": _fine_crossover(
+            cfg, hw, union=_measured_union_probe(cfg, params),
+            max_chunk=max_chunk),
+        "measured_int8": _fine_crossover(
+            cfg, hw, i8_prec, union=_measured_union_probe(cfg, qp),
+            max_chunk=max_chunk),
+    }
+    pred_shift = xo["predicted_bf16"] / xo["predicted_int8"]
+    meas_shift = xo["measured_bf16"] / xo["measured_int8"]
+    band = max(2 * max(bf["plan_time_error"], i8["plan_time_error"]),
+               0.25)
+    shift_err = abs(pred_shift - meas_shift) / meas_shift
+    emit("serving_micro/quant_crossover_shift_predicted", pred_shift,
+         f"{xo['predicted_bf16']}->{xo['predicted_int8']}tok")
+    emit("serving_micro/quant_crossover_shift_measured", meas_shift,
+         f"{xo['measured_bf16']}->{xo['measured_int8']}tok")
+    _gate(pred_shift > 1.0 and meas_shift > 1.0,
+          f"int8 did not move the crossover left (predicted "
+          f"{pred_shift:.3f}x, measured {meas_shift:.3f}x)")
+    _gate(shift_err <= band,
+          f"predicted crossover shift {pred_shift:.3f}x off measured "
+          f"{meas_shift:.3f}x by {shift_err:.2%} (band {band:.2%})")
+
+    out = {"B": b, "max_new": max_new, "hw": hw.name, "rows": rows,
+           "crossover": xo, "pred_shift": pred_shift,
+           "meas_shift": meas_shift, "shift_err": shift_err,
+           "band": band, "off_bit_identical": True}
+    save_json("serving_micro_quant_sweep", out)
+    return out
+
+
 def _calibrate_planner(fast: bool = False):
     """Fit `cost_model.Calibration` on the planner-sweep regime and verify
     it: run the joint planner uncalibrated at B=8, fit scale/offset on the
@@ -1093,6 +1277,10 @@ SWEEPS = (
      "prefetch-off under a miss-forcing HBM cap"),
     ("prefill-sweep", prefill_sweep,
      "queue depth x chunk size -> TTFT/TPOT sweep"),
+    ("quant-sweep", quant_sweep,
+     "bf16 vs int8/fp8 expert paths: off==default bit-identity, int8 "
+     "tokens/s >= bf16 at equal acceptance, predicted vs measured "
+     "roofline-crossover shift"),
     ("calibrate", calibrate,
      "packed-vs-dense traffic by union occupancy, packed bit-identity, "
      "and wall-clock calibration of the analytic cost model"),

@@ -3,7 +3,7 @@ management for MoE serving."""
 
 from .controller import (CascadeController, StaticKController,
                          cascade_for_model)
-from .cost_model import (Hardware, TPU_V5E, RTX_6000_ADA,
+from .cost_model import (Hardware, Precision, TPU_V5E, RTX_6000_ADA,
                          batch_iteration_time, expected_unique_experts,
                          expected_unique_experts_batch, iteration_bytes,
                          iteration_flops, iteration_time, draft_time,
@@ -28,7 +28,8 @@ from .utility import IterationRecord, UtilityAnalyzer
 __all__ = [
     "CascadeController", "StaticKController", "CascadeConfig",
     "SpeculationManager", "UtilityAnalyzer", "IterationRecord",
-    "Hardware", "TPU_V5E", "RTX_6000_ADA", "expected_unique_experts",
+    "Hardware", "Precision", "TPU_V5E", "RTX_6000_ADA",
+    "expected_unique_experts",
     "expected_unique_experts_batch", "batch_iteration_time",
     "BatchCostOracle", "Calibration", "iteration_bytes", "iteration_flops",
     "iteration_time", "draft_time", "sample_time", "kv_bytes_per_token",

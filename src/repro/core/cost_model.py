@@ -42,6 +42,64 @@ RTX_6000_ADA = Hardware("rtx-6000-ada", hbm_bw=960e9, peak_flops=91e12,
                         host_bw=32e9, hbm_bytes=48e9)
 
 
+@dataclass(frozen=True)
+class Precision:
+    """Bytes-per-param by tensor class — the ONE source of truth for
+    serving precision (docs/quantization.md).
+
+    The paper's utility calculus is bytes-moved-per-pass, and quantization
+    changes the bytes: int8/fp8 expert weights halve `_expert_read_bytes`,
+    shifting the roofline crossover and with it every planner decision
+    (break-even floor, grant steering, residency capacity, fetch
+    deadlines). A single global `Hardware.weight_bytes` cannot express
+    mixed precision — the quantized path keeps dense/attention weights at
+    bf16 while experts stream at 1 byte/param — so pricing takes a
+    per-tensor-class spec instead. Every bytes function threads this spec;
+    the scattered `wb=2` defaults all resolve through `DEFAULT` so a
+    precision change cannot silently half-apply.
+
+    `precision=None` everywhere means `Precision.DEFAULT` (all classes at
+    2 bytes) and is bit-identical to the pre-quantization stack — the same
+    degradation contract as `calibration=None` / `placement=None`, pinned
+    by a tier-1 property test."""
+    dense: int = 2     # attention / dense-FFN / router / unembedding
+    expert: int = 2    # routed expert weights (the quantization target)
+    kv: int = 2        # KV-cache rows
+    label: str = "bf16"   # telemetry tag; never enters arithmetic
+
+    @classmethod
+    def int8_experts(cls) -> "Precision":
+        """Weight-only int8 routed experts (per-expert absmax scales,
+        dequant-in-kernel); dense/attention/KV stay bf16."""
+        return cls(expert=1, label="int8-experts")
+
+    @classmethod
+    def fp8_experts(cls) -> "Precision":
+        """fp8(e4m3) routed experts — same 1 byte/param pricing as int8;
+        the numerics differ (kernels/moe_gmm/quant.py fake-quant on CPU)."""
+        return cls(expert=1, label="fp8-experts")
+
+    @property
+    def quantized_experts(self) -> bool:
+        return self.expert < self.dense
+
+
+#: module default: bf16 everywhere — what `precision=None` resolves to
+Precision.DEFAULT = Precision()
+
+
+def _resolve_precision(precision: Optional["Precision"],
+                       wb: Optional[int] = None) -> "Precision":
+    """`precision` if given; else a uniform spec from a legacy `wb` int;
+    else the bf16 default. Keeps old `wb=` call sites working while the
+    spec stays the single source of truth."""
+    if precision is not None:
+        return precision
+    if wb is not None:
+        return Precision(dense=wb, expert=wb, kv=wb, label=f"wb{wb}")
+    return Precision.DEFAULT
+
+
 # --------------------------------------------------------------------- #
 # Wall-clock calibration (ROADMAP "calibration" item; fitted by
 # `benchmarks/serving_micro.py --calibrate`)
@@ -625,20 +683,25 @@ def expected_unique_experts_sharded(num_experts: int, top_k: int,
                           capacity=capacity)
 
 
-def a2a_bytes(cfg, n_tokens: int, n_shards: int, wb: int = 2) -> float:
+def a2a_bytes(cfg, n_tokens: int, n_shards: int, wb: int = None) -> float:
     """All-to-all dispatch volume of one EP-sharded pass: each in-flight
     token's k expert inputs cross shards with probability (S-1)/S, once out
     and once back, per MoE layer (the Switch/GShard pattern
-    `distributed/expert_parallel.py` implements)."""
+    `distributed/expert_parallel.py` implements). The wire carries
+    *activations* (d_model vectors), which stay at dense precision even
+    under quantized experts — `wb=None` resolves to `Precision.DEFAULT
+    .dense`, not to the expert class."""
     if not cfg.is_moe or n_shards <= 1 or n_tokens <= 0:
         return 0.0
+    if wb is None:
+        wb = Precision.DEFAULT.dense
     n_moe = sum(1 for kk in cfg.layer_kinds() if kk in ("A", "X"))
     return (2.0 * n_tokens * cfg.experts_per_token * cfg.d_model * wb
             * (n_shards - 1) / n_shards * n_moe)
 
 
 def _a2a_time(cfg, hw: "Hardware", n_tokens: int, n_shards: int,
-              wb: int = 2) -> float:
+              wb: int = None) -> float:
     """Seconds the collective adds to the pass: per-shard egress (the total
     volume spreads across S links) over the interconnect bandwidth.
     Hardware without an interconnect figure cannot host a multi-shard
@@ -659,20 +722,27 @@ def _a2a_time(cfg, hw: "Hardware", n_tokens: int, n_shards: int,
 # Per-iteration bytes / flops
 # --------------------------------------------------------------------- #
 
-def _per_layer_weight_bytes(cfg, wb: int):
-    """(attention_bytes, dense_ffn_bytes, one_expert_bytes, shared_bytes)."""
-    attn = cfg._attn_params() * wb
+def _per_layer_weight_bytes(cfg, precision: Precision):
+    """(attention_bytes, dense_ffn_bytes, one_expert_bytes, shared_bytes).
+
+    Per tensor class: attention/router/dense-FFN price at `precision
+    .dense`; routed experts at `precision.expert` (the quantization
+    target); shared experts are read every pass like dense FFN and stay at
+    dense precision (the quantized path quantizes ROUTED experts only)."""
+    attn = cfg._attn_params() * precision.dense
     mult = 3 if cfg.activation == "swiglu" else 2
     if cfg.is_moe:
-        expert = mult * cfg.d_model * cfg.moe_d_ff * wb
-        shared = mult * cfg.d_model * cfg.moe_d_ff * cfg.num_shared_experts * wb
-        router = cfg.d_model * cfg.num_experts * wb
+        expert = mult * cfg.d_model * cfg.moe_d_ff * precision.expert
+        shared = (mult * cfg.d_model * cfg.moe_d_ff * cfg.num_shared_experts
+                  * precision.dense)
+        router = cfg.d_model * cfg.num_experts * precision.dense
         return attn + router, 0, expert, shared
-    return attn, mult * cfg.d_model * cfg.d_ff * wb, 0, 0
+    return attn, mult * cfg.d_model * cfg.d_ff * precision.dense, 0, 0
 
 
 def kv_bytes_per_token(cfg, wb: int) -> float:
-    """KV-cache bytes appended per token per layer."""
+    """KV-cache bytes appended per token per layer (`wb` = the precision
+    spec's `kv` class)."""
     if cfg.use_mla:
         return (cfg.kv_lora_rank + cfg.qk_rope_dim) * wb
     if cfg.attention_free:
@@ -680,12 +750,14 @@ def kv_bytes_per_token(cfg, wb: int) -> float:
     return 2 * cfg.num_kv_heads * cfg.head_dim * wb
 
 
-def _weight_read_bytes(cfg, wb: int) -> float:
+def _weight_read_bytes(cfg, precision: Precision) -> float:
     """Dense weight bytes read once per iteration regardless of batch:
     attention + dense/shared FFN + router + unembedding (expert bytes are
     accounted separately — they scale with the activated-expert union)."""
     kinds = cfg.layer_kinds()
-    attn_b, ffn_b, expert_b, shared_b = _per_layer_weight_bytes(cfg, wb)
+    wb = precision.dense
+    attn_b, ffn_b, expert_b, shared_b = _per_layer_weight_bytes(cfg,
+                                                                precision)
     del expert_b
     weights = 0.0
     for k in kinds:
@@ -706,16 +778,19 @@ def _weight_read_bytes(cfg, wb: int) -> float:
     return weights
 
 
-def _expert_read_bytes(cfg, unique_experts: float, wb: int) -> float:
-    """Expert weight bytes for `unique_experts` activated per MoE layer."""
+def _expert_read_bytes(cfg, unique_experts: float,
+                       precision: Precision) -> float:
+    """Expert weight bytes for `unique_experts` activated per MoE layer —
+    priced at the spec's `expert` class, the term quantization shrinks."""
     if not cfg.is_moe:
         return 0.0
-    _, _, expert_b, _ = _per_layer_weight_bytes(cfg, wb)
+    _, _, expert_b, _ = _per_layer_weight_bytes(cfg, precision)
     n_moe = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
     return n_moe * min(unique_experts, cfg.num_experts) * expert_b
 
 
-def _kv_read_bytes(cfg, context_len: int, window: int, wb: int) -> float:
+def _kv_read_bytes(cfg, context_len: int, window: int,
+                   precision: Precision) -> float:
     """Per-request state read: KV cache rows (windowed layers read only the
     window) plus recurrent-state reads."""
     kv_read = 0.0
@@ -725,7 +800,7 @@ def _kv_read_bytes(cfg, context_len: int, window: int, wb: int) -> float:
             if cfg.layer_pattern and k == "A":
                 lw = cfg.local_window
             ctx = context_len if not lw else min(context_len, lw)
-            kv_read += ctx * kv_bytes_per_token(cfg, wb)
+            kv_read += ctx * kv_bytes_per_token(cfg, precision.kv)
         elif k == "W":
             kv_read += cfg.rwkv_num_heads * cfg.rwkv_head_size ** 2 * 4
         elif k == "R":
@@ -735,17 +810,19 @@ def _kv_read_bytes(cfg, context_len: int, window: int, wb: int) -> float:
 
 def iteration_bytes(cfg, n_tokens: int, context_len: int,
                     unique_experts: float = None, affinity: float = 0.0,
-                    window: int = 0, wb: int = None) -> dict:
+                    window: int = 0, wb: int = None,
+                    precision: Optional[Precision] = None) -> dict:
     """HBM bytes moved by one target-model iteration processing `n_tokens`
-    in-flight tokens against a `context_len`-token KV cache."""
-    wb = wb or 2
+    in-flight tokens against a `context_len`-token KV cache. `precision`
+    prices each tensor class (`wb` kept as a legacy uniform override)."""
+    p = _resolve_precision(precision, wb)
     if cfg.is_moe and unique_experts is None:
         unique_experts = expected_unique_experts(
             cfg.num_experts, cfg.experts_per_token, n_tokens, affinity)
 
-    weights = _weight_read_bytes(cfg, wb)
-    experts = _expert_read_bytes(cfg, unique_experts or 0.0, wb)
-    kv_read = _kv_read_bytes(cfg, context_len, window, wb)
+    weights = _weight_read_bytes(cfg, p)
+    experts = _expert_read_bytes(cfg, unique_experts or 0.0, p)
+    kv_read = _kv_read_bytes(cfg, context_len, window, p)
 
     return {"weights": weights, "experts": experts, "kv": kv_read,
             "total": weights + experts + kv_read,
@@ -774,12 +851,13 @@ def iteration_flops(cfg, n_tokens: int, context_len: int,
 
 def iteration_time(cfg, hw: Hardware, n_tokens: int, context_len: int,
                    unique_experts: float = None, affinity: float = 0.0,
-                   window: int = 0, fixed_overhead: float = 2e-4) -> dict:
+                   window: int = 0, fixed_overhead: float = 2e-4,
+                   precision: Optional[Precision] = None) -> dict:
     """Seconds for one target iteration. max(memory, compute) + overhead —
     single-batch decode is deep in the memory-bound regime, so the memory
     term dominates everywhere the paper (and we) evaluate."""
     b = iteration_bytes(cfg, n_tokens, context_len, unique_experts,
-                        affinity, window)
+                        affinity, window, precision=precision)
     f = iteration_flops(cfg, n_tokens, context_len, window)
     t_mem = b["total"] / hw.hbm_bw
     t_compute = f / hw.peak_flops
@@ -831,7 +909,8 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
                          assume_balanced: bool = False,
                          calibration: Optional[Calibration] = None,
                          residency=None, per_shard_miss=None,
-                         fetch_hide: float = 0.0) -> dict:
+                         fetch_hide: float = 0.0,
+                         precision: Optional[Precision] = None) -> dict:
     """Seconds for one *shared* verification pass over B requests, request i
     contributing n_i = tokens_per_request[i] in-flight tokens against its own
     context_lens[i]-token KV cache.
@@ -890,8 +969,13 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
     passes additionally report `shard_unique` [S], `max_shard_experts`,
     `hot_shard`, `imbalance` (max/mean over shards), `t_a2a`, and
     `n_shards`; residency-priced passes additionally report `fetch_miss`
-    [S], `t_fetch`, `t_fetch_unhidden`, and `fetch_bytes`."""
-    wb = 2
+    [S], `t_fetch`, `t_fetch_unhidden`, and `fetch_bytes`.
+
+    `precision` (a `Precision` spec, docs/quantization.md) prices each
+    tensor class separately — quantized experts shrink the expert term
+    (and with it the roofline crossover) while dense/KV bytes stand.
+    `precision=None` is bit-identical to `Precision.DEFAULT` (all 2s)."""
+    p = _resolve_precision(precision)
     ns = [max(int(n), 0) for n in tokens_per_request]
     cls = list(context_lens)
     if len(ns) != len(cls):
@@ -908,7 +992,7 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
         if cfg.is_moe else {"union": 0.0, "marginal": [0.0] * b_req}
     union = est["union"] if unique_experts is None else float(unique_experts)
 
-    weights = _weight_read_bytes(cfg, wb)
+    weights = _weight_read_bytes(cfg, p)
     sharded = (placement is not None and placement.n_shards > 1
                and cfg.is_moe)
     fetch_active = (residency is not None and cfg.is_moe
@@ -923,8 +1007,9 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
             capacity=capacity)
         gate = (sum(shard_unique) / placement.n_shards if assume_balanced
                 else shard_unique[hot])
-        experts = _expert_read_bytes(cfg, gate, wb)
-        t_a2a = _a2a_time(cfg, hw, total_tokens, placement.n_shards, wb)
+        experts = _expert_read_bytes(cfg, gate, p)
+        t_a2a = _a2a_time(cfg, hw, total_tokens, placement.n_shards,
+                          p.dense)
         mean_shard = sum(shard_unique) / placement.n_shards
         shard_info = {
             "shard_unique": shard_unique,
@@ -935,18 +1020,18 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
             "t_a2a": t_a2a, "n_shards": placement.n_shards,
         }
     else:
-        experts = _expert_read_bytes(cfg, union, wb)
+        experts = _expert_read_bytes(cfg, union, p)
         t_a2a = 0.0
     n_attn = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
-    prefill_bytes_per_tok = (kv_bytes_per_token(cfg, wb) * n_attn
-                             + cfg.d_model * wb)   # KV write + embed row
-    kv_each = [_kv_read_bytes(cfg, c, window, wb)
-               + p * prefill_bytes_per_tok if n > 0 else 0.0
-               for n, c, p in zip(ns, cls, ps)]
+    prefill_bytes_per_tok = (kv_bytes_per_token(cfg, p.kv) * n_attn
+                             + cfg.d_model * p.dense)  # KV write + embed row
+    kv_each = [_kv_read_bytes(cfg, c, window, p)
+               + pt * prefill_bytes_per_tok if n > 0 else 0.0
+               for n, c, pt in zip(ns, cls, ps)]
     total_bytes = weights + experts + sum(kv_each)
 
-    flops = sum(iteration_flops(cfg, n, c + p, window)
-                for n, c, p in zip(ns, cls, ps) if n > 0)
+    flops = sum(iteration_flops(cfg, n, c + pt, window)
+                for n, c, pt in zip(ns, cls, ps) if n > 0)
     t_mem = total_bytes / hw.hbm_bw
     t_compute = flops / hw.peak_flops
     t = max(t_mem, t_compute) + fixed_overhead
@@ -1003,7 +1088,13 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
     out = {"t_iter": t, "t_mem": t_mem, "t_compute": t_compute,
            "bytes": total_bytes, "expert_bytes": experts, "flops": flops,
            "unique_experts": union, "n_requests": b_req,
-           "n_tokens": total_tokens, "per_request": per_request}
+           "n_tokens": total_tokens, "per_request": per_request,
+           "precision": p.label,
+           # bytes the expert stream saved vs pricing it at the bf16
+           # default (exact: expert bytes are linear in bytes-per-param)
+           "expert_bytes_saved": (experts
+                                  * (Precision.DEFAULT.expert - p.expert)
+                                  / p.expert)}
     out.update(shard_info)
     out.update(fetch_info)
     return out
@@ -1063,8 +1154,10 @@ class BatchCostOracle:
                  placement: Optional[ExpertPlacement] = None,
                  shard_weights=None, assume_balanced: bool = False,
                  calibration: Optional[Calibration] = None,
-                 residency=None, fetch_hide: float = 0.0):
-        wb = 2
+                 residency=None, fetch_hide: float = 0.0,
+                 precision: Optional[Precision] = None):
+        p = _resolve_precision(precision)
+        self.precision = p
         self.calibration = calibration
         self.cfg = cfg
         self.hw = hw
@@ -1106,14 +1199,14 @@ class BatchCostOracle:
                                                       shard_weights)
             self._replica_groups = (placement.replication_groups
                                     if placement.has_replication else None)
-        self._weights = _weight_read_bytes(cfg, wb)
+        self._weights = _weight_read_bytes(cfg, p)
         n_attn = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
-        prefill_bytes_per_tok = (kv_bytes_per_token(cfg, wb) * n_attn
-                                 + cfg.d_model * wb)
+        prefill_bytes_per_tok = (kv_bytes_per_token(cfg, p.kv) * n_attn
+                                 + cfg.d_model * p.dense)
         # per-row bytes IF the row is live (n_i > 0); dead rows cost nothing
-        self._kv_live = [_kv_read_bytes(cfg, c, window, wb)
-                         + p * prefill_bytes_per_tok
-                         for c, p in zip(self.cls, self.ps)]
+        self._kv_live = [_kv_read_bytes(cfg, c, window, p)
+                         + pt * prefill_bytes_per_tok
+                         for c, pt in zip(self.cls, self.ps)]
 
     def t_batch(self, tokens_per_request) -> float:
         """Seconds for one shared pass at this token allocation (scalar —
@@ -1132,13 +1225,13 @@ class BatchCostOracle:
                                  capacity=self._capacity)
             gate = (sum(est["per_shard"]) / self.placement.n_shards
                     if self.assume_balanced else est["max_shard"])
-            experts = _expert_read_bytes(cfg, gate, 2)
+            experts = _expert_read_bytes(cfg, gate, self.precision)
         else:
             union = (expected_unique_experts(cfg.num_experts,
                                              cfg.experts_per_token, total,
                                              self.affinity)
                      if cfg.is_moe and total > 0 else 0.0)
-            experts = _expert_read_bytes(cfg, union, 2)
+            experts = _expert_read_bytes(cfg, union, self.precision)
         total_bytes = self._weights + experts + sum(
             kv if n > 0 else 0.0 for n, kv in zip(ns, self._kv_live))
         flops = sum(iteration_flops(cfg, n, c + p, self.window)
@@ -1147,7 +1240,8 @@ class BatchCostOracle:
         t_compute = flops / hw.peak_flops
         t = max(t_mem, t_compute) + self.fixed_overhead
         if self._sharded:
-            t_a2a = _a2a_time(cfg, hw, total, self.placement.n_shards, 2)
+            t_a2a = _a2a_time(cfg, hw, total, self.placement.n_shards,
+                              self.precision.dense)
             t = t + t_a2a
         else:
             t_a2a = 0.0
@@ -1213,7 +1307,8 @@ class BatchCostOracle:
 
 def prefill_chunk_bytes(cfg, n_tokens: int, context_len: int = 0,
                         unique_experts: float = None, affinity: float = 0.0,
-                        window: int = 0, wb: int = None) -> dict:
+                        window: int = 0, wb: int = None,
+                        precision: Optional[Precision] = None) -> dict:
     """HBM bytes moved by one prefill chunk of `n_tokens` prompt tokens
     entering a cache that already holds `context_len` tokens.
 
@@ -1222,17 +1317,17 @@ def prefill_chunk_bytes(cfg, n_tokens: int, context_len: int = 0,
     negligible; a 128-token chunk's is not), and the expert union is driven
     by the chunk's full token count, which saturates toward `num_experts`
     far faster than a [1+K] decode span."""
-    wb = wb or 2
+    p = _resolve_precision(precision, wb)
     n_tokens = max(int(n_tokens), 0)
     if cfg.is_moe and unique_experts is None:
         unique_experts = expected_unique_experts(
             cfg.num_experts, cfg.experts_per_token, n_tokens, affinity)
-    weights = _weight_read_bytes(cfg, wb)
-    experts = _expert_read_bytes(cfg, unique_experts or 0.0, wb)
-    kv_read = _kv_read_bytes(cfg, context_len, window, wb)
+    weights = _weight_read_bytes(cfg, p)
+    experts = _expert_read_bytes(cfg, unique_experts or 0.0, p)
+    kv_read = _kv_read_bytes(cfg, context_len, window, p)
     n_attn = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
-    kv_write = n_tokens * kv_bytes_per_token(cfg, wb) * n_attn
-    embed = n_tokens * cfg.d_model * wb  # embedding-row reads per token
+    kv_write = n_tokens * kv_bytes_per_token(cfg, p.kv) * n_attn
+    embed = n_tokens * cfg.d_model * p.dense  # embedding-row reads per token
     total = weights + experts + kv_read + kv_write + embed
     return {"weights": weights, "experts": experts, "kv": kv_read,
             "kv_write": kv_write, "embed": embed, "total": total,
@@ -1241,7 +1336,8 @@ def prefill_chunk_bytes(cfg, n_tokens: int, context_len: int = 0,
 
 def prefill_time(cfg, hw: Hardware, n_tokens: int, context_len: int = 0,
                  unique_experts: float = None, affinity: float = 0.0,
-                 window: int = 0, fixed_overhead: float = 2e-4) -> dict:
+                 window: int = 0, fixed_overhead: float = 2e-4,
+                 precision: Optional[Precision] = None) -> dict:
     """Seconds for one prefill pass/chunk under the model clock. Unlike
     decode, prefill crosses the roofline: FLOPs grow linearly (and the
     attention term quadratically) with the chunk while the dominant weight
@@ -1250,7 +1346,7 @@ def prefill_time(cfg, hw: Hardware, n_tokens: int, context_len: int = 0,
     prefill separately for TTFT to mean anything."""
     n_tokens = max(int(n_tokens), 1)
     b = prefill_chunk_bytes(cfg, n_tokens, context_len, unique_experts,
-                            affinity, window)
+                            affinity, window, precision=precision)
     # the chunk attends causally to the cached context plus itself
     f = iteration_flops(cfg, n_tokens, context_len + n_tokens, window)
     t_mem = b["total"] / hw.hbm_bw
@@ -1264,27 +1360,37 @@ def prefill_time(cfg, hw: Hardware, n_tokens: int, context_len: int = 0,
 
 def prefill_crossover_tokens(cfg, hw: Hardware, context_len: int = 0,
                              affinity: float = 0.0, window: int = 0,
-                             max_chunk: int = 65536) -> int:
+                             max_chunk: int = 65536,
+                             precision: Optional[Precision] = None) -> int:
     """Smallest chunk size at which prefill becomes compute-bound (crosses
     the roofline) — the natural upper bound for a chunked-admission `chunk`:
     beyond it, bigger chunks stop amortizing the weight read and only add
-    head-of-line latency for the decodes sharing the pass."""
+    head-of-line latency for the decodes sharing the pass. Quantized expert
+    precision moves this crossover LEFT (fewer bytes, same FLOPs) — the
+    shift the --quant-sweep gates predicted-vs-measured."""
     n = 1
     while n <= max_chunk:
         if prefill_time(cfg, hw, n, context_len, affinity=affinity,
-                        window=window)["compute_bound"]:
+                        window=window,
+                        precision=precision)["compute_bound"]:
             return n
         n *= 2
     return max_chunk
 
 
 def draft_time(hw: Hardware, k: int, drafter_active_params: int = 0,
-               per_token_overhead: float = 2e-5) -> float:
+               per_token_overhead: float = 2e-5,
+               wb: int = None) -> float:
     """Drafting cost: ~free for n-gram (CPU table lookup), weight-bound for
-    model drafters (EAGLE-style)."""
+    model drafters (EAGLE-style). Drafter weights price at the dense class
+    (`wb=None` -> `Precision.DEFAULT.dense`) — quantizing the drafter is a
+    ROADMAP residual, not part of the expert path."""
     if k <= 0:
         return 0.0
-    model = k * drafter_active_params * 2 / hw.hbm_bw if drafter_active_params else 0.0
+    if wb is None:
+        wb = Precision.DEFAULT.dense
+    model = (k * drafter_active_params * wb / hw.hbm_bw
+             if drafter_active_params else 0.0)
     return model + k * per_token_overhead
 
 

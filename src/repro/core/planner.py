@@ -593,12 +593,18 @@ class BatchSpecPlanner:
                  window: int = 0, config: Optional[PlannerConfig] = None,
                  placement: Optional[cm.ExpertPlacement] = None,
                  calibration: Optional[cm.Calibration] = None,
-                 residency=None):
+                 residency=None,
+                 precision: Optional[cm.Precision] = None):
         self.cfg = cfg
         self.hw = hw or cm.TPU_V5E
         self.affinity = affinity
         self.window = window
         self.config = config or PlannerConfig()
+        #: per-tensor-class bytes-per-param spec (cost_model.Precision,
+        #: docs/quantization.md) every oracle this planner builds prices
+        #: with — quantized experts move the break-even water level and
+        #: the fetch deadlines; None is bit-identical to the bf16 default
+        self.precision = precision
         #: wall-clock residual correction (cost_model.Calibration, fitted
         #: by --calibrate) applied to every oracle this planner prices
         #: with; None is bit-identical to the uncalibrated planner
@@ -737,7 +743,8 @@ class BatchSpecPlanner:
             placement=self.placement, shard_weights=sw,
             assume_balanced=not cfgp.shard_aware,
             calibration=self.calibration,
-            residency=self.residency, fetch_hide=fetch_hide)
+            residency=self.residency, fetch_hide=fetch_hide,
+            precision=self.precision)
 
         # -- allocate ----------------------------------------------------
         # bypass: independent policy, or a single-span pass (B=1 — the

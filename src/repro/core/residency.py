@@ -18,18 +18,28 @@ draft+sample window.
 
 from __future__ import annotations
 
+import warnings
 from typing import Optional
+
+from .cost_model import Precision
 
 __all__ = ["ResidencyState", "expert_hbm_bytes"]
 
 
-def expert_hbm_bytes(cfg, weight_bytes: int = 2) -> float:
+def expert_hbm_bytes(cfg, weight_bytes: int = None,
+                     precision: Optional[Precision] = None) -> float:
     """HBM bytes of ONE expert across all MoE layers — the unit of
     residency accounting (an expert is fetched/evicted whole: its slice in
     every MoE layer moves together, matching the per-expert granularity of
-    `_expert_read_bytes`)."""
+    `_expert_read_bytes`). `precision` prices the expert class — quantized
+    experts shrink both the fetch bytes a host-tier miss costs AND the
+    footprint a cache slot holds, so the same cap fits more of them
+    (docs/quantization.md)."""
     if not cfg.is_moe:
         return 0.0
+    if weight_bytes is None:
+        weight_bytes = (precision.expert if precision is not None
+                        else Precision.DEFAULT.expert)
     mult = 3 if cfg.activation == "swiglu" else 2
     n_moe = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
     return float(n_moe * mult * cfg.d_model * cfg.moe_d_ff * weight_bytes)
@@ -65,15 +75,35 @@ class ResidencyState:
 
     def __init__(self, placement, cfg=None, *,
                  expert_bytes: Optional[float] = None,
-                 cap_bytes=None, ema_decay: float = 0.8):
+                 cap_bytes=None, ema_decay: float = 0.8,
+                 precision: Optional[Precision] = None,
+                 hw=None, strict: bool = False):
         if expert_bytes is None:
             if cfg is None:
                 raise ValueError("need cfg or expert_bytes to size experts")
-            expert_bytes = expert_hbm_bytes(cfg)
+            expert_bytes = expert_hbm_bytes(cfg, precision=precision)
         if expert_bytes <= 0:
             raise ValueError(f"non-positive expert_bytes {expert_bytes}")
         if not 0.0 <= ema_decay < 1.0:
             raise ValueError(f"ema_decay {ema_decay} outside [0, 1)")
+        # `Hardware.hbm_bytes` used to be purely informational, which let
+        # manually-specified caps silently exceed the device's actual HBM
+        # — a residency plan the hardware cannot hold. With `hw` given:
+        # unset caps default to hw.hbm_bytes (each shard is one device),
+        # and an explicit cap above it warns (raises under strict=True).
+        if hw is not None and hw.hbm_bytes > 0:
+            if cap_bytes is None:
+                cap_bytes = float(hw.hbm_bytes)
+            else:
+                caps0 = self._normalize_caps(cap_bytes, placement.n_shards)
+                over = [s for s, c in enumerate(caps0)
+                        if c is not None and c > hw.hbm_bytes]
+                if over:
+                    msg = (f"residency cap exceeds {hw.name!r} HBM "
+                           f"({hw.hbm_bytes:.3e} B) on shard(s) {over}")
+                    if strict:
+                        raise ValueError(msg)
+                    warnings.warn(msg, stacklevel=2)
         self.placement = placement
         self.expert_bytes = float(expert_bytes)
         self.ema_decay = float(ema_decay)

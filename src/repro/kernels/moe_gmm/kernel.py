@@ -215,3 +215,116 @@ def moe_gmm_fused(x, wg, wu, wd, counts, *, activation: str = "swiglu",
         interpret=interpret,
     )(counts, *operands)
     return y[:, :c].astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# moe_gmm_fused_quant: int8 weights, dequant fused into the tiles
+# --------------------------------------------------------------------- #
+
+def _fused_quant_kernel(counts_ref, *refs, bc, activation):
+    """`_fused_kernel` with int8 weight tiles dequantized in-register:
+    each expert's per-matrix absmax scale rides the scalar-prefetch path
+    next to the counts vector (SMEM), so the dequant `w.astype(f32) *
+    scale` costs no extra HBM traffic — the weights stream at 1
+    byte/param, accumulation stays f32. Dead slots skip compute exactly
+    as the bf16 kernel does (their steered weight fetch is garbage from
+    slot 0, but `pl.when(live)` never consumes it, preserving the
+    exact-zero dead-slot outputs)."""
+    if activation == "swiglu":
+        (sg_ref, su_ref, sd_ref,
+         x_ref, wg_ref, wu_ref, wd_ref, o_ref) = refs
+    else:
+        su_ref, sd_ref, x_ref, wu_ref, wd_ref, o_ref = refs
+        sg_ref = wg_ref = None
+    iu = pl.program_id(0)
+    ic = pl.program_id(1)
+    if_ = pl.program_id(2)
+
+    @pl.when(if_ == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    live = counts_ref[iu] > ic * bc
+
+    @pl.when(live)
+    def _compute():
+        x = x_ref[0].astype(jnp.float32)                      # [bc, d]
+        wu = wu_ref[0].astype(jnp.float32) * su_ref[iu]       # dequant
+        up = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+        if activation == "swiglu":
+            wg = wg_ref[0].astype(jnp.float32) * sg_ref[iu]
+            gate = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+            h = jax.nn.silu(gate) * up
+        else:
+            h = jax.nn.gelu(up)
+        wd = wd_ref[0].astype(jnp.float32) * sd_ref[iu]
+        o_ref[0] += jnp.dot(h, wd, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("activation", "bc", "bf", "interpret"))
+def moe_gmm_fused_quant(x, wg, wu, wd, s_gate, s_up, s_down, counts, *,
+                        activation: str = "swiglu", bc: int = 128,
+                        bf: int = 128, interpret: bool = False):
+    """`moe_gmm_fused` over int8 expert weights with per-expert absmax
+    scales (kernels/moe_gmm/quant.py), dequant fused into the tiles.
+
+    x:  [U, C, d]   packed dispatch buffer (activations stay bf16/f32)
+    wg/wu/wd:       int8 gathered weights, same layouts as the bf16 kernel
+    s_gate/s_up/s_down: [U] f32 per-expert scales (s_gate ignored for gelu)
+    counts: [U] i32 live tokens per packed slot -> y [U, C, d].
+
+    The scales ride the scalar-prefetch path alongside counts
+    (`num_scalar_prefetch=4`, 3 for gelu): they live in SMEM, sized [U],
+    and every weight-block index_map simply ignores the extra refs — the
+    dead-slot steering is byte-for-byte the bf16 kernel's."""
+    if activation not in ("swiglu", "gelu"):
+        raise ValueError(f"unknown activation {activation!r}")
+    u, c, d = x.shape
+    f = wu.shape[2]
+    bc = min(bc, c)
+    bf = min(bf, f)
+    xp = _pad_to(x, 1, bc)
+    wup = _pad_to(wu, 2, bf)
+    wdp = _pad_to(wd, 1, bf)
+    cp, fp = xp.shape[1], wup.shape[2]
+    grid = (u, cp // bc, fp // bf)
+
+    def _steer(iu, cnt):
+        return jnp.where(cnt[iu] > 0, iu, 0)
+
+    # every index_map takes (grid idxs, counts, *scale refs) — the scales
+    # are only read inside the kernel body, never steer a fetch
+    x_spec = pl.BlockSpec((1, bc, d), lambda iu, ic, if_, cnt, *s:
+                          (_steer(iu, cnt), ic, 0))
+    wu_spec = pl.BlockSpec((1, d, bf), lambda iu, ic, if_, cnt, *s:
+                           (_steer(iu, cnt), 0, if_))
+    wd_spec = pl.BlockSpec((1, bf, d), lambda iu, ic, if_, cnt, *s:
+                           (_steer(iu, cnt), if_, 0))
+    in_specs = [x_spec, wu_spec, wd_spec]
+    operands = [xp, wup, wdp]
+    scalars = [counts, jnp.asarray(s_up, jnp.float32),
+               jnp.asarray(s_down, jnp.float32)]
+    if activation == "swiglu":
+        wgp = _pad_to(wg, 2, bf)
+        in_specs.insert(1, pl.BlockSpec((1, d, bf),
+                                        lambda iu, ic, if_, cnt, *s:
+                                        (_steer(iu, cnt), 0, if_)))
+        operands.insert(1, wgp)
+        scalars.insert(1, jnp.asarray(s_gate, jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalars),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bc, d), lambda iu, ic, if_, cnt, *s:
+                               (iu, ic, 0)),
+    )
+    y = pl.pallas_call(
+        functools.partial(_fused_quant_kernel, bc=bc,
+                          activation=activation),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((u, cp, d), jnp.float32),
+        interpret=interpret,
+    )(*scalars, *operands)
+    return y[:, :c].astype(x.dtype)

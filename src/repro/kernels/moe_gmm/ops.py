@@ -19,10 +19,19 @@ import jax
 
 from .kernel import moe_gmm as moe_gmm_pallas
 from .kernel import moe_gmm_fused as moe_gmm_fused_pallas
-from .ref import moe_gmm_fused_ref, moe_gmm_ref
+from .kernel import moe_gmm_fused_quant as moe_gmm_fused_quant_pallas
+from .quant import (fake_quant_fp8, fit_expert_scales,
+                    fit_expert_scales_from_batches, quantize_int8,
+                    dequantize_int8, quantize_moe_experts)
+from .ref import moe_gmm_fused_quant_ref, moe_gmm_fused_ref, moe_gmm_ref
 
 __all__ = ["moe_gmm", "moe_gmm_pallas", "moe_gmm_ref",
-           "moe_gmm_fused", "moe_gmm_fused_pallas", "moe_gmm_fused_ref"]
+           "moe_gmm_fused", "moe_gmm_fused_pallas", "moe_gmm_fused_ref",
+           "moe_gmm_fused_quant", "moe_gmm_fused_quant_pallas",
+           "moe_gmm_fused_quant_ref",
+           "fit_expert_scales", "fit_expert_scales_from_batches",
+           "quantize_int8", "dequantize_int8", "fake_quant_fp8",
+           "quantize_moe_experts"]
 
 _BACKENDS = ("pallas", "interpret", "ref")
 
@@ -63,3 +72,21 @@ def moe_gmm_fused(x, wg, wu, wd, counts, *, activation: str = "swiglu",
     return moe_gmm_fused_pallas(x, wg, wu, wd, counts,
                                 activation=activation, bc=bc, bf=bf,
                                 interpret=(be == "interpret"))
+
+
+def moe_gmm_fused_quant(x, wg, wu, wd, s_gate, s_up, s_down, counts, *,
+                        activation: str = "swiglu",
+                        backend: str | None = None,
+                        force_pallas: bool = False,
+                        bc: int = 128, bf: int = 128):
+    """Fused packed-union FFN over int8 gathered weights with per-expert
+    absmax scales, dequant fused into the tiles (docs/quantization.md)."""
+    be = _resolve_backend(backend, force_pallas)
+    if be == "ref":
+        return moe_gmm_fused_quant_ref(x, wg, wu, wd, s_gate, s_up,
+                                       s_down, counts,
+                                       activation=activation)
+    return moe_gmm_fused_quant_pallas(x, wg, wu, wd, s_gate, s_up, s_down,
+                                      counts, activation=activation,
+                                      bc=bc, bf=bf,
+                                      interpret=(be == "interpret"))

@@ -1,0 +1,116 @@
+"""Expert-weight quantization: absmax scale calibration + packing.
+
+The quantized expert path (docs/quantization.md) stores each routed
+expert's gate/up/down matrices as int8 with one f32 absmax scale per
+expert per matrix — the weights stream from HBM at 1 byte/param while
+`moe_gmm_fused_quant` dequantizes inside the tile (`w.astype(f32) *
+scale`) and accumulates in f32. fp8(e4m3) is *simulated* on CPU: weights
+round-trip through `float8_e4m3fn` at calibration time (fake-quant) and
+run the standard bf16 kernel — same 1 byte/param pricing in the cost
+model, different numerics, no second kernel.
+
+Scale fitting is per-expert absmax by default; `quantile < 1.0` clips the
+scale to that quantile of |w| (outlier-robust — the error bound of the
+kernel-numerics tests scales with the chosen quantile), and
+`fit_expert_scales_from_batches` pools a handful of weight batches the
+way an activation-calibration pass would.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["fit_expert_scales", "fit_expert_scales_from_batches",
+           "quantize_int8", "dequantize_int8", "fake_quant_fp8",
+           "quantize_moe_experts", "QUANT_SUFFIX", "SCALE_SUFFIX"]
+
+#: params-dict key suffixes of the packed storage format `models/moe.py`
+#: routes through: `w_up` -> `w_up_q8` (int8 [E, ...]) + `w_up_s` (f32 [E])
+QUANT_SUFFIX = "_q8"
+SCALE_SUFFIX = "_s"
+
+_INT8_MAX = 127.0
+
+
+def fit_expert_scales(w, quantile: float = 1.0):
+    """Per-expert absmax scales for an [E, ...] weight stack: scale_e =
+    quantile_q(|w_e|) / 127, floored away from zero so an all-zero expert
+    still round-trips (its quantized weights are exact zeros either way).
+    Returns f32 [E]."""
+    if not 0.0 < quantile <= 1.0:
+        raise ValueError(f"quantile {quantile} outside (0, 1]")
+    absw = jnp.abs(w.astype(jnp.float32)).reshape(w.shape[0], -1)
+    if quantile >= 1.0:
+        amax = jnp.max(absw, axis=1)
+    else:
+        amax = jnp.quantile(absw, quantile, axis=1)
+    return jnp.maximum(amax, 1e-12) / _INT8_MAX
+
+
+def fit_expert_scales_from_batches(batches, quantile: float = 1.0):
+    """Absmax scale fit pooled over a handful of [E, ...] weight batches
+    (the calibration-pass idiom): the per-expert max of each batch's
+    per-expert quantile. One batch degenerates to `fit_expert_scales`."""
+    scales = None
+    for w in batches:
+        s = fit_expert_scales(w, quantile)
+        scales = s if scales is None else jnp.maximum(scales, s)
+    if scales is None:
+        raise ValueError("no calibration batches")
+    return scales
+
+
+def quantize_int8(w, scales=None, quantile: float = 1.0):
+    """Symmetric int8 quantization of an [E, ...] stack under per-expert
+    scales (fit from `w` when not given). Returns (q8 int8, scales f32
+    [E]); `dequantize_int8(q8, scales)` recovers w to within scale/2 per
+    element (exactly, when w is already a scale-multiple grid)."""
+    if scales is None:
+        scales = fit_expert_scales(w, quantile)
+    s = scales.reshape((-1,) + (1,) * (w.ndim - 1))
+    q = jnp.round(w.astype(jnp.float32) / s)
+    return jnp.clip(q, -_INT8_MAX, _INT8_MAX).astype(jnp.int8), scales
+
+
+def dequantize_int8(q8, scales):
+    """f32 dequantization — the oracle-side inverse the kernel fuses into
+    its tiles (`ref.moe_gmm_fused_quant_ref` uses exactly this)."""
+    s = scales.reshape((-1,) + (1,) * (q8.ndim - 1))
+    return q8.astype(jnp.float32) * s
+
+
+def fake_quant_fp8(w):
+    """fp8(e4m3) simulated on CPU: round-trip through float8_e4m3fn and
+    return in w's dtype. The bytes saving is priced by the cost model
+    (`Precision.fp8_experts()`); compute runs the standard kernel."""
+    return w.astype(jnp.float8_e4m3fn).astype(w.dtype)
+
+
+def quantize_moe_experts(params, mode: str = "int8",
+                         quantile: float = 1.0) -> dict:
+    """Quantize a `models/moe.py` params dict's ROUTED expert tensors
+    (w_gate/w_up/w_down), leaving router/shared weights untouched — the
+    mixed-precision storage `apply_moe` detects and routes through.
+
+    mode="int8": each `w_x` [E, ...] is replaced by `w_x_q8` (int8) +
+    `w_x_s` (f32 [E]) and removed — experts exist only in quantized form,
+    exactly the HBM situation the cost model prices at 1 byte/param.
+    mode="fp8": weights are fake-quantized in place (same keys, same
+    dtype) — the storage stays dense, only the numerics change."""
+    out = dict(params)
+    names = [k for k in ("w_gate", "w_up", "w_down") if k in params]
+    if not names:
+        raise ValueError("params hold no routed expert tensors "
+                         "(w_gate/w_up/w_down)")
+    if mode == "fp8":
+        for k in names:
+            out[k] = fake_quant_fp8(params[k])
+        return out
+    if mode != "int8":
+        raise ValueError(f"unknown quantization mode {mode!r}")
+    for k in names:
+        q, s = quantize_int8(params[k], quantile=quantile)
+        out[k + QUANT_SUFFIX] = q
+        out[k + SCALE_SUFFIX] = s
+        del out[k]
+    return out

@@ -40,3 +40,20 @@ def moe_gmm_fused_ref(x, wg, wu, wd, counts=None, *,
         mask = jnp.arange(c)[None, :] < counts[:, None]
         y = jnp.where(mask[..., None], y, 0.0)
     return y.astype(x.dtype)
+
+
+def moe_gmm_fused_quant_ref(x, wg, wu, wd, s_gate, s_up, s_down,
+                            counts=None, *, activation: str = "swiglu"):
+    """Oracle for `moe_gmm_fused_quant`: dequantize the int8 gathered
+    weights with their per-expert scales (`quant.dequantize_int8` layout —
+    w_f32 = q8 * scale[u]) and run the bf16 oracle. The kernel fuses this
+    dequant into its tiles; numerically both compute x @ (q * s) in f32.
+
+    wg/wu/wd: int8 [U,d,F]/[U,d,F]/[U,F,d]; s_*: f32 [U]."""
+    from .quant import dequantize_int8
+    wu_f = dequantize_int8(wu, jnp.asarray(s_up, jnp.float32))
+    wd_f = dequantize_int8(wd, jnp.asarray(s_down, jnp.float32))
+    wg_f = (dequantize_int8(wg, jnp.asarray(s_gate, jnp.float32))
+            if activation == "swiglu" else wg)
+    return moe_gmm_fused_ref(x, wg_f, wu_f, wd_f, counts,
+                             activation=activation)

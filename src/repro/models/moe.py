@@ -160,13 +160,21 @@ def packed_expert_cap(cfg, n_tokens: int) -> int:
 
 
 def moe_pass_counters(cfg, n_tokens: int, *, capacity_policy: str = "exact",
-                      packed: bool = False, weight_bytes: int = 2) -> dict:
+                      packed: bool = False, weight_bytes: int = None,
+                      precision=None) -> dict:
     """Dry-run counters for one MoE layer's FFN pass: the expert-weight
     bytes the dispatch path streams and the FLOPs its stacked matmuls
     execute.  These mirror the implementation exactly — the dense path
     einsums over all E experts; the packed path gathers and multiplies
     only the U_pad = `packed_expert_cap` slots — and back the scaling
-    gates in `benchmarks/serving_micro.py --calibrate`."""
+    gates in `benchmarks/serving_micro.py --calibrate`.  Bytes price at
+    the precision spec's expert class (`core.cost_model.Precision`;
+    `weight_bytes` kept as a legacy uniform override) — quantized expert
+    storage streams 1 byte/param."""
+    if weight_bytes is None:
+        from repro.core.cost_model import Precision
+        weight_bytes = (precision.expert if precision is not None
+                        else Precision.DEFAULT.expert)
     c = _capacity(cfg, n_tokens, capacity_policy)
     streamed = (packed_expert_cap(cfg, n_tokens) if packed
                 else cfg.num_experts)
@@ -178,6 +186,46 @@ def moe_pass_counters(cfg, n_tokens: int, *, capacity_policy: str = "exact",
         "expert_weight_bytes": streamed * mult * d * f * weight_bytes,
         "ffn_flops": 2.0 * streamed * c * d * f * mult,
     }
+
+
+def quantize_transformer_experts(params, mode: str = "int8",
+                                 quantile: float = 1.0) -> dict:
+    """Quantize the routed-expert stacks of a FULL transformer params tree
+    (the stacked-layer layout `transformer.init_params` builds:
+    blocks/moe/w_* with a leading [L, E, ...] axis), returning a new tree.
+    Scales are per-(layer, expert): `lax.scan` slices `w_up_q8` [L, E, d,
+    F] -> [E, d, F] and `w_up_s` [L, E] -> [E] per layer, exactly the
+    storage `apply_moe` detects. Router/shared/dense weights stay bf16 —
+    the mixed-precision deployment `core.cost_model.Precision` prices.
+    Modes as in `kernels.moe_gmm.quantize_moe_experts`."""
+    from repro.kernels.moe_gmm.quant import (QUANT_SUFFIX, SCALE_SUFFIX,
+                                             fake_quant_fp8, quantize_int8)
+    if mode not in ("int8", "fp8"):
+        raise ValueError(f"unknown quantization mode {mode!r}")
+    moe = params.get("blocks", {}).get("moe")
+    if not isinstance(moe, dict):
+        raise ValueError("params tree has no stacked blocks/moe dict "
+                         "(per-layer trees: quantize each layer's dict "
+                         "with kernels.moe_gmm.quantize_moe_experts)")
+    names = [k for k in ("w_gate", "w_up", "w_down") if k in moe]
+    if not names:
+        raise ValueError("blocks/moe holds no routed expert tensors")
+    new = dict(moe)
+    for k in names:
+        w = moe[k]
+        if mode == "fp8":
+            new[k] = fake_quant_fp8(w)
+            continue
+        lyr, e = w.shape[:2]
+        q, s = quantize_int8(w.reshape((lyr * e,) + w.shape[2:]),
+                             quantile=quantile)
+        new[k + QUANT_SUFFIX] = q.reshape(w.shape)
+        new[k + SCALE_SUFFIX] = s.reshape(lyr, e)
+        del new[k]
+    out = dict(params)
+    out["blocks"] = dict(params["blocks"])
+    out["blocks"]["moe"] = new
+    return out
 
 
 _EP_CACHE = {}
@@ -205,9 +253,29 @@ def apply_moe(cfg, p, x2d, *, capacity_policy: str = "train",
     drift.  kernel_backend="pallas"/"interpret"/"ref" routes the packed
     FFN through `kernels.moe_gmm.moe_gmm_fused` instead (allclose, not
     bitwise).  The packed path is the single-host serving hot path; the
-    GSPMD dispatch-shard constraints and the ep-a2a path stay dense."""
+    GSPMD dispatch-shard constraints and the ep-a2a path stay dense.
+
+    Quantized expert storage (docs/quantization.md): when `p` holds
+    int8-packed experts (`w_up_q8` + `w_up_s` per-expert scales, from
+    `kernels.moe_gmm.quantize_moe_experts` — router/shared/dense weights
+    stay bf16), the packed union-gather gathers the QUANTIZED tensors and
+    their scales, so only 1 byte/param of expert weights streams; with a
+    kernel_backend the dequant fuses into `moe_gmm_fused_quant`'s tiles,
+    inline the gathered [U_pad]-sized slice dequantizes in-register.  The
+    dense/ep paths dequantize up front (correct, not byte-lean — serving
+    uses the packed path)."""
     from repro.distributed.sharding import _CONTEXT_MESH, constrain, opt
     t, d = x2d.shape
+    quant = "w_up_q8" in p
+    if quant and not packed:
+        # non-packed consumers (training-style dispatch, ep-a2a) see a
+        # dequantized view; only the packed serving path earns the bytes
+        from repro.kernels.moe_gmm import dequantize_int8
+        p = dict(p)
+        for name in ("w_gate", "w_up", "w_down"):
+            if name + "_q8" in p:
+                p[name] = dequantize_int8(p.pop(name + "_q8"),
+                                          p.pop(name + "_s"))
     if opt("ep-a2a") and capacity_policy != "exact":
         # §Perf/beyond-paper: explicit all-to-all expert parallelism
         mesh = _CONTEXT_MESH[0]
@@ -261,7 +329,54 @@ def apply_moe(cfg, p, x2d, *, capacity_policy: str = "train",
         disp = jnp.zeros((u_cap, c + 1, d), x2d.dtype)
         disp = disp.at[flat_u, flat_p].set(x_rep)[:, :c]
 
-        # --- gather only the union's weights (the U-not-E byte stream)
+        # --- gather only the union's weights (the U-not-E byte stream);
+        # quantized storage gathers int8 tensors + [U_pad] scales, so the
+        # gather itself moves 1 byte/param
+        if quant:
+            wu_q = jnp.take(p["w_up_q8"], expert_ids, axis=0)
+            wd_q = jnp.take(p["w_down_q8"], expert_ids, axis=0)
+            su_g = jnp.take(p["w_up_s"], expert_ids, axis=0)
+            sd_g = jnp.take(p["w_down_s"], expert_ids, axis=0)
+            swiglu = "w_gate_q8" in p and cfg.activation == "swiglu"
+            wg_q = (jnp.take(p["w_gate_q8"], expert_ids, axis=0)
+                    if swiglu else None)
+            sg_g = (jnp.take(p["w_gate_s"], expert_ids, axis=0)
+                    if swiglu else None)
+            if kernel_backend is not None:
+                from repro.kernels.moe_gmm import moe_gmm_fused_quant
+                counts = jnp.minimum(hits[expert_ids], c)
+                out = moe_gmm_fused_quant(
+                    disp, wg_q, wu_q, wd_q, sg_g, su_g, sd_g, counts,
+                    activation="swiglu" if swiglu else "gelu",
+                    backend=kernel_backend)
+            else:
+                # in-register dequant of the gathered [U_pad] slice, then
+                # the same contractions as the bf16 packed path (matches
+                # the kernel's oracle `moe_gmm_fused_quant_ref`)
+                from repro.kernels.moe_gmm import dequantize_int8
+                wu_g = dequantize_int8(wu_q, su_g)
+                wd_g = dequantize_int8(wd_q, sd_g)
+                if swiglu:
+                    wg_g = dequantize_int8(wg_q, sg_g)
+                    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, wg_g))
+                    h = h * jnp.einsum("ecd,edf->ecf", disp, wu_g)
+                else:
+                    h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", disp, wu_g))
+                out = jnp.einsum("ecf,efd->ecd", h, wd_g)     # [U_pad,C,d]
+            pad = jnp.zeros((u_cap, 1, d), out.dtype)
+            out = jnp.concatenate([out, pad], axis=1)
+            y_rep = out[flat_u, jnp.where(keep, flat_p, c)]   # [T*k,d]
+            w_flat = (weights.reshape(-1) * keep).astype(out.dtype)
+            y = jnp.sum((y_rep * w_flat[:, None]).reshape(t, k, d), axis=1)
+            if cfg.num_shared_experts:
+                y = y + apply_mlp(cfg, p["shared"], x2d)
+            aux = {
+                "lb_loss": load_balance_loss(cfg, probs, idx),
+                "expert_idx": idx,
+                "unique_experts": unique_expert_count(cfg, idx),
+                "dropped": jnp.sum(~keep),
+            }
+            return y, aux
         wu_g = jnp.take(p["w_up"], expert_ids, axis=0)        # [U_pad,d,F]
         wd_g = jnp.take(p["w_down"], expert_ids, axis=0)      # [U_pad,F,d]
         swiglu = "w_gate" in p and cfg.activation == "swiglu"

@@ -126,14 +126,14 @@ def _router_probe(cfg, params, toks, mask):
 
 
 def _prefill_clock(cfg, hw, clock: str, n_tokens: int, wall: float, *,
-                   affinity: float, window: int) -> float:
+                   affinity: float, window: int, precision=None) -> float:
     """Prefill seconds on the engine's clock: wall seconds under
     clock="wall", cm.prefill_time under the virtual model clock (wall time
     of a jitted CPU trace must never mix into the virtual clock)."""
     if clock == "wall":
         return wall
     return cm.prefill_time(cfg, hw, n_tokens, affinity=affinity,
-                           window=window)["t_iter"]
+                           window=window, precision=precision)["t_iter"]
 
 
 class ServingEngine:
@@ -406,7 +406,8 @@ class BatchedEngine:
                  placement: Optional[cm.ExpertPlacement] = None,
                  packed: bool = False,
                  residency=None,
-                 prefetch: bool = True):
+                 prefetch: bool = True,
+                 precision: Optional[cm.Precision] = None):
         self.cfg = cfg
         self.params = params
         self.drafter_factory = drafter_factory or (lambda: NGramDrafter())
@@ -467,6 +468,19 @@ class BatchedEngine:
         # the mispricing the placement exists to eliminate. The sanctioned
         # naive comparator is PlannerConfig(shard_aware=False), which
         # keeps the placement but spreads the union evenly.
+        # same contract for pricing precision: a supplied planner fit to
+        # bf16 bytes would mispredict every quantized step (and vice
+        # versa), so the two must agree explicitly.
+        if planner is not None:
+            theirs = getattr(planner, "precision", None)
+            if (precision or cm.Precision.DEFAULT) != \
+                    (theirs or cm.Precision.DEFAULT):
+                raise ValueError(
+                    f"precision={precision!r} contradicts the supplied "
+                    f"planner's precision={theirs!r}")
+        #: bytes-per-param pricing the cost oracle and planner share;
+        #: None prices identically to Precision.DEFAULT (bf16)
+        self.precision = precision
         if planner is not None and cfg.is_moe:
             pp = getattr(planner, "placement", None)
             ours = self.placement.shard_of if self.placement else None
@@ -491,7 +505,7 @@ class BatchedEngine:
         self.planner = planner or BatchSpecPlanner(
             cfg, hw, affinity=affinity, window=window,
             config=PlannerConfig(policy=policy), placement=self.placement,
-            residency=residency)
+            residency=residency, precision=precision)
         #: offload tier: live only when the placement actually has
         #: host-tier experts — an all-hbm residency must be invisible
         self.residency = residency
@@ -603,7 +617,8 @@ class BatchedEngine:
         if self.chunk <= 0:
             return cm.prefill_time(self.cfg, self.hw, n,
                                    affinity=self.affinity,
-                                   window=self.window)["t_iter"]
+                                   window=self.window,
+                                   precision=self.precision)["t_iter"]
         lens = [int(x) for x in np.asarray(self.cache["lengths"])]
         chunk = min(self.chunk, n)
         oracle = cm.BatchCostOracle(
@@ -612,7 +627,7 @@ class BatchedEngine:
             prefill_tokens=[0] * len(lens) + [chunk],
             placement=self.placement,
             calibration=getattr(self.planner, "calibration", None),
-            residency=self.residency)
+            residency=self.residency, precision=self.precision)
         ns = [0] * (len(lens) + 1)
         backlog = 0
         for i in self.active_slots:
@@ -715,7 +730,8 @@ class BatchedEngine:
         tel.t_prefill = _prefill_clock(self.cfg, self.hw, self.clock,
                                        len(prompt), wall_prefill,
                                        affinity=self.affinity,
-                                       window=self.window)
+                                       window=self.window,
+                                       precision=self.precision)
         tel.t_queue = max(self.now - t_submit, 0.0)
         tel.ttft = tel.t_queue + tel.t_prefill
         self.now += tel.t_prefill  # blocking: everyone waits out the prefill
@@ -1043,7 +1059,7 @@ class BatchedEngine:
             per_shard_unique=(None if shard_mean is None
                               else list(shard_mean)),
             residency=self.residency, per_shard_miss=per_shard_miss,
-            fetch_hide=fetch_hide)
+            fetch_hide=fetch_hide, precision=self.precision)
         self._last_t_iter = float(cost["t_iter"])
         t_verify_shared = (wall_verify if self.clock == "wall"
                            else cost["t_iter"])
@@ -1172,7 +1188,9 @@ class BatchedEngine:
             prefetch_misses=n_miss,
             evictions=step_evictions,
             fetch_bytes=step_fetch_bytes,
-            t_fetch=cost.get("t_fetch_unhidden", 0.0))
+            t_fetch=cost.get("t_fetch_unhidden", 0.0),
+            precision=cost.get("precision", ""),
+            expert_bytes_saved=cost.get("expert_bytes_saved", 0.0))
         self.telemetry.steps.append(step_tel)
         # every decode row experienced the WHOLE pass between its tokens —
         # the latency quantity SLOs bound (vs t_iter's attributed share)

@@ -97,6 +97,10 @@ class StepTelemetry:
     evictions: int = 0         # host-tier residents evicted this step
     fetch_bytes: float = 0.0   # host->HBM bytes fetched (prefetch + demand)
     t_fetch: float = 0.0       # non-overlapped fetch seconds in t_step
+    # -- precision fields (defaults = bf16 everywhere) -------------------- #
+    precision: str = ""        # cost-model Precision label ("" = legacy)
+    expert_bytes_saved: float = 0.0  # expert-read bytes this pass avoided
+                               # moving vs bf16 storage (0.0 unquantized)
 
     @property
     def t_total(self) -> float:
@@ -302,6 +306,12 @@ class EngineTelemetry:
         """Host-tier cache evictions across the run."""
         return planner_aggregates(self.steps)["evictions"]
 
+    @property
+    def expert_bytes_saved(self) -> float:
+        """Expert-read bytes the run avoided moving vs bf16 storage
+        (docs/quantization.md; 0.0 on unquantized runs)."""
+        return planner_aggregates(self.steps)["expert_bytes_saved"]
+
 
 def planner_aggregates(steps) -> dict:
     """Batch-planner decision aggregates over a step-telemetry list — the
@@ -338,4 +348,5 @@ def planner_aggregates(steps) -> dict:
                               if (hits + misses) else 1.0),
         "fetch_bytes": sum(s.fetch_bytes for s in steps),
         "evictions": sum(s.evictions for s in steps),
+        "expert_bytes_saved": sum(s.expert_bytes_saved for s in steps),
     }

@@ -1,0 +1,386 @@
+"""Quantized expert paths (docs/quantization.md): the `Precision` spec's
+bit-exact degradation contract across hardware regimes (precision=None
+must price float-identically to `Precision()` everywhere, and the engine
+must emit identical streams and telemetry with quantization off), the
+int8 dequant-in-kernel numerics (error bounded by the absmax scale and
+scaling with the calibration quantile, dead slots exactly zero,
+non-divisible tiles, scale recovery), the quantized storage format
+through `apply_moe`/`quantize_transformer_experts`, and the
+`ResidencyState` HBM-cap validation against `Hardware.hbm_bytes`."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (BatchCostOracle, ExpertPlacement, Hardware,
+                        Precision, ResidencyState, TPU_V5E, RTX_6000_ADA,
+                        batch_iteration_time, expert_hbm_bytes,
+                        iteration_bytes)
+from repro.core.cost_model import prefill_crossover_tokens
+from repro.kernels.moe_gmm import (dequantize_int8, fake_quant_fp8,
+                                   fit_expert_scales,
+                                   fit_expert_scales_from_batches,
+                                   moe_gmm_fused, moe_gmm_fused_quant,
+                                   moe_gmm_fused_quant_ref, quantize_int8,
+                                   quantize_moe_experts)
+
+RNG = np.random.default_rng(7)
+
+CFG = get_config("mixtral-8x7b").reduced()
+
+#: the degradation contract must hold in every pricing regime, not just
+#: the presets: memory-starved and flops-starved corners included
+HARDWARES = [
+    TPU_V5E,
+    RTX_6000_ADA,
+    Hardware("mem-starved", hbm_bw=1e9, peak_flops=1e13, ici_bw=5e8),
+    Hardware("flops-starved", hbm_bw=1e12, peak_flops=1e9, ici_bw=5e8),
+]
+
+
+def _quant_inputs(u, c, d, f, activation="swiglu", scale=1.0):
+    counts = RNG.integers(0, c + 1, u).astype(np.int32)
+    x = RNG.normal(0, 1, (u, c, d)).astype(np.float32)
+    for i, n in enumerate(counts):
+        x[i, n:] = 0.0
+    w = lambda *s: RNG.normal(0, scale, s).astype(np.float32)
+    wg = jnp.asarray(w(u, d, f)) if activation == "swiglu" else None
+    wu, wd = jnp.asarray(w(u, d, f)), jnp.asarray(w(u, f, d))
+    return jnp.asarray(x), wg, wu, wd, jnp.asarray(counts)
+
+
+def _quantized(wg, wu, wd, quantile=1.0):
+    qg, sg = (quantize_int8(wg, quantile=quantile) if wg is not None
+              else (None, None))
+    qu, su = quantize_int8(wu, quantile=quantile)
+    qd, sd = quantize_int8(wd, quantile=quantile)
+    return qg, qu, qd, sg, su, sd
+
+
+# ===================================================================== #
+# Precision spec + bit-exact degradation of the pricing layer
+# ===================================================================== #
+
+def test_precision_spec():
+    p = Precision()
+    assert (p.dense, p.expert, p.kv) == (2, 2, 2)
+    assert not p.quantized_experts
+    i8 = Precision.int8_experts()
+    f8 = Precision.fp8_experts()
+    assert i8.expert == f8.expert == 1
+    assert i8.dense == i8.kv == 2          # only experts quantize
+    assert i8.quantized_experts and f8.quantized_experts
+    assert i8.label != f8.label            # telemetry tags differ...
+    assert Precision.DEFAULT == Precision()
+    with pytest.raises(Exception):         # frozen
+        p.expert = 1
+
+
+@pytest.mark.parametrize("hw", HARDWARES, ids=lambda h: h.name)
+def test_default_precision_prices_float_identical(hw):
+    """precision=None and Precision() must agree on every float the batch
+    pricing emits, in every regime — the int defaults substitute for the
+    old wb=2 literals in the same float-op order, so equality is exact,
+    not approximate."""
+    ns, ctxs = [3, 1, 5], [100, 900, 40]
+    base = batch_iteration_time(CFG, hw, ns, ctxs, affinity=0.2)
+    expl = batch_iteration_time(CFG, hw, ns, ctxs, affinity=0.2,
+                                precision=Precision())
+    for k, v in base.items():
+        if isinstance(v, float):
+            assert expl[k] == v, f"{k} drifted under explicit default"
+    assert expl["precision"] == "bf16"
+    assert expl["expert_bytes_saved"] == 0.0
+
+    o0 = BatchCostOracle(CFG, hw, ctxs, affinity=0.2)
+    o1 = BatchCostOracle(CFG, hw, ctxs, affinity=0.2,
+                         precision=Precision())
+    assert o0.t_batch(ns) == o1.t_batch(ns)
+
+
+def test_legacy_wb_override_equals_uniform_precision():
+    """The legacy `wb` int resolves to a uniform Precision — byte helpers
+    must price both spellings identically."""
+    b_wb = iteration_bytes(CFG, 4, 512, wb=1)
+    b_pr = iteration_bytes(CFG, 4, 512, precision=Precision(1, 1, 1))
+    assert b_wb["total"] == b_pr["total"]
+
+
+def test_int8_halves_expert_bytes_and_shifts_crossover():
+    hw = Hardware("roofline", hbm_bw=1e9, peak_flops=1e10, ici_bw=5e8)
+    i8 = Precision.int8_experts()
+    bf = batch_iteration_time(CFG, hw, [4], [256])
+    q8 = batch_iteration_time(CFG, hw, [4], [256], precision=i8)
+    assert q8["expert_bytes"] == bf["expert_bytes"] / 2
+    # saved == the bytes the pass did NOT move vs bf16 storage (exact)
+    assert q8["expert_bytes_saved"] == q8["expert_bytes"]
+    assert q8["t_iter"] <= bf["t_iter"]
+    # widened to 8 experts so expert bytes dominate the chunk enough for
+    # the halving to cross a pow-2 bucket (the stock reduced E=4 shifts
+    # 29 -> 23 tokens, invisible at pow-2 resolution)
+    import dataclasses
+    wide = dataclasses.replace(CFG, num_experts=8)
+    xo_bf = prefill_crossover_tokens(wide, hw)
+    xo_i8 = prefill_crossover_tokens(wide, hw, precision=i8)
+    assert xo_i8 < xo_bf  # fewer bytes, same FLOPs: crossover moves left
+
+
+def test_engine_stream_identity_quant_off():
+    """BatchedEngine(precision=None) vs explicit Precision(): identical
+    token streams AND per-step telemetry — quantization off is the
+    pre-quantization engine, bit for bit."""
+    from repro.models import transformer as T
+    from repro.serving import BatchedEngine
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+    prompts = [[5, 6, 7, 8] * 4, [9, 3, 1] * 5]
+
+    def run(precision):
+        eng = BatchedEngine(CFG, params, max_batch=2, chunk=4, seed=3,
+                            precision=precision)
+        idxs = [eng.join(p, max_new=8) for p in prompts]
+        while eng.active_slots:
+            eng.step()
+        toks = [eng.retire(i).tokens for i in idxs]
+        tel = [(s.t_step, s.t_step_predicted, s.union_experts,
+                s.precision, s.expert_bytes_saved)
+               for s in eng.telemetry.steps]
+        return toks, tel
+
+    t0, tel0 = run(None)
+    t1, tel1 = run(Precision())
+    assert t0 == t1
+    assert tel0 == tel1
+    assert all(s[4] == 0.0 for s in tel0)
+
+
+def test_engine_rejects_contradicting_planner_precision():
+    from repro.core import BatchSpecPlanner, PlannerConfig
+    from repro.models import transformer as T
+    from repro.serving import BatchedEngine
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+    pl = BatchSpecPlanner(CFG, TPU_V5E,
+                          config=PlannerConfig(policy="joint"))
+    with pytest.raises(ValueError):
+        BatchedEngine(CFG, params, planner=pl,
+                      precision=Precision.int8_experts())
+    # None vs explicit default is NOT a contradiction
+    pl2 = BatchSpecPlanner(CFG, TPU_V5E,
+                           config=PlannerConfig(policy="joint"),
+                           precision=Precision())
+    BatchedEngine(CFG, params, planner=pl2)
+
+
+# ===================================================================== #
+# int8 kernel numerics
+# ===================================================================== #
+
+def test_int8_roundtrip_error_bounded_by_scale():
+    """Round-to-nearest symmetric quantization: |dequant - w| <= scale/2
+    per element at quantile=1.0 (no clipping)."""
+    w = jnp.asarray(RNG.normal(0, 0.3, (5, 16, 8)), jnp.float32)
+    q, s = quantize_int8(w)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(w))
+    bound = np.asarray(s).reshape(-1, 1, 1) / 2 + 1e-7
+    assert (err <= bound).all()
+
+
+def test_quant_kernel_matches_quant_ref_exactly():
+    """Kernel (interpret) vs oracle on quantized weights: both compute
+    x @ (q * s) in f32, so parity is tight — including non-divisible
+    C/F under small tiles (the tile-padding regression under quant)."""
+    for u, c, d, f, act in [(5, 7, 8, 8, "swiglu"), (3, 10, 12, 20, "gelu"),
+                            (1, 8, 16, 16, "swiglu")]:
+        x, wg, wu, wd, counts = _quant_inputs(u, c, d, f, act)
+        qg, qu, qd, sg, su, sd = _quantized(wg, wu, wd)
+        y_ref = moe_gmm_fused_quant_ref(qg, qu, qd, sg, su, sd,
+                                        counts, activation=act) \
+            if False else moe_gmm_fused_quant_ref(
+                x, qg if act == "swiglu" else qu, qu, qd,
+                sg if act == "swiglu" else su, su, sd, counts,
+                activation=act)
+        y_k = moe_gmm_fused_quant(x, qg if act == "swiglu" else qu,
+                                  qu, qd,
+                                  sg if act == "swiglu" else su, su, sd,
+                                  counts, activation=act,
+                                  backend="interpret", bc=8, bf=8)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_k),
+                                   atol=1e-5)
+
+
+def test_quant_kernel_error_scales_with_quantile():
+    """vs the bf16 kernel, int8 error is small at quantile=1.0 and grows
+    as the calibration quantile clips harder — the outlier-robustness
+    trade the calibration helpers expose."""
+    x, wg, wu, wd, counts = _quant_inputs(4, 16, 24, 24, "swiglu",
+                                          scale=0.5)
+    y_bf = moe_gmm_fused(x, wg, wu, wd, counts, backend="ref")
+    errs = []
+    for q in (1.0, 0.8, 0.5):
+        qg, qu, qd, sg, su, sd = _quantized(wg, wu, wd, quantile=q)
+        y_q = moe_gmm_fused_quant(x, qg, qu, qd, sg, su, sd, counts,
+                                  backend="ref")
+        errs.append(float(jnp.abs(y_q - y_bf).max()))
+    ref_mag = float(jnp.abs(y_bf).max())
+    assert errs[0] < 0.05 * ref_mag       # absmax: faithful
+    assert errs[0] < errs[1] < errs[2]    # clipping harder -> worse
+
+
+def test_quant_kernel_dead_slots_exact_zero():
+    x, wg, wu, wd, _ = _quant_inputs(4, 8, 16, 8)
+    counts = jnp.asarray([0, 8, 0, 3], jnp.int32)
+    x = x.at[0].set(0).at[2].set(0).at[3, 3:].set(0)
+    qg, qu, qd, sg, su, sd = _quantized(wg, wu, wd)
+    y = moe_gmm_fused_quant(x, qg, qu, qd, sg, su, sd, counts,
+                            backend="interpret", bc=8, bf=8)
+    assert float(jnp.abs(y[0]).max()) == 0.0
+    assert float(jnp.abs(y[2]).max()) == 0.0
+    assert float(jnp.abs(y[1]).max()) > 0.0
+
+
+def test_scale_calibration_recovers_grid_weights():
+    """Weights already on an int8 grid round-trip exactly, and the fitted
+    scale equals the constructing one (absmax hits 127 * s)."""
+    s_true = np.asarray([0.01, 0.05, 0.002], np.float32)
+    q_true = RNG.integers(-127, 128, (3, 8, 4)).astype(np.float32)
+    q_true[:, 0, 0] = 127.0  # pin the absmax so the scale is identified
+    w = jnp.asarray(q_true * s_true.reshape(-1, 1, 1))
+    s_fit = fit_expert_scales(w)
+    np.testing.assert_allclose(np.asarray(s_fit), s_true, rtol=1e-6)
+    q, s = quantize_int8(w)
+    np.testing.assert_allclose(np.asarray(dequantize_int8(q, s)),
+                               np.asarray(w), atol=1e-7)
+
+
+def test_scale_fit_from_batches_pools_max():
+    a = jnp.asarray(RNG.normal(0, 0.1, (2, 8)), jnp.float32)
+    b = jnp.asarray(RNG.normal(0, 0.5, (2, 8)), jnp.float32)
+    pooled = fit_expert_scales_from_batches([a, b])
+    expect = jnp.maximum(fit_expert_scales(a), fit_expert_scales(b))
+    np.testing.assert_array_equal(np.asarray(pooled), np.asarray(expect))
+    with pytest.raises(ValueError):
+        fit_expert_scales_from_batches([])
+    with pytest.raises(ValueError):
+        fit_expert_scales(a, quantile=0.0)
+
+
+def test_fp8_fake_quant_idempotent():
+    w = jnp.asarray(RNG.normal(0, 1, (4, 8)), jnp.float32)
+    w1 = fake_quant_fp8(w)
+    np.testing.assert_array_equal(np.asarray(fake_quant_fp8(w1)),
+                                  np.asarray(w1))
+    assert w1.dtype == w.dtype
+    assert float(jnp.abs(w1 - w).max()) > 0.0  # it did quantize
+
+
+# ===================================================================== #
+# Quantized storage through the model layer
+# ===================================================================== #
+
+def test_quantize_moe_experts_storage_contract():
+    from repro.models import moe
+    p = moe.init_moe(CFG, jax.random.PRNGKey(1), jnp.float32)
+    q = quantize_moe_experts(p)
+    for name in ("w_gate", "w_up", "w_down"):
+        assert name not in q                  # originals deleted
+        assert q[name + "_q8"].dtype == jnp.int8
+        assert q[name + "_s"].shape == (CFG.num_experts,)
+    assert "router" in q                      # router untouched
+    f8 = quantize_moe_experts(p, mode="fp8")
+    assert f8["w_up"].dtype == p["w_up"].dtype
+    with pytest.raises(ValueError):
+        quantize_moe_experts({"router": p["router"]})
+    with pytest.raises(ValueError):
+        quantize_moe_experts(p, mode="int4")
+
+
+def test_apply_moe_quant_paths_agree():
+    """Packed-quant (gathered int8 + inline dequant) and dense-quant
+    (dequant up front) must agree exactly; both sit within the
+    quantization error of the bf16 path."""
+    from repro.models import moe
+    p = moe.init_moe(CFG, jax.random.PRNGKey(1), jnp.float32)
+    q = quantize_moe_experts(p)
+    x = jnp.asarray(RNG.normal(0, 1, (6, CFG.d_model)), jnp.float32)
+    y_bf, _ = moe.apply_moe(CFG, p, x, capacity_policy="exact")
+    y_qd, _ = moe.apply_moe(CFG, q, x, capacity_policy="exact")
+    y_qp, _ = moe.apply_moe(CFG, q, x, capacity_policy="exact",
+                            packed=True)
+    np.testing.assert_array_equal(np.asarray(y_qd), np.asarray(y_qp))
+    err = float(jnp.abs(y_qd - y_bf).max())
+    assert 0.0 < err < 0.1 * float(jnp.abs(y_bf).max()) + 1e-3
+
+
+def test_quantize_transformer_experts_slices_like_scan():
+    """Per-layer slices of the stacked quantization must equal quantizing
+    that layer's dict directly — the lax.scan contract."""
+    from repro.models import transformer as T
+    from repro.models.moe import quantize_transformer_experts
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+    qp = quantize_transformer_experts(params)
+    moe_p = params["blocks"]["moe"]
+    moe_q = qp["blocks"]["moe"]
+    lyr = 0
+    per_layer = quantize_moe_experts(
+        {k: v[lyr] for k, v in moe_p.items()})
+    for k in ("w_up_q8", "w_up_s", "w_down_q8", "w_down_s"):
+        np.testing.assert_array_equal(np.asarray(moe_q[k][lyr]),
+                                      np.asarray(per_layer[k]))
+    assert "w_up" not in moe_q
+    with pytest.raises(ValueError):
+        quantize_transformer_experts({"blocks": {}})
+
+
+# ===================================================================== #
+# ResidencyState vs Hardware.hbm_bytes (cap-validation bugfix)
+# ===================================================================== #
+
+def _host_placement():
+    return ExpertPlacement.contiguous(CFG.num_experts, 1).offload(
+        [CFG.num_experts - 1])
+
+
+def test_residency_cap_defaults_to_hw_hbm():
+    hw = Hardware("cap-test", hbm_bw=1e9, peak_flops=1e10,
+                  hbm_bytes=8 * expert_hbm_bytes(CFG))
+    rs = ResidencyState(_host_placement(), CFG, hw=hw)
+    assert rs.cap_bytes == [float(hw.hbm_bytes)]
+    # without hw, unset cap stays uncapped (legacy behavior)
+    rs0 = ResidencyState(_host_placement(), CFG)
+    assert rs0.cap_bytes == [None]
+
+
+def test_residency_cap_over_hbm_warns_and_strict_raises():
+    # _host_placement pins 3 experts in HBM, so caps must sit at or
+    # above 3*eb to pass the pinned-footprint check.
+    eb = expert_hbm_bytes(CFG)
+    hw = Hardware("cap-test", hbm_bw=1e9, peak_flops=1e10,
+                  hbm_bytes=4 * eb)
+    with pytest.warns(UserWarning, match="exceeds"):
+        ResidencyState(_host_placement(), CFG, cap_bytes=6 * eb, hw=hw)
+    with pytest.raises(ValueError, match="exceeds"):
+        ResidencyState(_host_placement(), CFG, cap_bytes=6 * eb, hw=hw,
+                       strict=True)
+    # a cap the device can hold is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ResidencyState(_host_placement(), CFG, cap_bytes=3.5 * eb, hw=hw)
+
+
+def test_residency_precision_halves_footprint():
+    i8 = Precision.int8_experts()
+    assert expert_hbm_bytes(CFG, precision=i8) == expert_hbm_bytes(CFG) / 2
+    # 3 pinned bf16 experts leave no slack at 3.5*eb, but the int8
+    # pinned footprint is half, so the same byte cap admits the host
+    # expert as a cache resident.
+    cap = 3.5 * expert_hbm_bytes(CFG)
+    rs_bf = ResidencyState(_host_placement(), CFG, cap_bytes=cap)
+    rs_i8 = ResidencyState(_host_placement(), CFG, cap_bytes=cap,
+                           precision=i8)
+    assert rs_i8.expert_bytes == rs_bf.expert_bytes / 2
+    assert rs_bf._slots == [0]
+    assert rs_i8._slots == [1]
