@@ -801,6 +801,173 @@ def offload_sweep(fast: bool = False, batches=(2, 4), slots: int = 5):
 
 
 # --------------------------------------------------------------------- #
+# Overlap sweep (model clock): layered streaming vs whole-expert
+# residency under the offload sweep's miss-forcing cap
+# --------------------------------------------------------------------- #
+
+def overlap_sweep(fast: bool = False, batches=(2, 4), slots: int = 5):
+    """Layered-streaming sweep (docs/offload.md, layered streaming): the
+    offload sweep's miss-forcing regime — trained 8-expert model
+    (`_ep_model`), EVERY expert host-tiered under `slots` HBM cache
+    slots, the vocab-sliced rotating working set — re-run at both
+    residency granularities with the prefetcher on and off. Layer
+    granularity turns the prefetch stage into a layer pipeline: layer
+    l's slices hide behind the draft window PLUS the compute of layers
+    < l, double-buffered against the previous pass's tail.
+
+    Gates (committed artifact + CI smoke):
+      * whole-expert drift: granularity="expert" prefetch-on rows must
+        reproduce the committed offload-sweep artifact's tokens/s
+        EXACTLY — the layered refactor must leave PR 7's whole-expert
+        path bit for bit (full runs only: --fast runs a reduced workload
+        the committed artifact doesn't cover);
+      * per B: layer-granularity prefetch-on strictly beats whole-expert
+        prefetch-on — higher tokens/s AND lower total unhidden fetch
+        (the pipeline must hide real latency, not shuffle accounting);
+      * per B: the prefetcher still pays within layer granularity
+        (on > off — finer units must not break the lookahead's value);
+      * analytic float-exactness: `BatchCostOracle.t_batch` ==
+        `batch_iteration_time` t_iter under a layer residency and a
+        full per-layer hide schedule, exactly, over an allocation grid
+        (shared `fetch_time_layered`)."""
+    import json
+    import os
+    from repro.core import (BatchCostOracle, BatchSpecPlanner,
+                            ExpertPlacement, PlannerConfig, ResidencyState,
+                            batch_iteration_time, expert_hbm_bytes,
+                            fetch_hide_schedule)
+    from .common import OUT_DIR
+    cfg, params = _ep_model()
+    hw = _offload_hw()
+    e = cfg.num_experts
+    eb = expert_hbm_bytes(cfg)
+    if fast:
+        batches = tuple(b for b in batches if b == max(batches))
+    n_requests, max_new = (12, 16) if fast else (24, 24)
+    pl = ExpertPlacement.contiguous(e, 1)
+    tiered = pl.offload(list(range(e)))    # the whole expert population
+    cap = slots * eb
+
+    def run(b, granularity, prefetch=True):
+        # the offload sweep's construction, verbatim, plus granularity —
+        # the drift gate depends on the expert rows being the SAME run
+        rs = ResidencyState(tiered, cfg, cap_bytes=cap,
+                            granularity=granularity)
+        planner = BatchSpecPlanner(
+            cfg, hw,
+            config=PlannerConfig(policy="joint", stagger_tests=False),
+            residency=rs)
+        eng, sched = _run_engine(cfg, params,
+                                 _offload_requests(cfg, n_requests,
+                                                   max_new),
+                                 controller=_ep_controller, max_batch=b,
+                                 hw=hw, chunk=16, residency=rs,
+                                 prefetch=prefetch, planner=planner)
+        return eng, sched, rs
+
+    rows = []
+    tps, unhid = {}, {}
+    for b in batches:
+        for gran in ("expert", "layer"):
+            for prefetch in (True, False):
+                eng, sched, rs = run(b, gran, prefetch)
+                tel = eng.telemetry
+                key = (gran, "on" if prefetch else "off", b)
+                tps[key] = sched.tokens_per_second()
+                unhid[key] = sum(s.t_fetch for s in tel.steps)
+                row = {"granularity": gran,
+                       "prefetch": prefetch, "B": b,
+                       "tokens_per_s": tps[key],
+                       "t_fetch_unhidden": unhid[key],
+                       "prefetch_hit_rate": tel.prefetch_hit_rate,
+                       "fetch_bytes": tel.fetch_bytes,
+                       "evictions": tel.evictions,
+                       "steps": len(tel.steps),
+                       "residency": rs.snapshot()}
+                if gran == "layer":
+                    lay = [s.t_fetch_by_layer for s in tel.steps
+                           if s.t_fetch_by_layer]
+                    if lay:
+                        row["t_fetch_by_layer_sum"] = [
+                            float(sum(col)) for col in zip(*lay)]
+                rows.append(row)
+                emit(f"serving_micro/overlap_{gran}_"
+                     f"{'on' if prefetch else 'off'}_B{b}_tokens_per_s",
+                     tps[key],
+                     f"hit={row['prefetch_hit_rate']:.3f};"
+                     f"unhid={unhid[key]:.5f}")
+
+    # analytic float-exactness of the layered pricing, oracle vs pricer
+    rs = ResidencyState(tiered, cfg, cap_bytes=cap, granularity="layer")
+    sched_h = fetch_hide_schedule(cfg, 1e-4, 2e-3)
+    ctx = [64, 96, 128]
+    orc = BatchCostOracle(cfg, hw, ctx, residency=rs, fetch_hide=sched_h)
+    exact_drift = 0.0
+    for ns in ([1, 1, 1], [4, 0, 2], [0, 0, 0], [3, 5, 7], [9, 1, 4]):
+        ref = batch_iteration_time(cfg, hw, ns, ctx, residency=rs,
+                                   fetch_hide=sched_h)
+        exact_drift = max(exact_drift,
+                          abs(orc.t_batch(ns) - ref["t_iter"]),
+                          abs(orc.fetch_unhidden(ns)
+                              - ref["t_fetch_unhidden"]))
+    emit("serving_micro/overlap_layered_pricing_drift", exact_drift,
+         "oracle-vs-batch_iteration_time;must-be-exactly-0")
+
+    # whole-expert drift vs the committed offload-sweep artifact
+    expert_drift = None
+    ref_path = os.path.join(OUT_DIR, "serving_micro_offload_sweep.json")
+    if not fast and os.path.exists(ref_path):
+        with open(ref_path) as f:
+            ref_rows = json.load(f)["rows"]
+        ref_tps = {r["B"]: r["tokens_per_s"] for r in ref_rows
+                   if r["mode"] == "prefetch_on"}
+        expert_drift = max(abs(tps[("expert", "on", b)] - ref_tps[b])
+                           for b in batches if b in ref_tps)
+        emit("serving_micro/overlap_expert_drift_vs_offload_artifact",
+             expert_drift, "must-be-exactly-0")
+
+    gains = {b: (tps[("layer", "on", b)] / tps[("expert", "on", b)])
+             for b in batches}
+    for b in batches:
+        emit(f"serving_micro/overlap_B{b}_layer_over_expert", gains[b],
+             f"unhid {unhid[('layer', 'on', b)]:.5f} vs "
+             f"{unhid[('expert', 'on', b)]:.5f};must-be>1")
+    save_json("serving_micro_overlap_sweep",
+              {"hw": {"name": hw.name, "hbm_bw": hw.hbm_bw,
+                      "peak_flops": hw.peak_flops, "ici_bw": hw.ici_bw,
+                      "host_bw": hw.host_bw},
+               "num_experts": e, "expert_bytes": eb,
+               "cap_bytes": cap, "slots": slots, "max_new": max_new,
+               "rows": rows,
+               "layer_over_expert": {str(b): gains[b] for b in batches},
+               "layered_pricing_drift": exact_drift,
+               "expert_drift_vs_offload_artifact": expert_drift})
+    _gate(exact_drift == 0.0,
+          f"layered pricing drifted {exact_drift!r} between "
+          "BatchCostOracle and batch_iteration_time (must be exactly 0)")
+    if expert_drift is not None:
+        _gate(expert_drift == 0.0,
+              f"granularity='expert' drifted {expert_drift!r} tokens/s "
+              "from the committed offload-sweep artifact (must be "
+              "exactly 0 — the layered refactor may not move the "
+              "whole-expert path)")
+    for b in batches:
+        _gate(unhid[("layer", "on", b)] < unhid[("expert", "on", b)],
+              f"layered streaming did not lower unhidden fetch at B={b}: "
+              f"{unhid[('layer', 'on', b)]:.5f} vs "
+              f"{unhid[('expert', 'on', b)]:.5f}")
+        _gate(gains[b] > 1.0,
+              f"layered streaming did not pay at B={b}: "
+              f"{tps[('layer', 'on', b)]:.2f} vs "
+              f"{tps[('expert', 'on', b)]:.2f} tokens/s (x{gains[b]:.4f})")
+        _gate(tps[("layer", "on", b)] > tps[("layer", "off", b)],
+              f"prefetch did not pay at layer granularity, B={b}: "
+              f"on {tps[('layer', 'on', b)]:.2f} vs off "
+              f"{tps[('layer', 'off', b)]:.2f} tokens/s")
+    return rows
+
+
+# --------------------------------------------------------------------- #
 # Chunked-prefill sweep (model clock): queue depth x chunk -> TTFT / TPOT
 # --------------------------------------------------------------------- #
 
@@ -1275,6 +1442,10 @@ SWEEPS = (
     ("offload-sweep", offload_sweep,
      "tiered expert residency: all-hbm drift gate and prefetch-on vs "
      "prefetch-off under a miss-forcing HBM cap"),
+    ("overlap-sweep", overlap_sweep,
+     "layered streaming: layer vs whole-expert residency granularity "
+     "under the miss-forcing cap; whole-expert drift gate and layered "
+     "pricing float-exactness"),
     ("prefill-sweep", prefill_sweep,
      "queue depth x chunk size -> TTFT/TPOT sweep"),
     ("quant-sweep", quant_sweep,

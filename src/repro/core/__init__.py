@@ -11,7 +11,9 @@ from .cost_model import (Hardware, Precision, TPU_V5E, RTX_6000_ADA,
 from .cost_model import (BatchCostOracle, Calibration, ExpertPlacement,
                          a2a_bytes, expected_emitted,
                          expected_emitted_curve,
-                         expected_unique_experts_sharded)
+                         expected_unique_experts_sharded,
+                         fetch_hide_schedule, fetch_time_layered,
+                         moe_hide_fracs)
 from .manager import BASELINE, TEST, SET, CascadeConfig, SpeculationManager
 from .planner import (ADMIT, DEFER, SHED, AdmissionConstraint,
                       AdmissionDecision, BatchPlan, BatchSpecPlanner,
@@ -20,7 +22,8 @@ from .planner import (ADMIT, DEFER, SHED, AdmissionConstraint,
                       MemoryCapConstraint, PlanDecision, PlannerConfig,
                       PredictiveTTFTAdmission, SLOTpotConstraint,
                       greedy_allocate)
-from .residency import ResidencyState, expert_hbm_bytes
+from .residency import (ResidencyState, expert_hbm_bytes,
+                        moe_layer_count)
 from .slo import (LATENCY, THROUGHPUT, RequestSLO, tpot_within,
                   ttft_violated)
 from .utility import IterationRecord, UtilityAnalyzer
@@ -42,6 +45,7 @@ __all__ = [
     "MemoryCapConstraint", "FetchDeadlineConstraint",
     "AdmissionConstraint", "AdmissionDecision", "PredictiveTTFTAdmission",
     "ADMIT", "DEFER", "SHED",
-    "ResidencyState", "expert_hbm_bytes",
+    "ResidencyState", "expert_hbm_bytes", "moe_layer_count",
+    "fetch_hide_schedule", "fetch_time_layered", "moe_hide_fracs",
     "DraftYieldModel",
 ]

@@ -899,6 +899,150 @@ def _fetch_time(residency, hw: Hardware, per_shard_active, per_shard_miss,
     return miss, t_fetch, t_unhidden
 
 
+def moe_hide_fracs(cfg) -> list:
+    """Per-MoE-layer fraction of a pass that runs before that layer's FFN
+    first reads expert weights: (layer_index + 0.5) / n_layers for each
+    MoE layer, in stack order (the +0.5: expert weights are consumed by
+    the FFN sub-layer, roughly half a layer after its attention block
+    starts). `fracs[0]` is PR 7's `pre_moe_frac`; the full list is the
+    layered fetch pipeline's compute-overlap ladder — layer l's slices
+    have until frac_l of the pass to arrive, not just the pass start
+    (docs/offload.md, layered streaming). Monotone in l by construction."""
+    kinds = cfg.layer_kinds()
+    moe_idx = [i for i, k in enumerate(kinds) if k in ("A", "X")]
+    if not moe_idx or not cfg.is_moe:
+        return []
+    return [(i + 0.5) / len(kinds) for i in moe_idx]
+
+
+def fetch_hide_schedule(cfg, base: float, t_basis: float) -> list:
+    """Per-MoE-layer fetch-hide windows [L]: layer l's staged fetches
+    overlap the shared `base` window (draft+sample, plus any double-buffer
+    credit from the previous pass's tail) AND the cumulative compute of
+    the layers ahead of l in the current pass — `frac_l * t_basis`, with
+    `t_basis` the pass's fetch-free priced floor. This is the schedule
+    `batch_iteration_time`/`BatchCostOracle` price layered fetches
+    against and the engine's prefetch stage measures with; it is
+    nondecreasing in l (deeper layers hide more), which a tier-1 test
+    pins."""
+    return [base + f * t_basis for f in moe_hide_fracs(cfg)]
+
+
+def fetch_time_layered(residency, hw: Hardware, per_shard_active,
+                       per_shard_miss, fetch_hide, staged_per_shard=None):
+    """Host->HBM fetch pricing generalized to the residency's granularity
+    (docs/offload.md, layered streaming).
+
+    Under granularity="expert" this delegates verbatim to `_fetch_time` —
+    same expressions, same float-op order, so whole-expert pricing is
+    bit-identical to PR 7's (`fetch_hide` must be the scalar window).
+
+    Under granularity="layer" the fetch is a layer pipeline: shard s must
+    have layer l's missing slices across the link before layer l's FFN
+    runs, but everything fetched for layer l overlaps the compute of
+    layers < l. With R_{s,l} = cumulative fetch seconds of layers <= l on
+    shard s's independent link and hide_l the per-layer window
+    (`fetch_hide` a scalar — replicated — or a length-L schedule from
+    `fetch_hide_schedule`):
+
+        R_{s,l}    = (sum_{j<=l} miss_{s,j}) * unit_bytes / host_bw
+        t_unhidden = max(0, max_{s,l} (R_{s,l} - hide_eff_l))
+        t_fetch    = max_s R_{s,L-1}
+
+    Misses come measured (`per_shard_miss`, [S] rows of [L] per-layer
+    counts) or from the residency's analytic
+    `expected_layer_misses(per_shard_active)`. `staged_per_shard` ([S]
+    rows of [L] staged unit counts, engine-measured) caps the credit
+    honestly, exactly like PR 7's scalar cap: layer l's window cannot
+    exceed the link time of the bytes actually staged for layers <= l —
+    hide_eff_l = min(hide_l, max_s(cum_staged_{s,l}) * unit_bytes /
+    host_bw) — because demand misses are discovered at routing time
+    inside the pass and can never borrow the overlap. The analytic
+    callers (oracle, planner) pass None and price the uncapped schedule.
+
+    The ONE implementation shared by `batch_iteration_time` and
+    `BatchCostOracle.t_batch` in layer mode, keeping the two float-exact.
+    Returns (miss_totals [S], t_fetch, t_unhidden, info) with
+    info = {"t_fetch_by_layer": [L], "miss_by_layer": [S][L]} (info is
+    None under granularity="expert")."""
+    granularity = getattr(residency, "granularity", "expert")
+    if granularity != "layer":
+        if not isinstance(fetch_hide, (int, float)):
+            raise ValueError(
+                "a fetch_hide schedule needs granularity='layer' "
+                "residency units; whole-expert residency prices one "
+                "scalar window")
+        miss, t_fetch, t_unhid = _fetch_time(residency, hw,
+                                             per_shard_active,
+                                             per_shard_miss, fetch_hide)
+        return miss, t_fetch, t_unhid, None
+    if hw.host_bw <= 0:
+        raise ValueError(
+            f"hardware {hw.name!r} has no host link (host_bw=0) but the "
+            "placement has host-tier experts; give the Hardware a host_bw "
+            "figure to price offload fetches")
+    n_l = residency.n_unit_layers
+    if isinstance(fetch_hide, (int, float)):
+        hide = [float(fetch_hide)] * n_l
+    else:
+        hide = [float(h) for h in fetch_hide]
+        if len(hide) != n_l:
+            raise ValueError(f"{len(hide)} fetch-hide windows vs "
+                             f"{n_l} MoE layers")
+    if per_shard_miss is not None:
+        if len(per_shard_miss) != len(per_shard_active):
+            raise ValueError(f"{len(per_shard_miss)} miss rows vs "
+                             f"{len(per_shard_active)} shards")
+        miss = []
+        for row in per_shard_miss:
+            row = [max(float(m), 0.0) for m in row]
+            if len(row) != n_l:
+                raise ValueError(f"{len(row)} per-layer miss counts vs "
+                                 f"{n_l} MoE layers")
+            miss.append(row)
+    else:
+        miss = residency.expected_layer_misses(per_shard_active)
+    ub, bw = residency.expert_bytes, hw.host_bw
+    # honest staged-bytes cap on the window, cumulative through layer l
+    # (a layer's credit can ride on earlier layers' staged bytes — the
+    # link drains in nomination order — but never on bytes nobody staged)
+    cap = None
+    if staged_per_shard is not None:
+        cum = []
+        for row in staged_per_shard:
+            c, tot = [], 0.0
+            for v in row:
+                tot += float(v)
+                c.append(tot)
+            cum.append(c)
+        cap = [max(cum[s][lyr] for s in range(len(cum))) * ub / bw
+               for lyr in range(n_l)]
+    hide_eff = (hide if cap is None else
+                [min(h, c) for h, c in zip(hide, cap)])
+    t_fetch = 0.0
+    t_unhid = 0.0
+    t_by_layer = [0.0] * n_l
+    miss_tot = []
+    for s, row in enumerate(miss):
+        c = 0.0
+        r_last = 0.0
+        for lyr, m in enumerate(row):
+            c += m
+            r = c * ub / bw
+            slack = r - hide_eff[lyr]
+            if slack > t_unhid:
+                t_unhid = slack
+            lt = m * ub / bw
+            if lt > t_by_layer[lyr]:
+                t_by_layer[lyr] = lt
+            r_last = r
+        if r_last > t_fetch:
+            t_fetch = r_last
+        miss_tot.append(c)
+    return miss_tot, t_fetch, t_unhid, {"t_fetch_by_layer": t_by_layer,
+                                        "miss_by_layer": miss}
+
+
 def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
                          context_lens, *, unique_experts: float = None,
                          per_request_unique=None, affinity: float = 0.0,
@@ -909,7 +1053,7 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
                          assume_balanced: bool = False,
                          calibration: Optional[Calibration] = None,
                          residency=None, per_shard_miss=None,
-                         fetch_hide: float = 0.0,
+                         fetch_hide=0.0, staged_per_shard=None,
                          precision: Optional[Precision] = None) -> dict:
     """Seconds for one *shared* verification pass over B requests, request i
     contributing n_i = tokens_per_request[i] in-flight tokens against its own
@@ -963,6 +1107,14 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
     overrides the analytic miss curve with measured counts, the residency
     analogue of `per_shard_unique`. `residency=None` (or an all-hbm
     placement) is bit-identical to the fetch-free model.
+
+    A `granularity="layer"` residency switches the fetch term to the
+    layer-pipelined schedule (`fetch_time_layered`): `fetch_hide` may
+    then be a per-MoE-layer sequence (`fetch_hide_schedule`),
+    `per_shard_miss` becomes [S] rows of [L] per-layer measured counts,
+    and `staged_per_shard` ([S][L] staged unit counts) caps the window at
+    the bytes actually prefetched, per layer — the honest-credit rule PR
+    7 applied as one scalar. The result gains `t_fetch_by_layer`.
 
     Returns iteration_time's keys plus `per_request` (list of dicts with
     t_attr / bytes_attr / marginal_experts) and `n_requests`; sharded
@@ -1046,12 +1198,21 @@ def batch_iteration_time(cfg, hw: Hardware, tokens_per_request,
         # the calibration was fit on fetch-free passes, so the fetch term
         # must not be scaled by it
         act = shard_info["shard_unique"] if sharded else [union]
-        f_miss, t_fetch, t_unhid = _fetch_time(residency, hw, act,
-                                               per_shard_miss, fetch_hide)
+        if getattr(residency, "granularity", "expert") == "layer":
+            f_miss, t_fetch, t_unhid, lay = fetch_time_layered(
+                residency, hw, act, per_shard_miss, fetch_hide,
+                staged_per_shard)
+        else:
+            f_miss, t_fetch, t_unhid = _fetch_time(residency, hw, act,
+                                                   per_shard_miss,
+                                                   fetch_hide)
+            lay = None
         t = t + t_unhid
         fetch_info = {"fetch_miss": f_miss, "t_fetch": t_fetch,
                       "t_fetch_unhidden": t_unhid,
                       "fetch_bytes": sum(f_miss) * residency.expert_bytes}
+        if lay is not None:
+            fetch_info["t_fetch_by_layer"] = list(lay["t_fetch_by_layer"])
 
     # ---- marginal-bytes attribution -------------------------------------
     # non-bytes terms (fixed overhead + the sharded pass's collective) are
@@ -1143,10 +1304,13 @@ class BatchCostOracle:
 
     `residency` (a `ResidencyState` over a host-tiered placement) adds the
     analytic non-overlapped fetch term under a `fetch_hide` overlap window
-    — same `_fetch_time` implementation as `batch_iteration_time`, so the
-    float-exactness contract extends to fetch-priced passes. The planner's
-    residency constraints query `shard_unique(ns)` / `fetch_unhidden(ns)`
-    for the cap and deadline checks (docs/offload.md)."""
+    — same `_fetch_time` implementation as `batch_iteration_time` (and
+    the same `fetch_time_layered` under a granularity="layer" residency,
+    where `fetch_hide` is the per-MoE-layer schedule), so the
+    float-exactness contract extends to fetch-priced passes at both
+    granularities. The planner's residency constraints query
+    `shard_unique(ns)` / `fetch_unhidden(ns)` for the cap and deadline
+    checks (docs/offload.md)."""
 
     def __init__(self, cfg, hw: Hardware, context_lens, *,
                  affinity: float = 0.0, window: int = 0,
@@ -1177,9 +1341,15 @@ class BatchCostOracle:
         if placement is not None and cfg.is_moe:
             placement.validate_experts(cfg.num_experts)
         self.residency = residency
+        #: overlap window the fetch term hides behind — one scalar under
+        #: granularity="expert", a per-MoE-layer schedule (list, from
+        #: `fetch_hide_schedule`) under granularity="layer"
         self.fetch_hide = fetch_hide
         self._fetch = (residency is not None and cfg.is_moe
                        and residency.has_host_tier)
+        self._layered = (self._fetch and
+                         getattr(residency, "granularity", "expert")
+                         == "layer")
         if self._fetch and hw.host_bw <= 0:
             raise ValueError(
                 f"hardware {hw.name!r} has no host link (host_bw=0) but "
@@ -1249,8 +1419,12 @@ class BatchCostOracle:
             t = self.calibration.apply(t, t_a2a)
         if self._fetch:
             act = est["per_shard"] if self._sharded else [union]
-            _, _, t_unhid = _fetch_time(self.residency, hw, act, None,
-                                        self.fetch_hide)
+            if self._layered:
+                _, _, t_unhid, _ = fetch_time_layered(
+                    self.residency, hw, act, None, self.fetch_hide)
+            else:
+                _, _, t_unhid = _fetch_time(self.residency, hw, act, None,
+                                            self.fetch_hide)
             t = t + t_unhid
         return t
 
@@ -1280,8 +1454,13 @@ class BatchCostOracle:
         if not self._fetch:
             return 0.0
         act = self.shard_unique(tokens_per_request)
-        _, _, t_unhid = _fetch_time(self.residency, self.hw, act, None,
-                                    self.fetch_hide)
+        if self._layered:
+            _, _, t_unhid, _ = fetch_time_layered(self.residency, self.hw,
+                                                  act, None,
+                                                  self.fetch_hide)
+        else:
+            _, _, t_unhid = _fetch_time(self.residency, self.hw, act, None,
+                                        self.fetch_hide)
         return t_unhid
 
     def predicted_tpot(self, tokens_per_request, emitted_per_request
@@ -1380,15 +1559,22 @@ def prefill_crossover_tokens(cfg, hw: Hardware, context_len: int = 0,
 
 def draft_time(hw: Hardware, k: int, drafter_active_params: int = 0,
                per_token_overhead: float = 2e-5,
-               wb: int = None) -> float:
+               wb: int = None,
+               precision: Optional[Precision] = None) -> float:
     """Drafting cost: ~free for n-gram (CPU table lookup), weight-bound for
     model drafters (EAGLE-style). Drafter weights price at the dense class
-    (`wb=None` -> `Precision.DEFAULT.dense`) — quantizing the drafter is a
-    ROADMAP residual, not part of the expert path."""
+    of `precision` (docs/quantization.md) — a quantized drafter (e.g.
+    `Precision(dense=1, ...)` for int8 drafter storage) halves the model
+    term's bytes, shrinking the speculation overhead every utility ratio
+    and fetch-hide window is built on. `precision=None` prices at
+    `Precision.DEFAULT.dense` (bf16), bit-identical to before; an explicit
+    `wb` byte width overrides the precision class, matching the byte
+    helpers' precedence."""
     if k <= 0:
         return 0.0
     if wb is None:
-        wb = Precision.DEFAULT.dense
+        wb = (precision.dense if precision is not None
+              else Precision.DEFAULT.dense)
     model = (k * drafter_active_params * wb / hw.hbm_bw
              if drafter_active_params else 0.0)
     return model + k * per_token_overhead

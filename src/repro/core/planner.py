@@ -594,7 +594,8 @@ class BatchSpecPlanner:
                  placement: Optional[cm.ExpertPlacement] = None,
                  calibration: Optional[cm.Calibration] = None,
                  residency=None,
-                 precision: Optional[cm.Precision] = None):
+                 precision: Optional[cm.Precision] = None,
+                 drafter_precision: Optional[cm.Precision] = None):
         self.cfg = cfg
         self.hw = hw or cm.TPU_V5E
         self.affinity = affinity
@@ -605,6 +606,10 @@ class BatchSpecPlanner:
         #: with — quantized experts move the break-even water level and
         #: the fetch deadlines; None is bit-identical to the bf16 default
         self.precision = precision
+        #: bytes-per-param spec for the *drafter's* weights (priced at the
+        #: dense class — an int8 drafter halves the draft window the fetch
+        #: scheduler hides behind); None is bit-identical to bf16
+        self.drafter_precision = drafter_precision
         #: wall-clock residual correction (cost_model.Calibration, fitted
         #: by --calibrate) applied to every oracle this planner prices
         #: with; None is bit-identical to the uncalibrated planner
@@ -731,11 +736,33 @@ class BatchSpecPlanner:
             # rejection sampling happen off the verification pass's
             # critical path, so the longest row's draft+sample span (at
             # its *asked* K — grants are not known yet) bounds what the
-            # prefetcher overlaps (docs/offload.md)
-            fetch_hide = max(
-                (cm.draft_time(self.hw, requested[i])
+            # prefetcher overlaps; on top of that, a fetch for layer l's
+            # experts also hides behind the compute of layers < l in the
+            # same pass, priced from a fetch-free preliminary oracle's
+            # base-pass time (docs/offload.md)
+            base_hide = max(
+                (cm.draft_time(self.hw, requested[i],
+                               precision=self.drafter_precision)
                  + cm.sample_time(requested[i]) for i in decode),
                 default=0.0)
+            t_pre = 0.0
+            if decode or pre:
+                pre_oracle = cm.BatchCostOracle(
+                    self.cfg, self.hw, context_lens,
+                    affinity=self.affinity, window=self.window,
+                    prefill_tokens=[pre.get(i, 0) for i in range(b)],
+                    placement=self.placement, shard_weights=sw,
+                    assume_balanced=not cfgp.shard_aware,
+                    calibration=self.calibration,
+                    precision=self.precision)
+                t_pre = pre_oracle.t_batch(base_ns)
+            if self.residency.granularity == "layer":
+                fetch_hide = cm.fetch_hide_schedule(
+                    self.cfg, base_hide, t_pre)
+            else:
+                fracs = cm.moe_hide_fracs(self.cfg)
+                fetch_hide = base_hide + (fracs[0] * t_pre
+                                          if fracs else 0.0)
         oracle = cm.BatchCostOracle(
             self.cfg, self.hw, context_lens, affinity=self.affinity,
             window=self.window,

@@ -23,18 +23,25 @@ from typing import Optional
 
 from .cost_model import Precision
 
-__all__ = ["ResidencyState", "expert_hbm_bytes"]
+__all__ = ["ResidencyState", "expert_hbm_bytes", "moe_layer_count"]
 
 
 def expert_hbm_bytes(cfg, weight_bytes: int = None,
-                     precision: Optional[Precision] = None) -> float:
+                     precision: Optional[Precision] = None,
+                     per_layer: bool = False) -> float:
     """HBM bytes of ONE expert across all MoE layers — the unit of
-    residency accounting (an expert is fetched/evicted whole: its slice in
-    every MoE layer moves together, matching the per-expert granularity of
-    `_expert_read_bytes`). `precision` prices the expert class — quantized
-    experts shrink both the fetch bytes a host-tier miss costs AND the
-    footprint a cache slot holds, so the same cap fits more of them
-    (docs/quantization.md)."""
+    whole-expert residency accounting (an expert is fetched/evicted whole:
+    its slice in every MoE layer moves together, matching the per-expert
+    granularity of `_expert_read_bytes`). `per_layer=True` drops the
+    layer-count factor and returns the bytes of one expert's slice in ONE
+    MoE layer — the unit of `granularity="layer"` residency, where each
+    (layer, expert) slice moves independently (docs/offload.md). The two
+    are exact multiples: whole == n_moe_layers * per_layer bitwise (both
+    are integer-valued floats), which is what lets the layered pricing
+    degrade bit-exactly to the whole-expert path. `precision` prices the
+    expert class — quantized experts shrink both the fetch bytes a
+    host-tier miss costs AND the footprint a cache slot holds, so the same
+    cap fits more of them (docs/quantization.md)."""
     if not cfg.is_moe:
         return 0.0
     if weight_bytes is None:
@@ -42,7 +49,17 @@ def expert_hbm_bytes(cfg, weight_bytes: int = None,
                         else Precision.DEFAULT.expert)
     mult = 3 if cfg.activation == "swiglu" else 2
     n_moe = sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
-    return float(n_moe * mult * cfg.d_model * cfg.moe_d_ff * weight_bytes)
+    per = float(mult * cfg.d_model * cfg.moe_d_ff * weight_bytes)
+    return per if per_layer else float(n_moe) * per
+
+
+def moe_layer_count(cfg) -> int:
+    """Number of MoE layers in the stack — the layer axis of
+    `granularity="layer"` residency units and of the layered fetch
+    schedule (`cost_model.fetch_time_layered`)."""
+    if not cfg.is_moe:
+        return 0
+    return sum(1 for k in cfg.layer_kinds() if k in ("A", "X"))
 
 
 class ResidencyState:
@@ -71,17 +88,47 @@ class ResidencyState:
       buffer (used experts installed, unused discarded).
 
     Counters (`hits`, `misses`, `evictions`, `bytes_fetched`) feed
-    `StepTelemetry` and the sweep artifacts."""
+    `StepTelemetry` and the sweep artifacts.
+
+    `granularity` picks the residency *unit* (docs/offload.md, layered
+    streaming): `"expert"` (the default) moves an expert's slices across
+    all MoE layers as one unit keyed by the expert id — PR 7's contract,
+    bit-identical to before. `"layer"` moves each (layer, expert) slice
+    independently: unit keys become `(moe_layer, expert)` tuples, the unit
+    footprint is `expert_hbm_bytes(cfg, per_layer=True)`, staging/LRU/EMA
+    state is per unit, and the same byte cap holds `n_moe_layers` times as
+    many (smaller) units — the granularity the layer-pipelined fetch
+    schedule needs, since layer l's slices have until layer l's own FFN
+    (not the pass start) to arrive."""
+
+    GRANULARITIES = ("expert", "layer")
 
     def __init__(self, placement, cfg=None, *,
                  expert_bytes: Optional[float] = None,
                  cap_bytes=None, ema_decay: float = 0.8,
                  precision: Optional[Precision] = None,
-                 hw=None, strict: bool = False):
-        if expert_bytes is None:
+                 hw=None, strict: bool = False,
+                 granularity: str = "expert"):
+        if granularity not in self.GRANULARITIES:
+            raise ValueError(f"unknown granularity {granularity!r} "
+                             f"(expected one of {self.GRANULARITIES})")
+        self.granularity = granularity
+        if granularity == "layer":
             if cfg is None:
-                raise ValueError("need cfg or expert_bytes to size experts")
-            expert_bytes = expert_hbm_bytes(cfg, precision=precision)
+                raise ValueError(
+                    "granularity='layer' needs cfg — the residency must "
+                    "know the MoE layer count to enumerate its units")
+            self._unit_layers = max(moe_layer_count(cfg), 1)
+            if expert_bytes is None:
+                expert_bytes = expert_hbm_bytes(cfg, per_layer=True,
+                                                precision=precision)
+        else:
+            self._unit_layers = 1
+            if expert_bytes is None:
+                if cfg is None:
+                    raise ValueError(
+                        "need cfg or expert_bytes to size experts")
+                expert_bytes = expert_hbm_bytes(cfg, precision=precision)
         if expert_bytes <= 0:
             raise ValueError(f"non-positive expert_bytes {expert_bytes}")
         if not 0.0 <= ema_decay < 1.0:
@@ -116,27 +163,42 @@ class ResidencyState:
                 for x in (s if isinstance(s, tuple) else (s,)):
                     self._pinned[x] += 1
         # host-tier experts homed per shard (host experts are never
-        # replicated, so the home is a plain int)
+        # replicated, so the home is a plain int). Residency *units* are
+        # expert ids under granularity="expert" and (moe_layer, expert)
+        # tuples under granularity="layer" — every cache/staging/EMA
+        # structure below is keyed by unit, and `_home` maps units to
+        # their shard. `_expert_home` keeps the expert-level view both
+        # modes share (H_s for the miss curve, is_resident).
         self._host_of_shard = [[] for _ in range(s_n)]
+        self._expert_home = {}
         self._home = {}
         for e, (s, t) in enumerate(zip(placement.primary_shard_of, tiers)):
             if t == "host":
                 self._host_of_shard[s].append(e)
-                self._home[e] = s
+                self._expert_home[e] = s
+                if self.granularity == "layer":
+                    for lyr in range(self._unit_layers):
+                        self._home[(lyr, e)] = s
+                else:
+                    self._home[e] = s
         caps = self._normalize_caps(cap_bytes, s_n)
         self._slots = []
         for s in range(s_n):
+            n_units = self._unit_layers * len(self._host_of_shard[s])
             if caps[s] is None:
-                self._slots.append(len(self._host_of_shard[s]))
+                self._slots.append(n_units)
                 continue
-            pinned_b = self._pinned[s] * self.expert_bytes
+            # the pinned footprint is whole experts regardless of the
+            # residency granularity: hbm-tier experts never move per layer
+            pinned_b = self._pinned[s] * self._unit_layers \
+                * self.expert_bytes
             if caps[s] < pinned_b:
                 raise ValueError(
                     f"shard {s}: cap {caps[s]:.3e} B below the pinned "
                     f"hbm-tier footprint {pinned_b:.3e} B")
             self._slots.append(
                 min(int((caps[s] - pinned_b) // self.expert_bytes),
-                    len(self._host_of_shard[s])))
+                    n_units))
         self.cap_bytes = caps
         # cache: per shard, resident host experts -> last-use step
         self._cache = [dict() for _ in range(s_n)]
@@ -172,42 +234,83 @@ class ResidencyState:
         return self.placement.n_shards
 
     @property
+    def n_unit_layers(self) -> int:
+        """MoE layers per residency unit axis: 1 under
+        granularity="expert" (an expert's layers move together), the MoE
+        layer count under granularity="layer"."""
+        return self._unit_layers
+
+    @property
     def slots(self):
-        """Cache slots for host-tier experts per shard (capped at the
-        shard's host population)."""
+        """Cache slots for host-tier units per shard (capped at the
+        shard's host unit population). Units are whole experts under
+        granularity="expert", (layer, expert) slices under "layer"."""
         return tuple(self._slots)
 
     @property
     def capacity_experts(self):
         """Max simultaneously HBM-resident experts per shard — pinned
-        hbm-tier residents plus host-tier cache slots. The activated-load
-        ceiling replica rebalancing must respect (`_rebalance_replicas`)."""
+        hbm-tier residents plus host-tier cache slots, in *expert
+        equivalents* (layer-granularity slots count 1/n_moe_layers of an
+        expert each; at exact multiples this is bitwise the whole-expert
+        figure). The activated-load ceiling replica rebalancing must
+        respect (`_rebalance_replicas`)."""
+        if self.granularity == "layer":
+            return [float(p) + sl / self._unit_layers
+                    for p, sl in zip(self._pinned, self._slots)]
         return [float(p + sl) for p, sl in zip(self._pinned, self._slots)]
 
     @property
     def resident_counts(self):
         """Experts *currently* HBM-resident per shard: pinned + cached —
-        the live counterpart of `ExpertPlacement.resident_counts`."""
+        the live counterpart of `ExpertPlacement.resident_counts`. Under
+        granularity="layer" the cached term counts expert equivalents
+        (cached units / n_moe_layers), so partial experts show as
+        fractions."""
+        if self.granularity == "layer":
+            return tuple(p + len(c) / self._unit_layers
+                         for p, c in zip(self._pinned, self._cache))
         return tuple(p + len(c) for p, c in zip(self._pinned, self._cache))
 
-    def is_resident(self, expert: int) -> bool:
+    def is_resident(self, expert) -> bool:
         """True when `expert`'s weights are in HBM right now (hbm-tier
-        experts always are)."""
-        s = self._home.get(expert)
+        experts always are). Accepts an expert id (under
+        granularity="layer": resident iff ALL its layer slices are) or a
+        (layer, expert) unit key."""
+        if isinstance(expert, tuple):
+            s = self._home.get(expert)
+            if s is None:
+                return True
+            return expert in self._cache[s]
+        s = self._expert_home.get(expert)
         if s is None:
             return True
+        if self.granularity == "layer":
+            return all((lyr, expert) in self._cache[s]
+                       for lyr in range(self._unit_layers))
         return expert in self._cache[s]
 
     # ---- analytic miss curve (cost-model side) ------------------------ #
 
     def expected_misses(self, per_shard_active):
         """Steady-state expected host-fetch count per shard when the pass
-        activates `per_shard_active[s]` experts on shard s: a fraction
-        H_s/E_s of the activated set is host-tier (routing is tier-blind),
-        and a random host expert is resident with probability
-        slots_s/H_s, so  miss_s = acts_s * (H_s/E_s) * (1 - slots_s/H_s).
+        activates `per_shard_active[s]` experts on shard s (mean per
+        layer): a fraction H_s/E_s of the activated set is host-tier
+        (routing is tier-blind), and a random host expert is resident with
+        probability slots_s/H_s, so
+        miss_s = acts_s * (H_s/E_s) * (1 - slots_s/H_s).
         Uncapped shards (slots_s == H_s) miss nothing — the degradation
-        tier the drift gates pin."""
+        tier the drift gates pin.
+
+        Under granularity="layer" the same curve generalizes to units:
+        each of the n_l MoE layers activates acts_s experts, a random host
+        *unit* is resident with probability slots_s/(n_l*H_s), and the
+        returned figure is the expected missing UNIT count (the sum over
+        `expected_layer_misses` rows) — the count that, times the per-unit
+        `expert_bytes`, prices the shard's total fetch bytes."""
+        if self.granularity == "layer":
+            return [sum(row) for row in
+                    self.expected_layer_misses(per_shard_active)]
         if len(per_shard_active) != self.n_shards:
             raise ValueError(f"{len(per_shard_active)} activation counts "
                              f"vs {self.n_shards} shards")
@@ -224,21 +327,68 @@ class ResidencyState:
             miss.append(max(m, 0.0))
         return miss
 
+    def expected_layer_misses(self, per_shard_active):
+        """Per-(shard, MoE layer) expected missing unit counts [S][L] —
+        the analytic input of the layered fetch pipeline
+        (`cost_model.fetch_time_layered`). Routing is layer-blind in the
+        analytic view, so every layer sees the same activated-expert count
+        and the per-layer miss is uniform:
+        m_{s,l} = acts_s * (H_s/E_s) * (1 - slots_s/(n_l*H_s)).
+        Uncapped shards (slots == n_l*H) miss nothing. Only meaningful
+        under granularity="layer" (raises otherwise — whole-expert units
+        have no layer axis)."""
+        if self.granularity != "layer":
+            raise ValueError("expected_layer_misses needs "
+                             "granularity='layer' residency units")
+        if len(per_shard_active) != self.n_shards:
+            raise ValueError(f"{len(per_shard_active)} activation counts "
+                             f"vs {self.n_shards} shards")
+        counts = self.placement.counts
+        n_l = self._unit_layers
+        out = []
+        for s, acts in enumerate(per_shard_active):
+            h_s = len(self._host_of_shard[s])
+            e_s = counts[s]
+            if h_s == 0 or e_s == 0 or acts <= 0:
+                out.append([0.0] * n_l)
+                continue
+            resident_frac = min(self._slots[s] / (n_l * h_s), 1.0)
+            m = float(acts) * (h_s / e_s) * (1.0 - resident_frac)
+            out.append([max(m, 0.0)] * n_l)
+        return out
+
     # ---- cache mutation (engine side) --------------------------------- #
 
+    def _key(self, u):
+        """Normalize a residency unit key: an expert id under
+        granularity="expert", a (moe_layer, expert) tuple under "layer".
+        Mixing the two is a caller bug, not a miss — it raises."""
+        if self.granularity == "layer":
+            if not isinstance(u, tuple) or len(u) != 2:
+                raise ValueError(
+                    f"granularity='layer' residency units are (layer, "
+                    f"expert) tuples, got {u!r}")
+            return (int(u[0]), int(u[1]))
+        if isinstance(u, tuple):
+            raise ValueError(
+                f"granularity='expert' residency units are expert ids, "
+                f"got the tuple {u!r}")
+        return int(u)
+
     def access(self, experts, step: int):
-        """Classify activated experts at pass time: host-tier residents
-        are hits (LRU-touched), staged experts are hits too (the pass
+        """Classify activated units at pass time: host-tier residents
+        are hits (LRU-touched), staged units are hits too (the pass
         reads them straight from the staging buffer — the conversion a
         prefetch exists for) and are marked for installation, host-tier
         absentees are demand misses the caller should `fetch`. Returns
-        (hit_ids, missing_ids)."""
+        (hit_ids, missing_ids). Units follow the granularity: expert ids,
+        or (layer, expert) tuples."""
         hit, missing = [], []
         for e in experts:
-            s = self._home.get(int(e))
+            e = self._key(e)
+            s = self._home.get(e)
             if s is None:
                 continue
-            e = int(e)
             if e in self._cache[s]:
                 self._cache[s][e] = step
                 hit.append(e)
@@ -252,7 +402,7 @@ class ResidencyState:
         return hit, missing
 
     def fetch(self, experts, step: int, *, stage=False):
-        """Bring host-tier `experts` over the host link (demand or
+        """Bring host-tier units over the host link (demand or
         prefetch). Returns {"fetched": n, "per_shard": [S], "bytes": f}.
 
         Demand mode (stage=False): the expert is installed in its
@@ -275,7 +425,7 @@ class ResidencyState:
         per_shard = [0] * self.n_shards
         fetched = 0
         for e in experts:
-            e = int(e)
+            e = self._key(e)
             s = self._home.get(e)
             if s is None or e in self._cache[s] or e in self._staged[s]:
                 continue
@@ -306,7 +456,7 @@ class ResidencyState:
         coldest resident, exactly as a demand fetch would have), unused
         ones are discarded (their only cost was the billed prefetch
         bytes — the cache trajectory stays untouched)."""
-        active = {int(e) for e in active_experts}
+        active = {self._key(e) for e in active_experts}
         d = self.ema_decay
         for e in self._ema:
             self._ema[e] = d * self._ema[e] + \
@@ -334,4 +484,5 @@ class ResidencyState:
                 "bytes_fetched": self.bytes_fetched,
                 "hit_rate": (self.hits / denom) if denom else 1.0,
                 "resident_counts": list(self.resident_counts),
-                "slots": list(self.slots)}
+                "slots": list(self.slots),
+                "granularity": self.granularity}

@@ -363,6 +363,11 @@ def _attn_block(cfg, p, x, lc, ctx, kind):
             hits = jnp.zeros((e + 1,), jnp.int32).at[
                 flat.reshape(-1)].add(1)
             aux["experts_active"] = hits[:e] > 0
+            if ctx.get("want_moe_h"):
+                # the MoE input (post-ln2 hidden state) feeding this
+                # layer's router — the layered prefetcher probes NEXT
+                # pass's per-layer routing from it (docs/offload.md)
+                aux["moe_h"] = h2
             sid = ctx.get("ep_shard_ids")
             if sid is not None:
                 # EP-shard accounting: the hottest shard's local activated
@@ -561,7 +566,7 @@ def _run_pattern(cfg, params, x, cache, ctx):
 
 def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
              window, enc_out, moe_exact, token_mask=None, ep_shard_ids=None,
-             ep_n_shards=None, moe_packed=False):
+             ep_n_shards=None, moe_packed=False, want_moe_h=False):
     x = _embed_inputs(cfg, params, tokens, embeds, seq_pos)
     n_inflight = x.shape[0] * x.shape[1]
     if not moe_exact:
@@ -580,7 +585,8 @@ def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
            "cache_pos": None if cache is None else cache.get("pos"),
            "slots": None, "slots_bt": None, "offset": None, "t_w": 0,
            "token_mask": token_mask, "ep_shard_ids": ep_shard_ids,
-           "ep_n_shards": ep_n_shards, "moe_packed": moe_packed}
+           "ep_n_shards": ep_n_shards, "moe_packed": moe_packed,
+           "want_moe_h": want_moe_h}
     if cache is not None and "pos" in cache:
         t = x.shape[1]
         r = cache["pos"].shape[1]
@@ -627,6 +633,8 @@ def _forward(cfg, params, tokens, *, embeds, cache, mode, seq_pos, rope_pos,
             aux["unique_experts_row"] = ys["aux"]["unique_experts_row"]  # [L,B]
         if "experts_active" in ys["aux"]:
             aux["experts_active"] = ys["aux"]["experts_active"]  # [L,E]
+        if "moe_h" in ys["aux"]:
+            aux["moe_h"] = ys["aux"]["moe_h"]                    # [L,B,T,D]
         if "unique_experts_shard" in ys["aux"]:
             aux["unique_experts_shard"] = \
                 ys["aux"]["unique_experts_shard"]            # [L,S]
@@ -684,7 +692,8 @@ def prefill(cfg, params, tokens, cache, *, embeds=None, rope_pos=None,
 
 def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
                 window: int = 0, moe_exact: bool = True, token_mask=None,
-                ep_shard_ids=None, ep_n_shards=None, moe_packed=False):
+                ep_shard_ids=None, ep_n_shards=None, moe_packed=False,
+                want_moe_h=False):
     """Verify/decode T tokens per row. Single-request caches start every row
     at the scalar cache['length']; per-row caches (init_cache(per_row=True))
     start row b at cache['lengths'][b], which is how a continuous batch
@@ -701,7 +710,10 @@ def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
     passes one); in the traced case `ep_n_shards` must carry the static
     shard count.  `moe_packed=True` runs MoE layers on the union-packed
     verification path (see models/moe.apply_moe) — bit-identical outputs,
-    union-scaled weight traffic.
+    union-scaled weight traffic.  `want_moe_h=True` additionally returns
+    the per-layer MoE inputs (`aux["moe_h"]` [L,B,T,D], the post-ln2
+    hidden states feeding each layer's router) — the layered prefetcher's
+    per-layer probe basis (docs/offload.md).
     Returns (logits [B,T,V], new_cache, aux, staged)."""
     b, t = tokens.shape[:2] if tokens is not None else embeds.shape[:2]
     offs = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
@@ -720,7 +732,8 @@ def decode_step(cfg, params, cache, tokens, *, embeds=None, rope_pos=None,
                                           token_mask=token_mask,
                                           ep_shard_ids=ep_shard_ids,
                                           ep_n_shards=ep_n_shards,
-                                          moe_packed=moe_packed)
+                                          moe_packed=moe_packed,
+                                          want_moe_h=want_moe_h)
     return logits, cache, aux, staged
 
 

@@ -106,23 +106,48 @@ def _stacked_routers(params):
                       if "moe" in bl])
 
 
+def _layer_hist(cfg, idx, mask):
+    """[L,B,T,k] routed indices -> per-layer activation counts [L,E];
+    padding routes to the sentinel bucket e and is dropped."""
+    e = cfg.num_experts
+    idx = jnp.where(mask[None, :, :, None], idx, e)
+    hits = jax.vmap(
+        lambda ix: jnp.zeros((e + 1,), jnp.int32).at[ix].add(1))(
+            idx.reshape(idx.shape[0], -1))
+    return hits[:, :e]
+
+
 def _router_probe(cfg, params, toks, mask):
-    """Predicted expert-activation counts [E] of a span batch (routed
-    (token, layer) slots per expert — the prefetcher's nomination signal
-    and confidence ordering): embed the tokens and run every MoE layer's
-    router over the raw embeddings —
+    """Predicted per-layer expert-activation counts [L,E] of a span batch
+    (routed (token, layer) slots per expert — the prefetcher's nomination
+    signal and confidence ordering): embed the tokens and run every MoE
+    layer's router over the raw embeddings —
     the speculation-guided prefetch predictor (docs/offload.md). An
     approximation by construction (the real pass routes each layer's
     hidden state, not the embedding); prediction errors surface as demand
-    misses, never as wrong tokens. Padding routes to the sentinel bucket."""
+    misses, never as wrong tokens. Whole-expert callers sum over the
+    layer axis — the same integers PR 7's flat [E] histogram counted."""
     routers = _stacked_routers(params)                    # [L, d, E]
     x = params["embed"]["embedding"][toks].astype(jnp.float32)   # [B,T,d]
     logits = jnp.einsum("btd,lde->lbte", x, routers.astype(jnp.float32))
     _, idx = jax.lax.top_k(logits, cfg.experts_per_token)  # [L,B,T,k]
-    e = cfg.num_experts
-    idx = jnp.where(mask[None, :, :, None], idx, e)
-    hits = jnp.zeros((e + 1,), jnp.int32).at[idx.reshape(-1)].add(1)
-    return hits[:e]
+    return _layer_hist(cfg, idx, mask)
+
+
+def _hidden_router_probe(cfg, params, moe_h, mask):
+    """Per-layer activation counts [L,E] from the PREVIOUS pass's
+    per-layer MoE inputs (`decode_step(want_moe_h=True)`'s aux["moe_h"],
+    [L,B,T,d]): route layer l's router over layer l's actual hidden
+    states. Deeper layers' hidden states drift slowly across adjacent
+    decode steps, so last pass's layer-l routing inputs predict THIS
+    pass's layer-l routing far better than raw embeddings do — the
+    layered prefetcher's deep-layer nomination signal, closing the
+    "router probe only sees the embedding" residual (docs/offload.md)."""
+    routers = _stacked_routers(params)                    # [L, d, E]
+    x = moe_h.astype(jnp.float32)                         # [L,B,T,d]
+    logits = jnp.einsum("lbtd,lde->lbte", x, routers.astype(jnp.float32))
+    _, idx = jax.lax.top_k(logits, cfg.experts_per_token)  # [L,B,T,k]
+    return _layer_hist(cfg, idx, mask)
 
 
 def _prefill_clock(cfg, hw, clock: str, n_tokens: int, wall: float, *,
@@ -148,10 +173,14 @@ class ServingEngine:
                  window: int = 0,
                  max_len: int = 2048,
                  temperature: float = 1.0,
-                 seed: int = 0):
+                 seed: int = 0,
+                 drafter_precision: Optional[cm.Precision] = None):
         self.cfg = cfg
         self.params = params
         self.drafter = drafter
+        #: bytes-per-param pricing for the drafter's weight reads (an int8
+        #: drafter halves its window); None prices at bf16, bit for bit
+        self.drafter_precision = drafter_precision
         self.controller_factory = controller_factory or (
             lambda: CascadeController())
         self.clock = clock
@@ -181,7 +210,8 @@ class ServingEngine:
         return r["t_iter"]
 
     def _draft_time(self, k: int) -> float:
-        return cm.draft_time(self.hw, k, self.drafter.active_params)
+        return cm.draft_time(self.hw, k, self.drafter.active_params,
+                             precision=self.drafter_precision)
 
     # ------------------------------------------------------------------ #
 
@@ -386,8 +416,15 @@ class BatchedEngine:
     at pass time are demand-fetched, the coldest residents are evicted
     LRU-by-EMA-load, and the pass is priced with the measured per-shard
     fetch counts (`per_shard_miss`) under the window's `fetch_hide`
-    overlap. An all-hbm residency (or `residency=None`) is the flat
-    engine, bit for bit — token streams and per-step telemetry."""
+    overlap. Under `granularity="layer"` residency units the prefetch
+    stage becomes a layer pipeline (docs/offload.md, layered streaming):
+    per-(layer, expert) slices stage layer by layer, deep layers nominate
+    from the previous pass's per-layer hidden states, and layer l's
+    fetches hide behind the draft window plus the compute of layers < l
+    (double-buffered against the previous pass's tail unless
+    `double_buffer=False`). An all-hbm residency (or `residency=None`)
+    is the flat engine, bit for bit — token streams and per-step
+    telemetry."""
 
     def __init__(self, cfg, params, drafter_factory: Callable = None, *,
                  max_batch: int = 8,
@@ -407,7 +444,9 @@ class BatchedEngine:
                  packed: bool = False,
                  residency=None,
                  prefetch: bool = True,
-                 precision: Optional[cm.Precision] = None):
+                 precision: Optional[cm.Precision] = None,
+                 drafter_precision: Optional[cm.Precision] = None,
+                 double_buffer: bool = True):
         self.cfg = cfg
         self.params = params
         self.drafter_factory = drafter_factory or (lambda: NGramDrafter())
@@ -481,6 +520,22 @@ class BatchedEngine:
         #: bytes-per-param pricing the cost oracle and planner share;
         #: None prices identically to Precision.DEFAULT (bf16)
         self.precision = precision
+        # the drafter's weight pricing must agree the same way: the draft
+        # window is the fetch scheduler's hide budget, and a planner
+        # pricing a bf16 drafter against an int8-drafted engine would
+        # mispredict every fetch deadline
+        if planner is not None:
+            theirs = getattr(planner, "drafter_precision", None)
+            if (drafter_precision or cm.Precision.DEFAULT) != \
+                    (theirs or cm.Precision.DEFAULT):
+                raise ValueError(
+                    f"drafter_precision={drafter_precision!r} contradicts "
+                    f"the supplied planner's "
+                    f"drafter_precision={theirs!r}")
+        #: bytes-per-param pricing for drafter weight reads (an int8
+        #: drafter halves the draft window fetches hide behind); None
+        #: prices at bf16, bit for bit
+        self.drafter_precision = drafter_precision
         if planner is not None and cfg.is_moe:
             pp = getattr(planner, "placement", None)
             ours = self.placement.shard_of if self.placement else None
@@ -505,7 +560,8 @@ class BatchedEngine:
         self.planner = planner or BatchSpecPlanner(
             cfg, hw, affinity=affinity, window=window,
             config=PlannerConfig(policy=policy), placement=self.placement,
-            residency=residency, precision=precision)
+            residency=residency, precision=precision,
+            drafter_precision=drafter_precision)
         #: offload tier: live only when the placement actually has
         #: host-tier experts — an all-hbm residency must be invisible
         self.residency = residency
@@ -518,6 +574,19 @@ class BatchedEngine:
         #: hit-rate for link traffic.
         self.prefetch_min_count = 1
         self._offload = residency is not None and residency.has_host_tier
+        #: layered streaming (docs/offload.md): per-(layer, expert)
+        #: residency units turn the prefetch stage into a layer pipeline —
+        #: layer l's staged fetches hide behind the draft window PLUS the
+        #:  compute of layers < l in the current pass
+        self._layered = (self._offload
+                         and residency.granularity == "layer")
+        #: double-buffer the layered pipeline against the previous pass:
+        #: fetches issued at step start also overlap the tail of the
+        #: previous pass that runs after its LAST MoE layer consumed
+        #: weights (False pins the window to this step's own work — the
+        #: whole-expert engine's contract, which the degradation tests
+        #: compare against)
+        self.double_buffer = bool(double_buffer)
         #: engine clock: virtual seconds under clock="model" (cost-model
         #: priced steps + blocking prefills), wall seconds under "wall".
         #: Queue-delay and TTFT telemetry are measured on this clock.
@@ -542,6 +611,10 @@ class BatchedEngine:
         self._replica_routes = None
         self._shard_load = None   # EMA of measured per-shard activation
         self.replica_moves = 0    # route flips across the run
+        # the layered prefetcher probes NEXT pass's deep-layer routing
+        # from THIS pass's per-layer MoE inputs, so the decode step must
+        # return them (want_moe_h; a flat engine pays nothing for it)
+        want_h = self._layered and self.prefetch
         if self._ep and self.placement.has_replication:
             self._replica_routes = np.asarray(
                 self.placement.primary_shard_of, np.int32)
@@ -550,7 +623,7 @@ class BatchedEngine:
                 lambda p, c, t, m, sid: T.decode_step(
                     cfg, p, c, t, window=window, token_mask=m,
                     ep_shard_ids=sid, ep_n_shards=n_sh,
-                    moe_packed=self.packed))
+                    moe_packed=self.packed, want_moe_h=want_h))
         else:
             # unreplicated routing uses the static primary homes
             sid = (tuple(self.placement.primary_shard_of)
@@ -559,7 +632,8 @@ class BatchedEngine:
                 lambda p, c, t, m: T.decode_step(cfg, p, c, t, window=window,
                                                  token_mask=m,
                                                  ep_shard_ids=sid,
-                                                 moe_packed=self.packed))
+                                                 moe_packed=self.packed,
+                                                 want_moe_h=want_h))
         #: speculation-guided prefetch probe (docs/offload.md): embed the
         #: packed span tokens and apply every MoE layer's router to them —
         #: a one-einsum approximation of the verification pass's routing
@@ -567,21 +641,30 @@ class BatchedEngine:
         #: Top-k indices are what the cache needs; they are invariant to
         #: the router's sigmoid/softmax squashing, so raw logits suffice.
         self._probe = None
+        self._hprobe = None
         if self._offload and self.prefetch:
             self._probe = jax.jit(
                 lambda p, t, m: _router_probe(cfg, p, t, m))
-        #: fraction of a pass that runs before the FIRST MoE layer
-        #: consumes expert weights — prefetch DMA issued at step start
-        #: overlaps embed + leading dense layers + the first MoE layer's
-        #: own attention block (the +0.5: expert weights are read by the
-        #: FFN sub-layer, roughly half a layer after its attention
-        #: starts) in addition to the draft/sample window. Demand
-        #: misses, discovered at routing time inside the pass, get
+            if self._layered:
+                self._hprobe = jax.jit(
+                    lambda p, h, m: _hidden_router_probe(cfg, p, h, m))
+        #: the previous pass's per-layer MoE inputs + token mask — the
+        #: layered prefetcher's deep-layer probe basis (None before the
+        #: first decode pass: the embedding probe covers every layer)
+        self._last_moe_h = None
+        self._last_mask = None
+        #: per-MoE-layer hide-window fractions (cost_model.moe_hide_fracs;
+        #: fracs[0] is PR 7's pre-MoE fraction): the fraction of a pass
+        #: that runs before MoE layer l consumes expert weights — prefetch
+        #: DMA issued at step start overlaps embed + leading dense layers
+        #: + layer l's own attention block (the +0.5: expert weights are
+        #: read by the FFN sub-layer, roughly half a layer after its
+        #: attention starts) in addition to the draft/sample window.
+        #: Demand misses, discovered at routing time inside the pass, get
         #: neither credit.
-        kinds = cfg.layer_kinds()
-        moe_idx = [i for i, k in enumerate(kinds) if k in ("A", "X")]
-        self._pre_moe_frac = ((moe_idx[0] + 0.5) / len(kinds)
-                              if moe_idx else 0.0)
+        self._hide_fracs = cm.moe_hide_fracs(cfg)
+        self._pre_moe_frac = (self._hide_fracs[0]
+                              if self._hide_fracs else 0.0)
         self._last_t_iter = 0.0
         self._step_idx = 0
         self._req_counter = 0
@@ -924,47 +1007,105 @@ class BatchedEngine:
         # expert is discarded at pass end, so the cache trajectory
         # matches the prefetch-off run except for the conversions
         # (residency.fetch(stage=True) docstring)
-        prefetch_counts = None
-        fetch_hide = 0.0
+        prefetch_counts = None        # [S] whole-expert staged counts
+        staged_counts = None          # [S][L] per-layer staged counts
+        fetch_hide = 0.0              # scalar window, or [L] schedule
         if self._offload:
+            base_hide = 0.0
             if self.prefetch:
                 # the model-clock draft+sample window of this step — what
                 # a prefetched byte can hide behind (same expressions as
                 # stage 7's t_overhead, known here because K_i are fixed)
-                fetch_hide = max(
+                base_hide = max(
                     (cm.draft_time(self.hw, len(drafts[i]),
-                                   slots[i].drafter.active_params)
+                                   slots[i].drafter.active_params,
+                                   precision=self.drafter_precision)
                      + cm.sample_time(len(drafts[i]))
                      for i in decode_rows), default=0.0)
-                # ... plus the dense compute ahead of the first MoE
-                # layer: the DMA issued now keeps streaming while embed
-                # + leading layers run, and the weights are only needed
-                # when that layer routes (previous pass's priced t_iter
-                # is the compute estimate, the (first MoE layer + its
-                # attention block) / n_layers prefix is the fraction)
-                fetch_hide += self._pre_moe_frac * self._last_t_iter
-            if self._probe is not None:
-                pred = np.asarray(self._probe(self.params,
-                                              jnp.asarray(toks),
-                                              jnp.asarray(mask)))
-                # most-confident first: experts routed by more predicted
-                # (token, layer) slots stage before marginal ones (the
-                # ordering the min-count filter and hide window reward)
-                nominated = sorted(
-                    (int(e) for e in np.nonzero(pred)[0]
-                     if pred[e] >= self.prefetch_min_count),
-                    key=lambda e: (-int(pred[e]), e))
-                pf = self.residency.fetch(nominated, self._step_idx,
-                                          stage=True)
-                prefetch_counts = pf["per_shard"]
-                # honest hide: the draft+sample window only hides bytes
-                # that were actually prefetched during it — demand misses
-                # are discovered at pass time and can never hide, so cap
-                # the credit at the prefetched fetch time
-                fetch_hide = min(
-                    fetch_hide,
-                    max(prefetch_counts) * self.residency.expert_bytes
-                    / self.hw.host_bw)
+            if self._layered:
+                # layered streaming: layer l's staged fetches additionally
+                # hide behind the compute of layers < l in THIS pass (the
+                # planner's predicted base pass is the compute estimate —
+                # priced for the current batch composition, so membership
+                # churn reprices the window the same step it happens)...
+                if self.prefetch and self.double_buffer:
+                    # ...and, double-buffered, behind the tail of the
+                    # PREVIOUS pass that ran after its last MoE layer
+                    # consumed weights — the link was idle there
+                    base_hide += (1.0 - self._hide_fracs[-1]) \
+                        * self._last_t_iter
+                fetch_hide = cm.fetch_hide_schedule(self.cfg, base_hide,
+                                                    plan.t_base)
+                n_l = self.residency.n_unit_layers
+                staged_counts = [[0] * n_l
+                                 for _ in range(self.residency.n_shards)]
+                if self._probe is not None:
+                    pred = np.asarray(self._probe(self.params,
+                                                  jnp.asarray(toks),
+                                                  jnp.asarray(mask)))
+                    if self._last_moe_h is not None:
+                        # deep layers nominate from the PREVIOUS pass's
+                        # per-layer hidden states — layer l's router over
+                        # layer l's actual inputs, not the embedding
+                        # (layer 0 keeps the current spans' embed probe:
+                        # its routing input IS close to the embedding)
+                        hp = np.asarray(self._hprobe(self.params,
+                                                     self._last_moe_h,
+                                                     self._last_mask))
+                        pred = np.concatenate([pred[:1], hp[1:]], axis=0)
+                    # nominate layer-by-layer in pipeline order —
+                    # most-confident first within a layer, exactly the
+                    # order the link drains and the cumulative staged
+                    # cap credits (fetch_time_layered)
+                    for lyr in range(n_l):
+                        row = pred[lyr]
+                        nominated = sorted(
+                            ((lyr, int(e)) for e in np.nonzero(row)[0]
+                             if row[e] >= self.prefetch_min_count),
+                            key=lambda u: (-int(row[u[1]]), u[1]))
+                        pf = self.residency.fetch(nominated,
+                                                  self._step_idx,
+                                                  stage=True)
+                        for s_i, c in enumerate(pf["per_shard"]):
+                            staged_counts[s_i][lyr] = c
+            else:
+                fetch_hide = base_hide
+                if self.prefetch:
+                    # ... plus the dense compute ahead of the first MoE
+                    # layer: the DMA issued now keeps streaming while
+                    # embed + leading layers run, and the weights are
+                    # only needed when that layer routes (the planner's
+                    # predicted base pass for THIS batch composition is
+                    # the compute estimate — the previous pass's t_iter
+                    # overstates the window right after rows retire)
+                    fetch_hide += self._pre_moe_frac * plan.t_base
+                if self._probe is not None:
+                    pred = np.asarray(self._probe(self.params,
+                                                  jnp.asarray(toks),
+                                                  jnp.asarray(mask))
+                                      ).sum(axis=0)        # [L,E] -> [E]
+                    # most-confident first: experts routed by more
+                    # predicted (token, layer) slots stage before marginal
+                    # ones (the ordering the min-count filter and hide
+                    # window reward)
+                    nominated = sorted(
+                        (int(e) for e in np.nonzero(pred)[0]
+                         if pred[e] >= self.prefetch_min_count),
+                        key=lambda e: (-int(pred[e]), e))
+                    pf = self.residency.fetch(nominated, self._step_idx,
+                                              stage=True)
+                    prefetch_counts = pf["per_shard"]
+                    # honest hide: the draft+sample window only hides
+                    # bytes that were actually prefetched during it —
+                    # demand misses are discovered at pass time and can
+                    # never hide, so cap the credit at the prefetched
+                    # fetch time (the layered path applies the same cap
+                    # per layer inside fetch_time_layered, from
+                    # staged_counts)
+                    fetch_hide = min(
+                        fetch_hide,
+                        max(prefetch_counts) * self.residency.expert_bytes
+                        / self.hw.host_bw)
 
         # 3. shared verification pass
         t1 = time.perf_counter()
@@ -978,6 +1119,11 @@ class BatchedEngine:
                 jnp.asarray(mask))
         lo = np.asarray(lo, np.float32)            # [B, T_max, V]
         wall_verify = time.perf_counter() - t1
+        if self._hprobe is not None and "moe_h" in aux:
+            # keep this pass's per-layer MoE inputs (+ their mask) as the
+            # NEXT step's deep-layer nomination basis
+            self._last_moe_h = aux["moe_h"]        # [L, B, T, d] (device)
+            self._last_mask = jnp.asarray(mask)
 
         # 4. per-row rejection sampling (decode rows only — prefill chunks
         # commit all their real tokens, nothing to verify)
@@ -1031,21 +1177,58 @@ class BatchedEngine:
         per_shard_miss = None
         n_hits = n_miss = step_evictions = 0
         step_fetch_bytes = 0.0
+        hit_by_layer = miss_by_layer = ()
         if self._offload:
-            active_ids = []
-            if "experts_active" in aux:
-                act = np.asarray(aux["experts_active"])      # [L, E]
-                active_ids = np.nonzero(act.any(axis=0))[0]
             ev0 = self.residency.evictions
-            hit, missing = self.residency.access(active_ids, self._step_idx)
-            df = self.residency.fetch(missing, self._step_idx)
-            pc = prefetch_counts or [0] * self.residency.n_shards
-            per_shard_miss = [p + d for p, d in zip(pc, df["per_shard"])]
-            self.residency.note_step(active_ids, self._step_idx)
-            n_hits, n_miss = len(hit), len(missing)
+            if self._layered:
+                # per-(layer, expert) units: each MoE layer's activated
+                # slices classify and demand-fetch independently, in
+                # pipeline (layer) order — the measured [S][L] counts the
+                # layered pricing consumes
+                n_l = self.residency.n_unit_layers
+                units = []
+                if "experts_active" in aux:
+                    act = np.asarray(aux["experts_active"])  # [L, E]
+                    units = [(int(l), int(e))
+                             for l, e in zip(*np.nonzero(act))]
+                hit, missing = self.residency.access(units, self._step_idx)
+                sc = staged_counts or [[0] * n_l
+                                       for _ in range(
+                                           self.residency.n_shards)]
+                per_shard_miss = [list(r) for r in sc]
+                for lyr in range(n_l):
+                    df = self.residency.fetch(
+                        [u for u in missing if u[0] == lyr],
+                        self._step_idx)
+                    for s_i, c in enumerate(df["per_shard"]):
+                        per_shard_miss[s_i][lyr] += c
+                self.residency.note_step(units, self._step_idx)
+                n_hits, n_miss = len(hit), len(missing)
+                hit_by_layer = tuple(
+                    sum(1 for u in hit if u[0] == lyr)
+                    for lyr in range(n_l))
+                miss_by_layer = tuple(
+                    sum(1 for u in missing if u[0] == lyr)
+                    for lyr in range(n_l))
+                step_fetch_bytes = sum(
+                    sum(r) for r in per_shard_miss) * \
+                    self.residency.expert_bytes
+            else:
+                active_ids = []
+                if "experts_active" in aux:
+                    act = np.asarray(aux["experts_active"])      # [L, E]
+                    active_ids = np.nonzero(act.any(axis=0))[0]
+                hit, missing = self.residency.access(active_ids,
+                                                     self._step_idx)
+                df = self.residency.fetch(missing, self._step_idx)
+                pc = prefetch_counts or [0] * self.residency.n_shards
+                per_shard_miss = [p + d
+                                  for p, d in zip(pc, df["per_shard"])]
+                self.residency.note_step(active_ids, self._step_idx)
+                n_hits, n_miss = len(hit), len(missing)
+                step_fetch_bytes = sum(per_shard_miss) * \
+                    self.residency.expert_bytes
             step_evictions = self.residency.evictions - ev0
-            step_fetch_bytes = sum(per_shard_miss) * \
-                self.residency.expert_bytes
         tokens_per_row = [int(mask[i].sum()) for i in range(b)]
         cost = cm.batch_iteration_time(
             self.cfg, self.hw, tokens_per_row, list(lengths_before),
@@ -1059,7 +1242,8 @@ class BatchedEngine:
             per_shard_unique=(None if shard_mean is None
                               else list(shard_mean)),
             residency=self.residency, per_shard_miss=per_shard_miss,
-            fetch_hide=fetch_hide, precision=self.precision)
+            fetch_hide=fetch_hide, staged_per_shard=staged_counts,
+            precision=self.precision)
         self._last_t_iter = float(cost["t_iter"])
         t_verify_shared = (wall_verify if self.clock == "wall"
                            else cost["t_iter"])
@@ -1104,7 +1288,8 @@ class BatchedEngine:
             t_verify = self._attr_share(cost, i, wall_verify, occupancy)
             t_draft = (wall_draft[i] if self.clock == "wall"
                        else cm.draft_time(self.hw, k_eff,
-                                          s.drafter.active_params))
+                                          s.drafter.active_params,
+                                          precision=self.drafter_precision))
             t_sample = (wall_sample[i] if self.clock == "wall"
                         else cm.sample_time(k_eff))
             t_iter = t_draft + t_verify + t_sample
@@ -1189,6 +1374,15 @@ class BatchedEngine:
             evictions=step_evictions,
             fetch_bytes=step_fetch_bytes,
             t_fetch=cost.get("t_fetch_unhidden", 0.0),
+            fetch_hide=(min(float(fetch_hide[0]),
+                            max(r[0] for r in staged_counts)
+                            * self.residency.expert_bytes
+                            / self.hw.host_bw)
+                        if isinstance(fetch_hide, list)
+                        else float(fetch_hide)),
+            t_fetch_by_layer=tuple(cost.get("t_fetch_by_layer", ())),
+            prefetch_hits_by_layer=hit_by_layer,
+            prefetch_misses_by_layer=miss_by_layer,
             precision=cost.get("precision", ""),
             expert_bytes_saved=cost.get("expert_bytes_saved", 0.0))
         self.telemetry.steps.append(step_tel)

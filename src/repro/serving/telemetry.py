@@ -97,6 +97,14 @@ class StepTelemetry:
     evictions: int = 0         # host-tier residents evicted this step
     fetch_bytes: float = 0.0   # host->HBM bytes fetched (prefetch + demand)
     t_fetch: float = 0.0       # non-overlapped fetch seconds in t_step
+    # -- layered-streaming fields (defaults = whole-expert granularity) --- #
+    fetch_hide: float = 0.0    # the effective (staged-bytes-capped,
+                               # first-layer) hide window this step's
+                               # fetch pricing overlapped against
+    t_fetch_by_layer: tuple = ()       # per-MoE-layer link seconds for the
+                                       # gating shard's fetched slices
+    prefetch_hits_by_layer: tuple = ()    # per-layer resident activations
+    prefetch_misses_by_layer: tuple = ()  # per-layer demand-fetched slices
     # -- precision fields (defaults = bf16 everywhere) -------------------- #
     precision: str = ""        # cost-model Precision label ("" = legacy)
     expert_bytes_saved: float = 0.0  # expert-read bytes this pass avoided

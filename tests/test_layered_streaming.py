@@ -1,0 +1,596 @@
+"""Per-layer expert streaming (docs/offload.md, layered streaming):
+`granularity="layer"` residency units, the layer-pipelined fetch schedule
+(`moe_hide_fracs` / `fetch_hide_schedule` / `fetch_time_layered`), its
+float-exactness between `BatchCostOracle` and `batch_iteration_time`,
+bit-exact degradation to PR 7's whole-expert pricing, the engine's
+layer-by-layer prefetcher (single-MoE-layer bit-identity, all-hbm
+invisibility, layered-beats-whole-expert under a miss-forcing cap, and
+the fetch-hide repricing regression), and the drafter-precision pricing
+satellite (`draft_time(precision=)` threaded through both engines and
+the planner)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic in-repo fallback (requirements-dev.txt)
+    from tests._hypothesis_compat import given, settings, st
+
+import jax
+
+import repro.core.cost_model as cm
+import repro.models.transformer as T
+from repro.configs import get_config
+from repro.core import (BatchCostOracle, BatchSpecPlanner, CascadeController,
+                        ExpertPlacement, Hardware, Precision, ResidencyState,
+                        batch_iteration_time, draft_time, expert_hbm_bytes,
+                        fetch_hide_schedule, fetch_time_layered,
+                        moe_hide_fracs, moe_layer_count)
+from repro.core.cost_model import _fetch_time
+from repro.serving import (BatchedEngine, ContinuousBatchingScheduler,
+                           NGramDrafter, Request, ServingEngine)
+
+CFG = get_config("mixtral-8x7b").reduced()          # 4 experts, top-2
+EB = expert_hbm_bytes(CFG)
+EBL = expert_hbm_bytes(CFG, per_layer=True)
+N_L = moe_layer_count(CFG)
+HOST_HW = Hardware("offload-test", hbm_bw=1e9, peak_flops=1e10,
+                   ici_bw=5e8, host_bw=1e9)
+
+# the four planner-test hardware regimes, each given a host link (the
+# layered fetch pipeline needs host_bw to price at all)
+HWS = [
+    Hardware("tpu-like", hbm_bw=819e9, peak_flops=197e12, ici_bw=5e8,
+             host_bw=64e9),
+    Hardware("slowmem", hbm_bw=1e9, peak_flops=197e12, ici_bw=5e8,
+             host_bw=1e9),
+    Hardware("slowflops", hbm_bw=819e9, peak_flops=2e9, ici_bw=5e8,
+             host_bw=8e9),
+    Hardware("crossover", hbm_bw=1e9, peak_flops=6e9, ici_bw=5e8,
+             host_bw=1e9),
+]
+
+
+def _tiered(n_shards=1, host=None):
+    pl = ExpertPlacement.contiguous(CFG.num_experts, n_shards)
+    return pl.offload(host if host is not None
+                      else [CFG.num_experts - 1])
+
+
+# ===================================================================== #
+# Residency units: per-(layer, expert) slices
+# ===================================================================== #
+
+def test_per_layer_bytes_exact_multiple():
+    """The degradation keystone: whole-expert bytes are EXACTLY the MoE
+    layer count times the per-layer slice — bitwise, so layered pricing
+    can reproduce whole-expert figures bit for bit."""
+    for name in ("mixtral-8x7b", "deepseek_v2_236b", "kimi_k2_1t_a32b"):
+        cfg = get_config(name)
+        for c in (cfg, cfg.reduced() if name == "mixtral-8x7b" else cfg):
+            per = expert_hbm_bytes(c, per_layer=True)
+            assert per > 0
+            assert moe_layer_count(c) * per == expert_hbm_bytes(c)
+    # precision threads through both views identically
+    q = Precision.int8_experts()
+    assert moe_layer_count(CFG) * expert_hbm_bytes(
+        CFG, per_layer=True, precision=q) == expert_hbm_bytes(
+        CFG, precision=q)
+
+
+def test_layer_granularity_slots_and_capacity():
+    off = _tiered(1, host=[2, 3])
+    rs_e = ResidencyState(off, CFG)
+    rs_l = ResidencyState(off, CFG, granularity="layer")
+    assert rs_e.n_unit_layers == 1 and rs_l.n_unit_layers == N_L
+    assert rs_l.expert_bytes == EBL
+    # uncapped: every (layer, expert) slice fits; capacity in expert
+    # equivalents matches the whole-expert view bitwise
+    assert rs_l.slots == (N_L * 2,)
+    assert rs_l.capacity_experts == rs_e.capacity_experts == [4.0]
+    # a whole-expert cap maps to the same expert-equivalent capacity...
+    cap = 2 * EB + EB
+    e1 = ResidencyState(off, CFG, cap_bytes=cap)
+    l1 = ResidencyState(off, CFG, cap_bytes=cap, granularity="layer")
+    assert e1.slots == (1,) and l1.slots == (N_L,)
+    assert e1.capacity_experts == l1.capacity_experts == [3.0]
+    # ...while a fractional-expert cap only the finer units can use
+    lf = ResidencyState(off, CFG, cap_bytes=2 * EB + 1.5 * EB,
+                        granularity="layer")
+    assert lf.slots == (3,)
+    assert lf.capacity_experts == [2.0 + 3 / N_L]
+
+
+def test_granularity_validation_and_unit_keys():
+    off = _tiered(1, host=[2, 3])
+    with pytest.raises(ValueError):
+        ResidencyState(off, CFG, granularity="token")
+    with pytest.raises(ValueError):                 # layer units need cfg
+        ResidencyState(off, expert_bytes=EB, granularity="layer")
+    rs_l = ResidencyState(off, CFG, granularity="layer")
+    rs_e = ResidencyState(off, CFG)
+    # mixing unit vocabularies is a caller bug, not a miss
+    with pytest.raises(ValueError):
+        rs_l.access([2], step=0)
+    with pytest.raises(ValueError):
+        rs_e.access([(0, 2)], step=0)
+    with pytest.raises(ValueError):
+        rs_l.fetch([(0, 1, 2)], step=0)
+    # is_resident accepts both views in layer mode: an expert id is
+    # resident iff ALL its layer slices are
+    rs_l.fetch([(0, 2)], step=0)
+    assert rs_l.is_resident((0, 2)) and not rs_l.is_resident((1, 2))
+    assert not rs_l.is_resident(2)
+    rs_l.fetch([(1, 2)], step=0)
+    assert rs_l.is_resident(2)
+    assert rs_l.is_resident(0)                      # hbm tier always
+
+
+def test_layer_staging_semantics():
+    """Unit-granularity staging: the pass reads staged slices as hits,
+    note_step installs only the used slices and discards the rest —
+    exactly the whole-expert contract, per (layer, expert) unit."""
+    off = _tiered(1, host=[2, 3])
+    rs = ResidencyState(off, CFG, cap_bytes=2 * EB + EB,
+                        granularity="layer")     # N_L cache slots
+    pf = rs.fetch([(0, 2), (1, 2), (0, 3)], step=0, stage=True)
+    assert pf["fetched"] == 3 and pf["bytes"] == 3 * EBL
+    assert pf["per_shard"] == [3]
+    assert not rs.is_resident((0, 2))            # staged, not installed
+    hit, missing = rs.access([(0, 2), (1, 3)], step=0)
+    assert hit == [(0, 2)] and missing == [(1, 3)]
+    df = rs.fetch(missing, step=0)               # demand-install
+    assert df["fetched"] == 1 and rs.is_resident((1, 3))
+    rs.note_step([(0, 2), (1, 3)], step=0)
+    assert rs.is_resident((0, 2))                # used staged -> installed
+    assert not rs.is_resident((1, 2))            # unused staged discarded
+    assert not rs.is_resident((0, 3))
+    assert rs.resident_counts == (2.0 + 2 / N_L,)
+    assert rs.snapshot()["granularity"] == "layer"
+
+
+def test_expected_misses_layer_generalization():
+    off = _tiered(1, host=[2, 3])
+    rs_e = ResidencyState(off, CFG)
+    with pytest.raises(ValueError):              # no layer axis on experts
+        rs_e.expected_layer_misses([2.0])
+    # uncapped layer units: zero misses, same as the whole-expert tier
+    rs = ResidencyState(off, CFG, granularity="layer")
+    assert rs.expected_misses([3.0]) == [0.0]
+    # capped: uniform per-layer rows, and expected_misses is their sum
+    # (unit counts — times EBL they price the same bytes the expert
+    # curve prices times EB at matching resident fractions)
+    for slots_b in (0, 1, 2):
+        rs = ResidencyState(off, CFG, cap_bytes=2 * EB + slots_b * EB,
+                            granularity="layer")
+        rows = rs.expected_layer_misses([3.0])
+        assert len(rows) == 1 and len(rows[0]) == N_L
+        assert len(set(rows[0])) == 1            # layer-blind: uniform
+        assert rs.expected_misses([3.0]) == [sum(rows[0])]
+        # resident fraction slots/(n_l*H): slots_b whole experts out of 2
+        want = 3.0 * 0.5 * (1.0 - slots_b / 2.0)
+        assert sum(rows[0]) * EBL == pytest.approx(want * EB)
+
+
+# ===================================================================== #
+# Layered fetch pricing: schedule, pipeline, degradation
+# ===================================================================== #
+
+def test_hide_schedule_monotone():
+    """The layered hide window is nondecreasing in layer index — deeper
+    layers overlap strictly more of the pass (the ISSUE's monotonicity
+    pin)."""
+    fracs = moe_hide_fracs(CFG)
+    assert len(fracs) == N_L
+    assert all(0.0 < f < 1.0 for f in fracs)
+    assert all(b > a for a, b in zip(fracs, fracs[1:]))
+    sched = fetch_hide_schedule(CFG, 1e-3, 2e-3)
+    assert sched == [1e-3 + f * 2e-3 for f in fracs]
+    assert all(b > a for a, b in zip(sched, sched[1:]))
+    # zero basis: the schedule collapses to the flat base window
+    assert fetch_hide_schedule(CFG, 5e-4, 0.0) == [5e-4] * N_L
+
+
+def test_fetch_time_layered_expert_delegation():
+    """Under granularity="expert" the generalized pricer delegates
+    verbatim to `_fetch_time` — bit-identical tuple, no layer info — and
+    rejects a schedule (whole experts price one scalar window)."""
+    off = _tiered(1, host=[2, 3])
+    rs = ResidencyState(off, CFG, cap_bytes=2 * EB + EB)
+    for act, hide in (([3.0], 0.0), ([2.5], 1e-4), ([4.0], 1e-2)):
+        ref = _fetch_time(rs, HOST_HW, act, None, hide)
+        miss, t_fetch, t_unhid, info = fetch_time_layered(
+            rs, HOST_HW, act, None, hide)
+        assert (miss, t_fetch, t_unhid) == ref and info is None
+        # measured counts delegate identically
+        ref = _fetch_time(rs, HOST_HW, act, [2], hide)
+        got = fetch_time_layered(rs, HOST_HW, act, [2], hide)
+        assert got[:3] == ref and got[3] is None
+    with pytest.raises(ValueError):
+        fetch_time_layered(rs, HOST_HW, [3.0], None, [0.0, 0.0])
+    # layer units on a host-link-less Hardware is a loud error
+    rs_l = ResidencyState(off, CFG, granularity="layer")
+    no_link = Hardware("no-host", hbm_bw=1e9, peak_flops=1e10, ici_bw=5e8)
+    with pytest.raises(ValueError):
+        fetch_time_layered(rs_l, no_link, [3.0], None, 0.0)
+    with pytest.raises(ValueError):                # schedule length
+        fetch_time_layered(rs_l, HOST_HW, [3.0], None, [0.0] * (N_L + 1))
+
+
+def test_layered_pipeline_closed_form():
+    """Hand-checked small case of the pipeline law:
+    R_{s,l} = cum_misses * unit_bytes / host_bw,
+    t_unhidden = max(0, max_l (R_l - hide_l)), t_fetch = R_{L-1}."""
+    off = _tiered(1, host=[2, 3])
+    rs = ResidencyState(off, CFG, cap_bytes=2 * EB, granularity="layer")
+    bw = HOST_HW.host_bw
+    hide = [0.5 * EBL / bw, 2.5 * EBL / bw]
+    miss, t_fetch, t_unhid, info = fetch_time_layered(
+        rs, HOST_HW, [2.0], [[2, 1]], hide)
+    assert miss == [3.0]
+    assert t_fetch == 3 * EBL / bw
+    # layer 0 gates: R_0 - hide_0 = 1.5 u > R_1 - hide_1 = 0.5 u
+    assert t_unhid == 2 * EBL / bw - hide[0]
+    assert info["t_fetch_by_layer"] == [2 * EBL / bw, 1 * EBL / bw]
+    assert info["miss_by_layer"] == [[2.0, 1.0]]
+    # the staged-bytes cap credits only what was actually prefetched,
+    # cumulatively: 1 slice staged for layer 0, none deeper
+    _, _, capped, _ = fetch_time_layered(
+        rs, HOST_HW, [2.0], [[2, 1]], hide, staged_per_shard=[[1, 0]])
+    assert capped == 3 * EBL / bw - 1 * EBL / bw   # hide_eff = 1 slice
+    # deeper misses hide more: the same units shifted one layer down
+    # price no worse under the monotone schedule
+    _, _, deep, _ = fetch_time_layered(rs, HOST_HW, [2.0], [[0, 3]], hide)
+    _, _, shallow, _ = fetch_time_layered(rs, HOST_HW, [2.0], [[3, 0]],
+                                          hide)
+    assert deep <= shallow
+
+
+def test_single_moe_layer_pricing_bit_identical():
+    """With ONE MoE layer the pipeline has one rung: layer-granularity
+    pricing must be bit-identical to whole-expert pricing (unit bytes
+    coincide, the schedule is one window)."""
+    cfg1 = dataclasses.replace(CFG, num_layers=1)
+    assert moe_layer_count(cfg1) == 1
+    eb1 = expert_hbm_bytes(cfg1)
+    assert expert_hbm_bytes(cfg1, per_layer=True) == eb1
+    pl = ExpertPlacement.contiguous(cfg1.num_experts, 1)
+    off = pl.offload([2, 3])
+    for ns, hide in (([3, 2], 0.0), ([1, 4], 2e-4), ([2, 0], 1e-3)):
+        rs_e = ResidencyState(off, cfg1, cap_bytes=2 * eb1 + eb1)
+        rs_l = ResidencyState(off, cfg1, cap_bytes=2 * eb1 + eb1,
+                              granularity="layer")
+        ref = batch_iteration_time(cfg1, HOST_HW, ns, [64, 64],
+                                   placement=off, residency=rs_e,
+                                   fetch_hide=hide)
+        got = batch_iteration_time(cfg1, HOST_HW, ns, [64, 64],
+                                   placement=off, residency=rs_l,
+                                   fetch_hide=[hide])
+        for k in ("t_iter", "t_fetch", "t_fetch_unhidden", "fetch_bytes"):
+            assert ref[k] == got[k], k
+        assert ref["fetch_miss"] == got["fetch_miss"]
+
+
+def test_multi_layer_measured_counts_price_identically():
+    """Measured integer misses under a FLAT scalar window: m whole
+    experts == m slices in every MoE layer, priced bit-identically
+    ((n_l * m) * per_layer_bytes == m * whole_bytes exactly — both
+    integer-valued floats)."""
+    off = _tiered(1, host=[2, 3])
+    rs_e = ResidencyState(off, CFG, cap_bytes=2 * EB + EB)
+    rs_l = ResidencyState(off, CFG, cap_bytes=2 * EB + EB,
+                          granularity="layer")
+    for m, hide in ((1, 0.0), (2, 3e-4), (2, 1e-2)):
+        ref = batch_iteration_time(CFG, HOST_HW, [3, 2], [64, 64],
+                                   placement=off, residency=rs_e,
+                                   per_shard_miss=[m], fetch_hide=hide)
+        got = batch_iteration_time(CFG, HOST_HW, [3, 2], [64, 64],
+                                   placement=off, residency=rs_l,
+                                   per_shard_miss=[[m] * N_L],
+                                   fetch_hide=hide)
+        # unit counts differ (n_l*m slices vs m experts) but every priced
+        # figure coincides bitwise
+        for k in ("t_iter", "t_fetch", "t_fetch_unhidden", "fetch_bytes"):
+            assert ref[k] == got[k], k
+        assert got["t_fetch_by_layer"] == [m * EBL / HOST_HW.host_bw] * N_L
+
+
+@settings(max_examples=40, deadline=None)
+@given(ns=st.lists(st.integers(0, 9), min_size=1, max_size=4),
+       slots_b=st.integers(0, 2), base=st.floats(0.0, 1e-3),
+       basis=st.floats(0.0, 5e-3), shards=st.integers(1, 2),
+       hw_i=st.integers(0, 3))
+def test_oracle_matches_layered_pricing(ns, slots_b, base, basis, shards,
+                                        hw_i):
+    """The float-exactness contract at layer granularity, across the four
+    hardware regimes: `BatchCostOracle.t_batch` == `batch_iteration_time`
+    t_iter and `fetch_unhidden` == `t_fetch_unhidden` at every allocation
+    under a full per-layer hide schedule (shared `fetch_time_layered`)."""
+    hw = HWS[hw_i]
+    host = [2, 3] if shards == 1 else [3]
+    off = _tiered(shards, host=host)
+    rs = ResidencyState(off, CFG, granularity="layer",
+                        cap_bytes=[c * EB + (slots_b * EB
+                                             if s == shards - 1 else 0.0)
+                                   for s, c in
+                                   enumerate(off.resident_counts)])
+    sched = fetch_hide_schedule(CFG, base, basis)
+    ctx = [64] * len(ns)
+    orc = BatchCostOracle(CFG, hw, ctx, placement=off, residency=rs,
+                          fetch_hide=sched)
+    ref = batch_iteration_time(CFG, hw, ns, ctx, placement=off,
+                               residency=rs, fetch_hide=sched)
+    assert orc.t_batch(ns) == ref["t_iter"]
+    assert orc.fetch_unhidden(ns) == ref["t_fetch_unhidden"]
+    assert np.isfinite(ref["t_iter"])
+
+
+# ===================================================================== #
+# Engine: layered prefetch pipeline
+# ===================================================================== #
+
+def _run_sched(cfg, params, residency, *, n_req=4, max_batch=3,
+               prefetch=True, **engine_kw):
+    engine_kw.setdefault("max_len", 256)
+    eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                        max_batch=max_batch, temperature=0.0,
+                        clock="model", seed=0, residency=residency,
+                        prefetch=prefetch, **engine_kw)
+    sched = ContinuousBatchingScheduler(
+        eng, controller_factory=lambda: CascadeController())
+    reqs = [Request(request_id=f"r{i}", prompt=[3 + i, 4 + i, 5 + i] * 6,
+                    max_new=10 + 2 * i) for i in range(n_req)]
+    res = sched.run(reqs)
+    return res, eng
+
+
+LAYER_ONLY_FIELDS = ("t_fetch_by_layer", "prefetch_hits_by_layer",
+                     "prefetch_misses_by_layer")
+
+
+def _strip_layer_fields(step):
+    d = dataclasses.asdict(step)
+    for k in LAYER_ONLY_FIELDS:
+        d.pop(k)
+    return d
+
+
+@pytest.fixture(scope="module")
+def one_layer_moe():
+    cfg = dataclasses.replace(CFG, num_layers=1)
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("max_batch", [1, 4])
+def test_engine_single_moe_layer_granularity_bit_identity(one_layer_moe,
+                                                          max_batch):
+    """With one MoE layer the layered pipeline degenerates to the
+    whole-expert engine: token streams AND per-step telemetry must be
+    bit-identical (double_buffer=False pins the window to the step's own
+    work — the whole-expert contract; the per-layer tuple fields are the
+    only new telemetry)."""
+    cfg, params = one_layer_moe
+    off = ExpertPlacement.contiguous(cfg.num_experts, 1).offload([2, 3])
+    eb = expert_hbm_bytes(cfg)
+    cap = 2 * eb + eb
+    r_e, e_e = _run_sched(cfg, params,
+                          ResidencyState(off, cfg, cap_bytes=cap),
+                          max_batch=max_batch)
+    r_l, e_l = _run_sched(cfg, params,
+                          ResidencyState(off, cfg, cap_bytes=cap,
+                                         granularity="layer"),
+                          max_batch=max_batch, double_buffer=False)
+    assert [r.tokens for r in r_e] == [r.tokens for r in r_l]
+    assert len(e_e.telemetry.steps) == len(e_l.telemetry.steps)
+    for a, b in zip(e_e.telemetry.steps, e_l.telemetry.steps):
+        assert _strip_layer_fields(a) == _strip_layer_fields(b)
+    for ra, rb in zip(r_e, r_l):
+        assert ra.telemetry.iterations == rb.telemetry.iterations
+        assert ra.telemetry.ttft == rb.telemetry.ttft
+
+
+def test_engine_all_hbm_layer_residency_invisible(tiny_moe):
+    """A layer-granularity residency over an all-hbm placement must leave
+    the engine bit-identical to residency=None — every telemetry field,
+    the per-layer tuples at their empty defaults."""
+    cfg, params = tiny_moe
+    pl = ExpertPlacement.contiguous(cfg.num_experts, 1)
+    r_none, e_none = _run_sched(cfg, params, None)
+    r_l, e_l = _run_sched(cfg, params,
+                          ResidencyState(pl, cfg, granularity="layer"))
+    assert [r.tokens for r in r_none] == [r.tokens for r in r_l]
+    for a, b in zip(e_none.telemetry.steps, e_l.telemetry.steps):
+        assert a == b                            # full dataclass equality
+    assert all(s.t_fetch_by_layer == () for s in e_l.telemetry.steps)
+
+
+def test_engine_layered_telemetry_and_lossless(tiny_moe):
+    """Layer-granularity streaming under a miss-forcing cap: token
+    streams stay lossless vs the residency-free engine (the tier changes
+    pricing, never routing), and the per-layer telemetry is populated
+    consistently with the flat counters."""
+    cfg, params = tiny_moe
+    pl = ExpertPlacement.contiguous(cfg.num_experts, 1)
+    eb = expert_hbm_bytes(cfg)
+    off = pl.offload([cfg.num_experts - 2, cfg.num_experts - 1])
+    cap = (cfg.num_experts - 2) * eb + eb
+    r_ref, _ = _run_sched(cfg, params, None)
+    rs = ResidencyState(off, cfg, cap_bytes=cap, granularity="layer")
+    r_l, e_l = _run_sched(cfg, params, rs)
+    assert [r.tokens for r in r_ref] == [r.tokens for r in r_l]
+    n_l = moe_layer_count(cfg)
+    steps = [s for s in e_l.telemetry.steps if s.prefetch_hits_by_layer]
+    assert steps, "no offloaded decode step produced layer telemetry"
+    for s in steps:
+        assert len(s.prefetch_hits_by_layer) == n_l
+        assert sum(s.prefetch_hits_by_layer) == s.prefetch_hits
+        assert sum(s.prefetch_misses_by_layer) == s.prefetch_misses
+        if s.t_fetch_by_layer:
+            assert len(s.t_fetch_by_layer) == n_l
+            assert all(t >= 0.0 for t in s.t_fetch_by_layer)
+    assert e_l.telemetry.fetch_bytes > 0
+    snap = rs.snapshot()
+    assert snap["bytes_fetched"] == pytest.approx(e_l.telemetry.fetch_bytes)
+
+
+def test_engine_layered_beats_whole_expert_under_miss_cap(tiny_moe):
+    """The tentpole's payoff, in-repo scale: with EVERY expert demoted to
+    the host tier under a miss-forcing cap, layer-granularity streaming
+    hides strictly more fetch than whole-expert streaming (deep layers'
+    slices overlap the shallow layers' compute) — higher tokens/s, lower
+    unhidden fetch — at B in {2, 4} (the --overlap-sweep gate's regime,
+    reduced)."""
+    cfg, params = tiny_moe
+    eb = expert_hbm_bytes(cfg)
+    pl = ExpertPlacement.contiguous(cfg.num_experts, 1)
+    tiered = pl.offload(list(range(cfg.num_experts)))
+    cap = 2 * eb
+    rng = np.random.default_rng(11)
+
+    def reqs(n, max_new=16):
+        out = []
+        for i in range(n):
+            period = 4 + 2 * (i % 3)
+            pat = [int(x) for x in rng.integers(3, cfg.vocab_size, period)]
+            out.append(Request(request_id=f"r{i}",
+                               prompt=pat * (32 // period),
+                               max_new=max_new))
+        return out
+
+    def run(b, gran):
+        rs = ResidencyState(tiered, cfg, cap_bytes=cap, granularity=gran)
+        eng = BatchedEngine(cfg, params, lambda: NGramDrafter(),
+                            max_batch=b, max_len=256, temperature=0.0,
+                            clock="model", seed=0, residency=rs,
+                            prefetch=True, hw=HOST_HW, chunk=16)
+        sched = ContinuousBatchingScheduler(
+            eng, controller_factory=lambda: CascadeController())
+        sched.run(reqs(2 * b))
+        unhid = sum(s.t_fetch for s in eng.telemetry.steps)
+        return sched.tokens_per_second(), unhid
+
+    for b in (2, 4):
+        tps_e, unhid_e = run(b, "expert")
+        tps_l, unhid_l = run(b, "layer")
+        assert unhid_l < unhid_e, \
+            f"B={b}: layered unhidden fetch {unhid_l} !< {unhid_e}"
+        assert tps_l > tps_e, \
+            f"B={b}: layered {tps_l} tok/s !> whole-expert {tps_e}"
+
+
+def test_engine_fetch_hide_repriced_after_churn(tiny_moe):
+    """Regression (this PR's bugfix): the whole-expert engine's prefetch
+    window used the PREVIOUS pass's t_iter for the pre-MoE compute
+    credit, overstating the hide budget right after membership churn
+    (retirements shrink the batch, the stale bigger pass inflates the
+    window). The window must reprice from THIS pass's predicted base:
+    fetch_hide <= t_overhead + pre_moe_frac * t_base_predicted, always."""
+    cfg, params = tiny_moe
+    eb = expert_hbm_bytes(cfg)
+    pl = ExpertPlacement.contiguous(cfg.num_experts, 1)
+    off = pl.offload([cfg.num_experts - 2, cfg.num_experts - 1])
+    rs = ResidencyState(off, cfg, cap_bytes=2 * eb + eb)
+    _, eng = _run_sched(cfg, params, rs, n_req=6, max_batch=4,
+                        hw=HOST_HW)
+    pre = moe_hide_fracs(cfg)[0]
+    steps = [s for s in eng.telemetry.steps if s.planned]
+    assert steps
+    for s in steps:
+        assert s.fetch_hide <= \
+            s.t_overhead + pre * s.t_base_predicted + 1e-12
+    # teeth: some step follows a strictly longer pass (the stale-window
+    # bug inflates exactly these) AND prices its window uncapped — under
+    # the old code that step's window would have exceeded the bound
+    churned = [i for i in range(1, len(steps))
+               if steps[i - 1].t_total > steps[i].t_base_predicted + 1e-9
+               and abs(steps[i].fetch_hide - steps[i].t_overhead
+                       - pre * steps[i].t_base_predicted) < 1e-15]
+    assert churned, "no uncapped post-churn step — the regression " \
+                    "assertion never engaged"
+
+
+# ===================================================================== #
+# Satellite: drafter precision pricing
+# ===================================================================== #
+
+INT8_DRAFTER = Precision(dense=1, expert=2, kv=2, label="int8-drafter")
+
+
+def test_draft_time_precision_pricing():
+    hw = HOST_HW
+    ap = 10_000_000
+    # None is bit-identical to Precision.DEFAULT
+    assert draft_time(hw, 4, ap) == \
+        draft_time(hw, 4, ap, precision=Precision.DEFAULT)
+    # int8 dense class halves the model term exactly
+    base = draft_time(hw, 4, ap)
+    q = draft_time(hw, 4, ap, precision=INT8_DRAFTER)
+    overhead = draft_time(hw, 4, 0)
+    assert q - overhead == (base - overhead) / 2
+    # an explicit wb byte width overrides the precision class
+    assert draft_time(hw, 4, ap, wb=2, precision=INT8_DRAFTER) == base
+    # zero-weight drafters (n-gram) are precision-blind
+    assert draft_time(hw, 4, 0, precision=INT8_DRAFTER) == \
+        draft_time(hw, 4, 0)
+    assert draft_time(hw, 0, ap, precision=INT8_DRAFTER) == 0.0
+
+
+def _weighted_ngram():
+    d = NGramDrafter()
+    d.active_params = 10_000_000       # price the table like real weights
+    return d
+
+
+def test_serving_engine_drafter_precision(tiny_moe):
+    cfg, params = tiny_moe
+    bf = ServingEngine(cfg, params, _weighted_ngram(), max_len=128,
+                       clock="model", seed=0)
+    q = ServingEngine(cfg, params, _weighted_ngram(), max_len=128,
+                      clock="model", seed=0,
+                      drafter_precision=INT8_DRAFTER)
+    assert bf._draft_time(4) == draft_time(bf.hw, 4, 10_000_000)
+    assert q._draft_time(4) == \
+        draft_time(q.hw, 4, 10_000_000, precision=INT8_DRAFTER)
+    assert q._draft_time(4) < bf._draft_time(4)
+
+
+def test_batched_engine_drafter_precision_threading(tiny_moe):
+    """An int8 drafter shrinks every step's draft overhead on the model
+    clock; token streams are untouched (precision prices, never routes).
+    The engine rejects a planner priced at a different drafter
+    precision — a planner predicting bf16 draft windows against an int8
+    engine would misprice every fetch deadline."""
+    cfg, params = tiny_moe
+
+    def run(precision):
+        eng = BatchedEngine(cfg, params, _weighted_ngram, max_batch=2,
+                            max_len=256, temperature=0.0, clock="model",
+                            seed=0, drafter_precision=precision)
+        sched = ContinuousBatchingScheduler(
+            eng, controller_factory=lambda: CascadeController())
+        reqs = [Request(request_id=f"r{i}",
+                        prompt=[3 + i, 4 + i, 5 + i] * 6, max_new=12)
+                for i in range(2)]
+        res = sched.run(reqs)
+        return res, eng
+
+    r_bf, e_bf = run(None)
+    r_q, e_q = run(INT8_DRAFTER)
+    assert [r.tokens for r in r_bf] == [r.tokens for r in r_q]
+    ov_bf = sum(s.t_overhead for s in e_bf.telemetry.steps
+                if s.k_granted > 0)
+    ov_q = sum(s.t_overhead for s in e_q.telemetry.steps
+               if s.k_granted > 0)
+    assert 0.0 < ov_q < ov_bf
+    # planner/engine precision consistency is enforced loudly
+    mismatched = BatchSpecPlanner(cfg, drafter_precision=None)
+    with pytest.raises(ValueError):
+        BatchedEngine(cfg, params, _weighted_ngram, max_batch=1,
+                      max_len=128, drafter_precision=INT8_DRAFTER,
+                      planner=mismatched)
+    matched = BatchSpecPlanner(cfg, drafter_precision=INT8_DRAFTER)
+    BatchedEngine(cfg, params, _weighted_ngram, max_batch=1, max_len=128,
+                  drafter_precision=INT8_DRAFTER, planner=matched)
